@@ -1,0 +1,42 @@
+"""Kernel microbenchmarks: jit wall-time of the jnp reference paths on CPU
+(the Pallas kernels target TPU; interpret-mode timing is not meaningful) +
+validation status from the interpret-mode allclose suite."""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+
+
+def bench(fn, *args, iters=5):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        fn(*args).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+        (out[0] if isinstance(out, tuple) else out).block_until_ready()
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def main():
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (1, 512, 8, 64), jnp.float32)
+    k = jax.random.normal(key, (1, 512, 2, 64), jnp.float32)
+    v = jax.random.normal(key, (1, 512, 2, 64), jnp.float32)
+    fa = jax.jit(lambda a, b, c: ref.flash_attention_ref(a, b, c))
+    print(f"flash_attention_ref_512,{bench(fa, q, k, v):.0f},us_per_call")
+
+    qd = jax.random.normal(key, (4, 8, 64), jnp.float32)
+    da = jax.jit(lambda a, b, c: ref.decode_attention_ref(a, b, c, 512))
+    print(f"decode_attention_ref_512,{bench(da, qd, k, v):.0f},us_per_call")
+
+    x = jax.random.normal(key, (256, 64), jnp.float32)
+    w = jax.random.normal(key, (64, 2048), jnp.float32)
+    lbl = jnp.zeros((256,), jnp.int32)
+    fx = jax.jit(lambda a, b: ref.fused_xent_ref(a, b, lbl))
+    print(f"fused_xent_ref_256x2048,{bench(fx, x, w):.0f},us_per_call")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,81 @@
+"""Paper Fig. 10/12: maximum trainable sequence length (memory model).
+
+24 GB (4090) and 80 GB (A800) device budgets at micro-batch 1.  RoundPipe
+keeps ONE stage's weights + one layer's working activations on device
+(stage-boundary activations live in host DRAM); Megatron-PP binds L/N layers'
+weights + their full recompute boundaries; ZeRO-Infinity offloads model
+states but not activations.  Binary search over s against each system's
+device-bytes model.  Paper claims: 4.7–7.3x longer than the next-best
+baseline on 4090.
+"""
+from repro.models.config import get_config
+from repro.models.transformer import param_count
+
+from .workloads import PAPER_WORKLOADS, activation_bytes_per_layer
+
+N_GPUS = 8
+
+
+def _working_act(cfg, s):
+    # live working set of ONE layer during recompute/backward (fp16)
+    return activation_bytes_per_layer(cfg, 1, s)
+
+
+def device_bytes(system: str, arch: str, s: int) -> float:
+    cfg = get_config(arch)
+    n = param_count(cfg)
+    layer_w = 2 * n / cfg.n_layers
+    boundaries = cfg.n_layers * 2 * s * cfg.d_model  # fp16 per-layer inputs
+    work = _working_act(cfg, s)
+    if system == "roundpipe":
+        # <=1 stage weights (+prefetch buffer) + 1 layer working set;
+        # boundaries -> host
+        return 3 * layer_w + work
+    if system == "megatron_pp":
+        per_rank_layers = cfg.n_layers / N_GPUS + 1  # +head on last rank
+        states = 16 * n / cfg.n_layers * per_rank_layers  # mixed-precision Adam
+        return states + per_rank_layers * 2 * s * cfg.d_model + work
+    if system == "zero_infinity":
+        # states offloaded; boundaries + working set stay on device
+        return boundaries + work
+    if system == "megatron_tp":
+        states = 16 * n / N_GPUS
+        return states + boundaries / N_GPUS + work / N_GPUS
+    raise ValueError(system)
+
+
+def max_seq(system: str, arch: str, budget: float) -> int:
+    lo, hi = 256, 1 << 24
+    while lo < hi:
+        mid = (lo + hi + 1) // 2
+        if device_bytes(system, arch, mid) <= budget:
+            lo = mid
+        else:
+            hi = mid - 1
+    return lo
+
+
+def rows(budget=24e9):
+    out = []
+    for arch in PAPER_WORKLOADS:
+        r = {"arch": arch}
+        for sys_ in ("roundpipe", "megatron_pp", "zero_infinity", "megatron_tp"):
+            r[sys_] = max_seq(sys_, arch, budget)
+        best_base = max(r["megatron_pp"], r["zero_infinity"])
+        r["gain_vs_next_best_nontp"] = r["roundpipe"] / max(best_base, 1)
+        out.append(r)
+    return out
+
+
+def main():
+    for name, budget in (("4090_24GB", 24e9), ("a800_80GB", 80e9)):
+        print(f"# {name}")
+        print("arch,roundpipe,megatron_pp,zero_infinity,megatron_tp,gain")
+        for r in rows(budget):
+            print(f"{r['arch']},{r['roundpipe']},{r['megatron_pp']},"
+                  f"{r['zero_infinity']},{r['megatron_tp']},"
+                  f"{r['gain_vs_next_best_nontp']:.1f}x")
+
+
+if __name__ == "__main__":
+    main()

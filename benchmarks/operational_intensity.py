@@ -1,0 +1,55 @@
+"""Paper Fig. 17 + Appendix C: operational intensity of layer forwarding vs
+batch size, against device ridge points.
+
+OI_fwd (Eq. 4) and OI_moe (Eq. 5); ridge = peak_FLOPs / interconnect_BW.
+Paper claims: dense models cross the 4090 ridge at B=8; MoE below B=100.
+"""
+from repro.models.config import get_config
+
+from .workloads import PAPER_WORKLOADS, SEQ
+
+RIDGE = {"4090_pcie4": 330e12 / 32e9, "5090_pcie5": 419e12 / 64e9,
+         "a100_nvlink3": 312e12 / 300e9, "h100_nvlink4": 989.5e12 / 450e9,
+         "v5e_ici": 197e12 / 50e9}
+
+
+def oi(arch: str, b: int, s: int = 2048) -> float:
+    cfg = get_config(arch)
+    h, a = cfg.d_model, max(cfg.n_heads, 1)
+    k = max(cfg.n_kv_heads, 1)
+    m = cfg.moe_d_ff or cfg.d_ff
+    e_act, e = max(cfg.experts_per_token, 1), max(cfg.n_experts, 1)
+    flops = (4 * s * b * h * h + 4 * s * b * h * h * k / a
+             + 4 * s * b * b * h + 6 * s * b * h * m * e_act)
+    bytes_up = (4 * h * h + 4 * h * h * k / a + 6 * h * m * e
+                + 2 * b * s * h)
+    return flops / bytes_up
+
+
+def crossing_batch(arch: str, ridge: float, s: int = 2048) -> int:
+    for b in range(1, 4097):
+        if oi(arch, b, s) >= ridge:
+            return b
+    return -1
+
+
+def rows():
+    out = []
+    for arch in PAPER_WORKLOADS:
+        r = dict(arch=arch, oi_b8=oi(arch, 8), oi_b80=oi(arch, 80),
+                 cross_4090=crossing_batch(arch, RIDGE["4090_pcie4"]),
+                 cross_v5e=crossing_batch(arch, RIDGE["v5e_ici"]))
+        out.append(r)
+    return out
+
+
+def main():
+    print("ridges:", {k: round(v, 1) for k, v in RIDGE.items()})
+    print("arch,OI@B8,OI@B80,batch_crossing_4090,batch_crossing_v5e")
+    for r in rows():
+        print(f"{r['arch']},{r['oi_b8']:.0f},{r['oi_b80']:.0f},"
+              f"{r['cross_4090']},{r['cross_v5e']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,35 @@
+"""Paper Fig. 2: recompute vs reload time per transformer layer (Appendix B.2).
+
+Recompute = layer forward FLOPs / 330 TFLOP/s (4090); reload = activation
+bytes (Eq. 1) / 32 GB/s PCIe4.  Paper claim: recompute is 2.37x–5.75x faster.
+Also reported for the TPU v5e target (197 TFLOP/s bf16, HBM-resident, so the
+"reload" there is host DMA at ~50 GB/s PCIe... same conclusion).
+"""
+from repro.models.config import get_config
+
+from .workloads import (MICRO_B, PAPER_WORKLOADS, SEQ,
+                        activation_bytes_per_layer, recompute_time,
+                        reload_time)
+
+
+def rows():
+    out = []
+    for arch in PAPER_WORKLOADS:
+        cfg = get_config(arch)
+        rc = recompute_time(cfg, MICRO_B, SEQ)
+        rl = reload_time(cfg, MICRO_B, SEQ)
+        out.append(dict(arch=arch, recompute_ms=rc * 1e3, reload_ms=rl * 1e3,
+                        speedup=rl / rc,
+                        act_mib=activation_bytes_per_layer(cfg, MICRO_B, SEQ) / 2**20))
+    return out
+
+
+def main():
+    print("arch,recompute_ms,reload_ms,reload_over_recompute,act_MiB_per_layer")
+    for r in rows():
+        print(f"{r['arch']},{r['recompute_ms']:.3f},{r['reload_ms']:.3f},"
+              f"{r['speedup']:.2f},{r['act_mib']:.1f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,107 @@
+"""§Roofline report: per (arch × shape) three-term roofline + dry-run evidence.
+
+Merges the analytic cost model (benchmarks/cost_model.py) with the compiled
+dry-run artifacts (results/dryrun/*.json): XLA memory analysis (CPU-backend
+upper bound), parsed collective schedule, compile times.  Emits the markdown
+table injected into EXPERIMENTS.md and a CSV.
+
+Run: PYTHONPATH=src python -m benchmarks.roofline
+"""
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+from repro.configs import ASSIGNED
+from repro.configs.shapes import SHAPES, cell_status
+
+from .cost_model import CHIPS_PER_POD, CellCost, serve_cost, train_cost
+
+RESULTS = Path(__file__).resolve().parent.parent / "results" / "dryrun"
+
+
+def cell_cost(arch: str, shape: str) -> CellCost:
+    return train_cost(arch, shape) if SHAPES[shape].step == "train" \
+        else serve_cost(arch, shape)
+
+
+def dryrun_record(arch: str, shape: str, mesh: str = "16x16",
+                  strategy: str = "gspmd") -> dict | None:
+    f = RESULTS / f"{arch}__{shape}__{mesh}__{strategy}.json"
+    if not f.exists():
+        return None
+    return json.loads(f.read_text())
+
+
+def full_table() -> list[dict]:
+    rows = []
+    for arch in ASSIGNED:
+        for shape in SHAPES:
+            runs, reason = cell_status(arch, shape)
+            if not runs:
+                rows.append({"arch": arch, "shape": shape, "status": "skipped",
+                             "reason": reason})
+                continue
+            c = cell_cost(arch, shape)
+            rec = dryrun_record(arch, shape) or {}
+            coll = rec.get("collectives", {})
+            rows.append({
+                "arch": arch, "shape": shape, "status": "ok",
+                "step": c.step,
+                "compute_s": c.compute_s, "memory_s": c.memory_s,
+                "collective_s": c.collective_s,
+                "dominant": c.dominant,
+                "model_flops": c.model_flops,
+                "hlo_flops": c.hlo_flops,
+                "useful_ratio": c.useful_ratio,
+                "roofline_fraction": c.roofline_fraction,
+                "step_time_s": c.step_time_s,
+                "xla_peak_gib": rec.get("memory", {}).get("peak_bytes", 0) / 2**30,
+                "analytic_dev_gib": sum(c.device_bytes.values()) / 2**30,
+                "hlo_collective_kinds": sum(1 for v in coll.values()
+                                            if v.get("count")),
+                "compile_s": rec.get("compile_s"),
+                "note": c.note,
+            })
+    return rows
+
+
+def markdown(rows) -> str:
+    out = ["| arch | shape | compute s | memory s | collective s | dominant "
+           "| MODEL_FLOPs | useful | roofline frac | dev GiB (analytic) "
+           "| XLA-CPU peak GiB | note |",
+           "|---|---|---|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r["status"] == "skipped":
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | skipped |"
+                       f" — | — | — | — | — | {r['reason']} |")
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3e} "
+            f"| {r['memory_s']:.3e} | {r['collective_s']:.3e} "
+            f"| **{r['dominant']}** | {r['model_flops']:.2e} "
+            f"| {r['useful_ratio']:.2f} | {r['roofline_fraction']:.1%} "
+            f"| {r['analytic_dev_gib']:.1f} | {r['xla_peak_gib']:.1f} "
+            f"| {r['note']} |")
+    return "\n".join(out)
+
+
+def main():
+    rows = full_table()
+    print(markdown(rows))
+    csv = Path(__file__).resolve().parent.parent / "results" / "roofline.csv"
+    csv.parent.mkdir(exist_ok=True)
+    keys = ["arch", "shape", "status", "step", "compute_s", "memory_s",
+            "collective_s", "dominant", "model_flops", "hlo_flops",
+            "useful_ratio", "roofline_fraction", "xla_peak_gib",
+            "analytic_dev_gib", "compile_s"]
+    with csv.open("w") as f:
+        f.write(",".join(keys) + "\n")
+        for r in rows:
+            f.write(",".join(str(r.get(k, "")) for k in keys) + "\n")
+    print(f"\nwrote {csv}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

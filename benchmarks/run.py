@@ -1,0 +1,48 @@
+"""Benchmark aggregator: one section per paper table/figure.
+
+``PYTHONPATH=src python -m benchmarks.run`` prints every table as CSV.
+"""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+
+def _section(title, fn):
+    print(f"\n## {title}")
+    t0 = time.perf_counter()
+    try:
+        fn()
+        print(f"# ok in {time.perf_counter() - t0:.1f}s")
+        return True
+    except Exception:
+        traceback.print_exc()
+        print(f"# FAILED {title}")
+        return False
+
+
+def main() -> None:
+    from . import (bubble_ratio, consistency_overhead, kernel_bench,
+                   max_seqlen, operational_intensity, partition_bench,
+                   recompute_vs_reload, roofline, throughput_model)
+
+    ok = True
+    ok &= _section("Fig. 2 — recompute vs reload", recompute_vs_reload.main)
+    ok &= _section("Fig. 15 / Fig. 3 — pipeline bubble ratios", bubble_ratio.main)
+    ok &= _section("Fig. 9/11/13 — throughput model + scaling",
+                   throughput_model.main)
+    ok &= _section("Fig. 10/12 — max trainable sequence length", max_seqlen.main)
+    ok &= _section("Fig. 16 — consistency protocol overhead",
+                   consistency_overhead.main)
+    ok &= _section("Fig. 17 — operational intensity", operational_intensity.main)
+    ok &= _section("§5.6.1 — partitioner wall-clock", partition_bench.main)
+    ok &= _section("kernels — reference-path microbench", kernel_bench.main)
+    ok &= _section("§Roofline — per-cell table (from dry-run artifacts)",
+                   roofline.main)
+    if not ok:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

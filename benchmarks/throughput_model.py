@@ -1,0 +1,86 @@
+"""Paper Fig. 9/11/13: end-to-end training throughput model (tokens/s).
+
+throughput = useful_FLOPs/s / FLOPs_per_token where useful fraction =
+(1 - bubble) x overlap-efficiency; baselines charged their measured
+communication shares (ZeRO ~70% comm on PCIe per Mobius/paper §2.2).
+Absolute numbers are model-based (no GPUs here); RELATIVE speedups are the
+reproduction target: paper claims RoundPipe = 1.48-2.16x the best baseline
+on 4090s (1.7-32B), and near-linear 1-8 GPU scaling (Fig. 13).
+"""
+from repro.models.config import get_config
+from repro.models.transformer import active_param_count
+
+from .bubble_ratio import bubble_ratios
+from .workloads import GPU_FP16_FLOPS, PAPER_WORKLOADS
+
+MFU = 0.45          # attainable fraction of peak on 4090-class parts
+N_GPUS = 8
+
+
+def flops_per_token(arch):
+    cfg = get_config(arch)
+    return 8 * active_param_count(cfg)      # 6N + full recompute ~ 8N
+
+
+def tokens_per_s(arch, bubble, comm_share=0.0, n_gpus=N_GPUS):
+    eff = (1 - bubble) * (1 - comm_share)
+    return n_gpus * GPU_FP16_FLOPS * MFU * eff / flops_per_token(arch)
+
+
+def rows():
+    out = []
+    for arch in PAPER_WORKLOADS:
+        br = bubble_ratios(arch)
+        rp = tokens_per_s(arch, br["roundpipe_async"])
+        rp_sync = tokens_per_s(arch, br["roundpipe_sync"])
+        base = {
+            "zero_infinity": tokens_per_s(arch, 0.0, comm_share=0.70),
+            "megatron_pp": tokens_per_s(arch, br["1f1b"], comm_share=0.05),
+            "looped_bfs(mobius)": tokens_per_s(arch, br["looped_bfs"],
+                                               comm_share=0.05),
+        }
+        best = max(base.values())
+        out.append(dict(arch=arch, roundpipe=rp, roundpipe_sync=rp_sync,
+                        **base, speedup=rp / best,
+                        speedup_sync=rp_sync / best))
+    return out
+
+
+def scaling(arch="qwen3-1.7b"):
+    cfg = get_config(arch)
+    out = []
+    for n in (1, 2, 4, 8):
+        from repro.core.partition import auto_partition
+        from repro.core.schedule import roundpipe_schedule
+        from repro.core.simulator import steady_state_bubble
+        from .workloads import layer_costs
+        layers = layer_costs(arch)
+        if n == 1:
+            bub = 0.0
+        else:
+            p = auto_partition(layers, n_devices=n, n_microbatches=2 * n)
+            fc, bc = p.stage_costs(layers)
+            bub = steady_state_bubble(
+                roundpipe_schedule(n, 2 * n, fc, bc, round_size=n,
+                                   iterations=3), 1)
+        out.append((n, tokens_per_s(arch, bub, n_gpus=n)))
+    return out
+
+
+def main():
+    print("arch,roundpipe,roundpipe_sync,zero_infinity,megatron_pp,"
+          "looped_bfs(mobius),speedup_vs_best,sync_speedup")
+    for r in rows():
+        print(f"{r['arch']},{r['roundpipe']:.0f},{r['roundpipe_sync']:.0f},"
+              f"{r['zero_infinity']:.0f},{r['megatron_pp']:.0f},"
+              f"{r['looped_bfs(mobius)']:.0f},{r['speedup']:.2f}x,"
+              f"{r['speedup_sync']:.2f}x")
+    print("# strong scaling (qwen3-1.7b): gpus,tokens/s,efficiency")
+    sc = scaling()
+    t1 = sc[0][1]
+    for n, t in sc:
+        print(f"{n},{t:.0f},{t / (t1 * n):.1%}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,86 @@
+"""Shared analytic workload model for the paper-figure benchmarks.
+
+Per-layer forward/backward costs for the paper's five workloads (Table 3 /
+§5.1: micro-batch 4 × 2048 tokens), derived from the config FLOP counts the
+same way the paper collects per-layer timings.  Costs are in arbitrary
+time-units (FLOPs / device-peak); only ratios matter for bubble analysis.
+"""
+from __future__ import annotations
+
+from repro.core.partition import LayerCost
+from repro.models.config import ModelConfig, get_config
+
+PAPER_WORKLOADS = ["qwen3-1.7b", "llama-3.1-8b", "gpt-oss-20b", "qwen3-32b",
+                   "qwen3-235b"]
+MICRO_B, SEQ = 4, 2048
+
+# 8x RTX 4090 server (paper Table 2)
+GPU_FP16_FLOPS = 330e12
+PCIE_BW = 32e9
+HOST_BW = 25e9          # DDR4 host memcpy
+
+
+def layer_flops(cfg: ModelConfig, b: int = MICRO_B, s: int = SEQ) -> float:
+    """Forward FLOPs of one transformer layer (paper Eq. 2)."""
+    h, m, a, k = cfg.d_model, cfg.moe_d_ff or cfg.d_ff, cfg.n_heads, cfg.n_kv_heads
+    e_act = max(cfg.experts_per_token, 1)
+    if cfg.attn_kind == "none":               # rwkv-style: projections only
+        return 4 * s * b * h * h + 6 * s * b * h * cfg.d_ff
+    dh = cfg.d_head
+    qo = 4 * s * b * h * a * dh               # Q + out projections
+    kv = 4 * s * b * h * k * dh               # K + V projections (GQA)
+    scores = 4 * s * s * b * a * dh           # paper Eq. 2 attention term
+    ffn = 6 * s * b * h * m * e_act
+    shared = 6 * s * b * h * cfg.moe_d_ff * cfg.n_shared_experts if cfg.is_moe else 0
+    return qo + kv + scores + ffn + shared
+
+
+def head_flops(cfg: ModelConfig, b: int = MICRO_B, s: int = SEQ) -> float:
+    return 2 * s * b * cfg.d_model * cfg.vocab_size
+
+
+def layer_costs(arch: str, *, grad_ratio: float = 2.0,
+                b: int = MICRO_B, s: int = SEQ,
+                head_chunks: int = 1) -> list[LayerCost]:
+    """LayerCost list (body layers + LM-head pseudo-layer, paper Fig. 1).
+
+    ``head_chunks > 1`` splits the LM head into vocab-chunk pseudo-layers —
+    legal under the vocab-chunked cross-entropy and a beyond-paper lever for
+    the partitioner when the head dominates t_max (EXPERIMENTS.md §Perf)."""
+    cfg = get_config(arch)
+    unit = GPU_FP16_FLOPS
+    lf = layer_flops(cfg, b, s) / unit
+    hf = head_flops(cfg, b, s) / unit
+    layer_bytes = _layer_param_bytes(cfg)
+    costs = [LayerCost(lf, grad_ratio * lf, weight_bytes=layer_bytes,
+                       act_bytes=2 * s * b * cfg.d_model)
+             for _ in range(cfg.n_layers)]
+    for _ in range(head_chunks):
+        costs.append(LayerCost(hf / head_chunks, grad_ratio * hf / head_chunks,
+                               weight_bytes=2 * cfg.vocab_size * cfg.d_model
+                               // head_chunks,
+                               act_bytes=2 * s * b * cfg.d_model))
+    return costs
+
+
+def _layer_param_bytes(cfg: ModelConfig) -> int:
+    from repro.models.transformer import param_count
+    n = param_count(cfg)
+    emb = cfg.vocab_size * cfg.d_model * (1 if cfg.tie_embeddings else 2)
+    return int(2 * (n - emb) / cfg.n_layers)
+
+
+def activation_bytes_per_layer(cfg: ModelConfig, b: int, s: int) -> float:
+    """Paper Eq. 1: (12 + 4k/a)·s·b·h + 6·s·b·m·E_act bytes (fp16)."""
+    h, a, k = cfg.d_model, max(cfg.n_heads, 1), max(cfg.n_kv_heads, 1)
+    m = cfg.moe_d_ff or cfg.d_ff
+    e_act = max(cfg.experts_per_token, 1)
+    return (12 + 4 * k / a) * s * b * h + 6 * s * b * m * e_act
+
+
+def recompute_time(cfg: ModelConfig, b: int, s: int) -> float:
+    return layer_flops(cfg, b, s) / GPU_FP16_FLOPS
+
+
+def reload_time(cfg: ModelConfig, b: int, s: int) -> float:
+    return activation_bytes_per_layer(cfg, b, s) / PCIE_BW

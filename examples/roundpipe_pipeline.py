@@ -1,0 +1,54 @@
+"""The paper's technique end-to-end: train with the RoundPipe computation-
+dispatch pipeline (strategy=roundpipe) on a 2x4 virtual mesh and verify the
+loss matches the plain GSPMD strategy step-for-step.
+
+Run: python examples/roundpipe_pipeline.py      (sets its own XLA_FLAGS)
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import sys
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro.configs import smoke_config
+from repro.core.dispatch import build_roundpipe_train_step, init_roundpipe_state
+from repro.launch.mesh import make_mesh
+from repro.launch.steps import (StepConfig, build_train_step, init_train_state)
+from repro.models.config import get_config
+from repro.optim import OptConfig
+
+cfg = smoke_config(get_config("starcoder2-7b"))
+cfg = dataclasses.replace(cfg, n_layers=8, name=cfg.name + "-pipe")
+mesh = make_mesh((2, 4), ("data", "model"))
+B, S = 8, 32
+step_cfg = StepConfig(strategy="roundpipe", async_optimizer=False,
+                      kv_chunk=S, xent_chunk=S, opt=OptConfig(lr=1e-3))
+ref_cfg = dataclasses.replace(step_cfg, strategy="gspmd", grad_accum=1,
+                              sequence_parallel=False)
+
+rng = np.random.default_rng(0)
+batches = [{"tokens": rng.integers(0, cfg.vocab_size, (B, S)).astype(np.int32),
+            "labels": rng.integers(0, cfg.vocab_size, (B, S)).astype(np.int32)}
+           for _ in range(5)]
+
+with mesh:
+    rp_step, rp_sh, _ = build_roundpipe_train_step(cfg, mesh, step_cfg, B, S)
+    rp_state = jax.device_put(
+        init_roundpipe_state(jax.random.PRNGKey(0), cfg, step_cfg), rp_sh)
+    ref_step, ref_sh, _ = build_train_step(cfg, mesh, ref_cfg, B, S)
+    ref_state = jax.device_put(
+        init_train_state(jax.random.PRNGKey(0), cfg, ref_cfg), ref_sh)
+
+    print("step | roundpipe loss | gspmd loss")
+    for i, b in enumerate(batches):
+        rp_state, rp_m = rp_step(rp_state, b)
+        ref_state, ref_m = ref_step(ref_state, b)
+        rl, gl = float(rp_m["loss"]), float(ref_m["loss"])
+        print(f"{i:4d} | {rl:14.4f} | {gl:10.4f}")
+        assert abs(rl - gl) / gl < 0.05, "pipeline diverged from reference"
+print("RoundPipe pipeline tracks the reference ✓")

@@ -1,0 +1,2 @@
+from .store import (CheckpointManager, load_checkpoint, save_checkpoint,  # noqa: F401
+                    latest_step)

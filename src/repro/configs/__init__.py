@@ -1,0 +1,31 @@
+"""Architecture registry: importing this package registers every config.
+
+Assigned pool (10) + the paper's own five workloads (Table 3).
+"""
+from . import (  # noqa: F401
+    deepseek_v2_236b,
+    gemma_2b,
+    gpt_oss_20b,
+    hubert_xlarge,
+    hymba_1_5b,
+    internvl2_76b,
+    llama_3_1_8b,
+    mixtral_8x7b,
+    nemotron_4_340b,
+    qwen3_1_7b,
+    qwen3_32b,
+    qwen3_235b,
+    rwkv6_7b,
+    stablelm_12b,
+    starcoder2_7b,
+)
+from .shapes import SHAPES, ShapeSpec, cells, input_specs, smoke_config  # noqa: F401
+
+ASSIGNED = [
+    "hymba-1.5b", "nemotron-4-340b", "stablelm-12b", "starcoder2-7b",
+    "gemma-2b", "hubert-xlarge", "rwkv6-7b", "deepseek-v2-236b",
+    "mixtral-8x7b", "internvl2-76b",
+]
+PAPER_MODELS = [
+    "qwen3-1.7b", "llama-3.1-8b", "gpt-oss-20b", "qwen3-32b", "qwen3-235b",
+]

@@ -1,0 +1,128 @@
+"""Assigned input shapes, per-arch applicability, abstract input specs and
+reduced smoke configs.
+
+Shapes (LM-family, seq_len × global_batch):
+  train_4k     4,096 × 256   -> lowers train_step
+  prefill_32k  32,768 × 32   -> lowers prefill (serve)
+  decode_32k   32,768 × 128  -> lowers serve_step (1 token, KV cache of 32k)
+  long_500k    524,288 × 1   -> lowers serve_step; SUB-QUADRATIC ARCHS ONLY
+
+Skips (recorded per cell, also in DESIGN.md §Arch-applicability):
+  * encoder-only (hubert): no decode paths at all
+  * pure full-attention archs: long_500k skipped
+  * SWA (mixtral, hymba) and SSM/RWKV archs: long_500k runs (bounded state)
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig, get_config
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    step: str          # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524_288, 1, "decode"),
+}
+
+
+def _sub_quadratic(cfg: ModelConfig) -> bool:
+    return cfg.attn_kind == "none" or cfg.sliding_window is not None
+
+
+def cell_status(arch: str, shape: str) -> tuple[bool, str]:
+    """(runs?, reason).  The 40-cell matrix with documented skips."""
+    cfg = get_config(arch)
+    spec = SHAPES[shape]
+    if cfg.encoder_only and spec.step == "decode":
+        return False, "encoder-only arch has no decode step"
+    if shape == "long_500k" and not _sub_quadratic(cfg):
+        return False, "pure full-attention arch; 500k decode needs sub-quadratic attention"
+    return True, ""
+
+
+def cells(arch: str) -> list[str]:
+    return [s for s in SHAPES if cell_status(arch, s)[0]]
+
+
+def all_cells() -> list[tuple[str, str]]:
+    from . import ASSIGNED
+    return [(a, s) for a in ASSIGNED for s in SHAPES]
+
+
+# ---------------------------------------------------------------------------
+# Abstract inputs (ShapeDtypeStruct — shardable, no allocation)
+# ---------------------------------------------------------------------------
+
+def input_specs(arch: str, shape: str, *, dtype=jnp.bfloat16):
+    """Stand-ins for every model input of the given cell.
+
+    train:   {tokens|embeds, labels}
+    prefill: {tokens|embeds}
+    decode:  {tokens (B,) int32}  — the cache spec comes from ``cache_specs``.
+    """
+    cfg = get_config(arch)
+    spec = SHAPES[shape]
+    b, s = spec.global_batch, spec.seq_len
+    tok = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    emb = jax.ShapeDtypeStruct((b, s, cfg.d_model), dtype)
+    if spec.step == "train":
+        inp = {"embeds": emb} if cfg.frontend else {"tokens": tok}
+        inp["labels"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        return inp
+    if spec.step == "prefill":
+        return {"embeds": emb} if cfg.frontend else {"tokens": tok}
+    # decode: one new token per sequence (VLM decodes text tokens)
+    return {"tokens": jax.ShapeDtypeStruct((b,), jnp.int32)}
+
+
+def cache_specs(arch: str, shape: str, *, dtype=jnp.bfloat16):
+    from repro.models.transformer import init_cache
+    cfg = get_config(arch)
+    spec = SHAPES[shape]
+    return init_cache(cfg, spec.global_batch, spec.seq_len, dtype)
+
+
+# ---------------------------------------------------------------------------
+# Reduced smoke configs (same family, laptop-runnable)
+# ---------------------------------------------------------------------------
+
+def smoke_config(cfg_or_name) -> ModelConfig:
+    cfg = cfg_or_name if isinstance(cfg_or_name, ModelConfig) else get_config(cfg_or_name)
+    kv = 0 if cfg.n_kv_heads == 0 else (1 if cfg.n_kv_heads == 1 else 2)
+    heads = 0 if cfg.n_heads == 0 else 4
+    return dataclasses.replace(
+        cfg,
+        name=cfg.name + "-smoke",
+        n_layers=2,
+        d_model=64,
+        n_heads=heads,
+        n_kv_heads=kv if not cfg.encoder_only else heads,
+        d_head=16 if cfg.n_heads else cfg.d_head,
+        d_ff=96 if not cfg.is_moe else 48,
+        vocab_size=128,
+        kv_lora_rank=16 if cfg.kv_lora_rank else 0,
+        qk_rope_dim=8 if cfg.attn_kind == "mla" else cfg.qk_rope_dim,
+        v_head_dim=16 if cfg.attn_kind == "mla" else None,
+        n_experts=4 if cfg.is_moe else 0,
+        experts_per_token=2 if cfg.is_moe else 0,
+        n_shared_experts=min(cfg.n_shared_experts, 1),
+        moe_d_ff=48 if cfg.is_moe else 0,
+        # no-drop capacity at smoke scale (cf >= E/k) so teacher-forced forward
+        # == incremental decode exactly; capacity dropping is tested separately
+        capacity_factor=4.0 if cfg.is_moe else cfg.capacity_factor,
+        sliding_window=8 if cfg.sliding_window else None,
+        ssm_state=8 if cfg.ssm_state else 0,
+    )

@@ -1,0 +1,195 @@
+"""Fine-grained event-based parameter-consistency protocol (paper §4.3).
+
+Staleness-1 semantics: GPU iteration ``T+1`` reads the weights produced after
+iteration ``T-1`` while the optimizer applies iteration-``T`` gradients in the
+background.  Three representations exist (transient device copy, master copy,
+optimizer copy); correctness reduces to five ordering constraints which we
+enforce with *per-layer* point-to-point events instead of a global barrier
+(paper Fig. 8b), so shallow layers of iteration T+1 start while deep layers of
+iteration T are still synchronising.
+
+Constraint map (paper §4.3.1), all per layer ``l``:
+  (1) P-copy of W^{(T)} into master waits until the device finished UPLOADING
+      master for iteration T+1          -> event ("up", l, T+1)
+  (2) device upload for iteration T+2 waits until P-copy of W^{(T)} done
+                                        -> event ("pcp", l, T)
+  (3) G-copy of G_T waits until the device finished DOWNLOADING G_T
+                                        -> event ("down", l, T)
+  (4) device download of G_{T+1} waits until G-copy of G_T done
+                                        -> event ("gcp", l, T)
+  (5) copies sit between optimizer steps -> optimizer worker is sequential.
+
+This module is runtime-agnostic: the ``AsyncTrainer`` below drives any pair of
+(device_fn, optimizer_fn) callables — numpy for the tests, jitted JAX for
+``examples/async_optimizer.py``.  Inside a single XLA program ordering is by
+data dependence instead (see ``repro.optim.async_wrapper``), which is the
+jit-compatible realization of the same staleness-1 semantics.
+"""
+from __future__ import annotations
+
+import threading
+from collections import defaultdict
+from typing import Callable, Sequence
+
+
+class EventBook:
+    """Lazily-created threading events keyed by (kind, layer, iteration)."""
+
+    def __init__(self) -> None:
+        self._lock = threading.Lock()
+        self._events: dict[tuple, threading.Event] = {}
+
+    def _get(self, key: tuple) -> threading.Event:
+        with self._lock:
+            ev = self._events.get(key)
+            if ev is None:
+                ev = self._events[key] = threading.Event()
+            return ev
+
+    def set(self, kind: str, layer: int, iteration: int) -> None:
+        self._get((kind, layer, iteration)).set()
+
+    def wait(self, kind: str, layer: int, iteration: int, timeout: float = 30.0) -> None:
+        if iteration < 0:
+            return  # constraints referencing pre-history are vacuous
+        if not self._get((kind, layer, iteration)).wait(timeout):
+            raise TimeoutError(f"event ({kind}, layer={layer}, it={iteration}) never fired")
+
+    def is_set(self, kind: str, layer: int, iteration: int) -> bool:
+        return iteration < 0 or self._get((kind, layer, iteration)).is_set()
+
+
+class ConsistencyProtocol:
+    """The five ordering constraints as wait/signal pairs around the copies."""
+
+    def __init__(self, n_layers: int) -> None:
+        self.n_layers = n_layers
+        self.book = EventBook()
+
+    # ---- device-worker side ------------------------------------------------
+    def before_param_upload(self, layer: int, iteration: int) -> None:
+        # (2): upload for iteration T reads weights W^{(T-2)}; wait P-copy T-2.
+        self.book.wait("pcp", layer, iteration - 2)
+
+    def after_param_upload(self, layer: int, iteration: int) -> None:
+        self.book.set("up", layer, iteration)
+
+    def before_grad_download(self, layer: int, iteration: int) -> None:
+        # (4): writing G_T into the master buffer waits G-copy of G_{T-1}.
+        self.book.wait("gcp", layer, iteration - 1)
+
+    def after_grad_download(self, layer: int, iteration: int) -> None:
+        self.book.set("down", layer, iteration)
+
+    # ---- optimizer-worker side ----------------------------------------------
+    def before_g_copy(self, layer: int, iteration: int) -> None:
+        # (3): G-copy of G_T waits until the device wrote G_T.
+        self.book.wait("down", layer, iteration)
+
+    def after_g_copy(self, layer: int, iteration: int) -> None:
+        self.book.set("gcp", layer, iteration)
+
+    def before_p_copy(self, layer: int, iteration: int) -> None:
+        # (1): P-copy of W^{(T)} waits until the device read master for T+1.
+        self.book.wait("up", layer, iteration + 1)
+
+    def after_p_copy(self, layer: int, iteration: int) -> None:
+        self.book.set("pcp", layer, iteration)
+
+
+class AsyncTrainer:
+    """Reference driver wiring a device worker and an optimizer worker.
+
+    ``device_fn(master_weights, iteration) -> grads`` runs the pipelined
+    forward+backward of one iteration given the (stale) master weights.
+    ``optimizer_fn(opt_weights, grads, iteration) -> new_opt_weights`` is the
+    sequential optimizer step on the full-precision copy.
+
+    Weights/grads are dicts ``layer -> object``; copies are per-layer so the
+    protocol's fine granularity is real, not cosmetic.
+    """
+
+    def __init__(self, n_layers: int, device_fn: Callable, optimizer_fn: Callable,
+                 init_weights: Sequence):
+        self.protocol = ConsistencyProtocol(n_layers)
+        self.n_layers = n_layers
+        self.device_fn = device_fn
+        self.optimizer_fn = optimizer_fn
+        self.master = list(init_weights)          # low-precision master copy
+        self.opt_copy = list(init_weights)        # full-precision optimizer copy
+        self.grad_master = [None] * n_layers      # gradient staging buffer
+        self.errors: list[BaseException] = []
+
+    # -- device side ----------------------------------------------------------
+    def _device_iteration(self, iteration: int):
+        p = self.protocol
+        weights = []
+        for l in range(self.n_layers):
+            p.before_param_upload(l, iteration)
+            weights.append(self.master[l])        # transient device copy
+            p.after_param_upload(l, iteration)
+        grads = self.device_fn(weights, iteration)
+        for l in range(self.n_layers):
+            p.before_grad_download(l, iteration)
+            self.grad_master[l] = grads[l]
+            p.after_grad_download(l, iteration)
+
+    # -- optimizer side ---------------------------------------------------------
+    def _optimizer_iteration(self, iteration: int):
+        p = self.protocol
+        staged = [None] * self.n_layers
+        for l in range(self.n_layers):
+            p.before_g_copy(l, iteration)
+            staged[l] = self.grad_master[l]       # G copy
+            p.after_g_copy(l, iteration)
+        self.opt_copy = list(self.optimizer_fn(self.opt_copy, staged, iteration))
+        for l in range(self.n_layers):
+            p.before_p_copy(l, iteration)
+            self.master[l] = self.opt_copy[l]     # P copy (fp32 -> bf16 cast site)
+            p.after_p_copy(l, iteration)
+
+    def _guard(self, fn, *args):
+        try:
+            fn(*args)
+        except BaseException as e:  # surface worker failures to the caller
+            self.errors.append(e)
+
+    def train(self, n_iterations: int, timeout: float = 60.0) -> list:
+        """Run device and optimizer workers concurrently with staleness-1."""
+        def device_loop():
+            for t in range(n_iterations):
+                self._device_iteration(t)
+            # retire: no iteration n_iterations will read the master copy, so
+            # release the optimizer's pending constraint-(1) waits.
+            for l in range(self.n_layers):
+                self.protocol.after_param_upload(l, n_iterations)
+
+        def optimizer_loop():
+            for t in range(n_iterations):
+                self._optimizer_iteration(t)
+
+        threads = [threading.Thread(target=self._guard, args=(device_loop,)),
+                   threading.Thread(target=self._guard, args=(optimizer_loop,))]
+        for th in threads:
+            th.start()
+        for th in threads:
+            th.join(timeout)
+            if th.is_alive():
+                raise TimeoutError("async trainer worker hung")
+        if self.errors:
+            raise self.errors[0]
+        return self.master
+
+
+def reference_staleness1(n_layers: int, device_fn: Callable, optimizer_fn: Callable,
+                         init_weights: Sequence, n_iterations: int) -> list:
+    """Serial oracle with identical staleness-1 semantics: iteration T reads
+    the weights produced after iteration T-2's gradients were applied."""
+    versions = [list(init_weights)]  # versions[v] = weights after applying grads 0..v-1
+    opt = list(init_weights)
+    for t in range(n_iterations):
+        read = versions[max(0, t - 1)]
+        grads = device_fn(list(read), t)
+        opt = list(optimizer_fn(opt, grads, t))
+        versions.append(list(opt))
+    return versions[-1]

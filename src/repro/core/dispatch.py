@@ -1,0 +1,311 @@
+"""RoundPipe computation-dispatch runtime for TPU (shard_map over `model`).
+
+TPU-native realization of the paper's §3 paradigm (see DESIGN.md §2).  The
+weight pool is layer-sharded across the N workers of the `model` axis (the
+"host DRAM" analogue: the pool is the union of HBMs).  Stages are NOT bound
+to workers: each tick, layer-blocks travel one hop around a **weight ring**
+(`ppermute`) — the computation-dispatch "upload" — while each worker's
+resident micro-batches stay put.  Worker w starts block 0 at tick w, so at
+any tick the N workers execute N *different* stages round-robin, exactly the
+paper's slot→worker map `(g0 + i) mod N`; a stage visits every worker once
+per round.
+
+Structural properties inherited from the paper:
+  * zero weight binding — any worker executes any stage when its weights
+    arrive (§3.1);
+  * fill/drain bubble = N-1 ticks each ≙ N(N-1)·t total (§3.3 formula);
+  * the fused first-backward stage: the LAST forward tick computes
+    layer+head+loss AND their backward in one slot, so those layers'
+    forward is never paid twice (§3.2 asymmetric splitting's B1 term);
+  * full activation recomputation: backward ticks re-run the stage forward
+    from the stashed boundary (§2.1.1), boundaries live in the per-worker
+    stash (the "host-offloaded checkpoint" analogue — optionally offloaded
+    for real on TPU).
+
+Beyond-paper: on the backward ring the traveling gradient buffer accumulates
+each worker's contribution hop by hop, so by the time a block's weights exit
+the ring its gradient is already globally reduced — the pipeline's weight
+traffic doubles as the gradient ring-all-reduce, removing the separate
+reduce phase entirely (recorded in EXPERIMENTS.md §Perf).
+
+v1 constraints: n_layers % N == 0, block = 1 layer, one resident micro-batch
+group per worker per call (round chaining across optimizer steps is the
+async extension — see core/schedule.py for the schedule-level version).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.models.layers import apply_norm
+from repro.optim import OptConfig, apply_updates, init_opt_state, opt_state_specs
+from repro.launch.mesh import axis_size, data_axes
+
+AXIS = "model"
+
+
+def _shift_perm(n):
+    return [(i, (i + 1) % n) for i in range(n - 1)]  # open ring: N-1 drops off
+
+
+def _ring_add(tree_a, tree_b):
+    return jax.tree.map(jnp.add, tree_a, tree_b)
+
+
+def _zeros_like_block(layers_local):
+    return jax.tree.map(lambda a: jnp.zeros(a.shape[1:], a.dtype), layers_local)
+
+
+def roundpipe_forward_backward(params, batch, cfg: ModelConfig, *,
+                               n_workers: int, xent_chunk: int = 256,
+                               kv_chunk: int = 1024,
+                               ring_grad_dtype=jnp.float32):
+    """Inside-shard_map body: returns (grads pytree, loss_sum, token_count).
+
+    ``params['layers']`` leaves arrive LOCAL: (L/N, ...) — this worker's pool
+    shard.  ``batch`` arrives with the micro-batch group resident on this
+    worker.  Everything else (embed/head/norm) is replicated over `model`.
+    """
+    n = n_workers
+    l_total = cfg.n_layers
+    per = l_total // n
+    w = jax.lax.axis_index(AXIS)
+
+    pool = params["layers"]
+    head_w = T.lm_head_weights(params, cfg)
+    tokens = batch.get("tokens")
+    x_emb = T.embed_inputs(params, batch, cfg)
+    bshape = x_emb.shape                                   # (B_w, S, D)
+
+    # ---- tick-state ---------------------------------------------------------
+    fwd_ring = _zeros_like_block(pool)
+    bwd_ring = _zeros_like_block(pool)
+    # traveling gradients: fp32 for exactness; bf16 (§Perf C1b) halves the
+    # dominant dispatch traffic (hop count <= N keeps the error ~2^-8)
+    grad_buf = jax.tree.map(lambda a: a.astype(ring_grad_dtype),
+                            _zeros_like_block(pool))
+    pool_grads = jax.tree.map(lambda a: jnp.zeros(a.shape, jnp.float32), pool)
+    stash = jnp.zeros((l_total,) + bshape, x_emb.dtype)
+    act = jnp.zeros(bshape, x_emb.dtype)
+    grad_carry = jnp.zeros(bshape, jnp.float32)
+    loss_sum = jnp.float32(0.0)
+    tok_count = jnp.int32(0)
+    embed_grad = jnp.zeros(params["embed"].shape, jnp.float32)
+    head_grad = jnp.zeros(head_w.shape, jnp.float32)
+    fnorm_grad = jax.tree.map(lambda a: jnp.zeros(a.shape, jnp.float32),
+                              params["final_norm"])
+
+    def plain_fwd(block, x):
+        return T.layer_forward(x, block, cfg, kv_chunk=kv_chunk)
+
+    def fused_loss(block, fnorm, hw, x):
+        h = T.layer_forward(x, block, cfg, kv_chunk=kv_chunk)
+        h = apply_norm(h, fnorm, cfg.norm_kind, cfg.norm_eps)
+        tot, cnt = T.chunked_softmax_xent(h, hw, batch["labels"],
+                                          chunk=xent_chunk)
+        return tot, cnt
+
+    def bwd_block(block, x, g):
+        y, vjp = jax.vjp(lambda b, xx: plain_fwd(b, xx), block, x)
+        gb, gx = vjp(g.astype(y.dtype))
+        return gb, gx
+
+    n_ticks = 2 * l_total + n - 1
+    for t in range(n_ticks):
+        # ---- weight-ring plumbing (static per tick) --------------------------
+        if t < l_total:                                    # forward injection
+            owner, idx = divmod(t, per)
+            inj = jax.tree.map(lambda a: a[idx], pool)
+            inj = jax.lax.ppermute(inj, AXIS, [(owner, 0)])
+            shifted = jax.lax.ppermute(fwd_ring, AXIS, _shift_perm(n))
+            fwd_ring = _ring_add(shifted, inj)
+        elif t <= l_total + n - 2:                         # drain: staggered
+            fwd_ring = jax.lax.ppermute(fwd_ring, AXIS, _shift_perm(n))
+        b_inject_bwd = 2 * l_total - 2 - t                 # backward injection
+        if 0 <= b_inject_bwd <= l_total - 2:
+            owner, idx = divmod(b_inject_bwd, per)
+            inj = jax.tree.map(lambda a: a[idx], pool)
+            inj = jax.lax.ppermute(inj, AXIS, [(owner, 0)])
+            shifted = jax.lax.ppermute(bwd_ring, AXIS, _shift_perm(n))
+            bwd_ring = _ring_add(shifted, inj)
+            gshift = jax.lax.ppermute(grad_buf, AXIS, _shift_perm(n))
+            grad_buf = gshift
+        elif b_inject_bwd < 0 and t <= 2 * l_total + n - 3:
+            bwd_ring = jax.lax.ppermute(bwd_ring, AXIS, _shift_perm(n))
+            grad_buf = jax.lax.ppermute(grad_buf, AXIS, _shift_perm(n))
+
+        # ---- forward compute: worker w holds block (t - w) --------------------
+        fb = t - w                                          # traced
+        plain_on = jnp.logical_and(fb >= 0, fb < l_total - 1)
+        fused_on = fb == l_total - 1
+
+        def do_plain(op):
+            act_, stash_ = op
+            x_in = jnp.where(fb == 0, x_emb, act_)
+            stash_ = jax.lax.dynamic_update_slice(
+                stash_, x_in[None], (fb,) + (0,) * len(bshape))
+            return plain_fwd(fwd_ring, x_in), stash_
+
+        act, stash = jax.lax.cond(plain_on, do_plain,
+                                  lambda op: op, (act, stash))
+
+        def do_fused(op):
+            act_, ls, tc, gcarry, hg, fg, pg_last = op
+            x_in = jnp.where(fb == 0, x_emb, act_)          # L==1 edge
+            (tot, cnt), vjp = jax.vjp(
+                lambda blk, fn, hw, xx: fused_loss(blk, fn, hw, xx),
+                fwd_ring, params["final_norm"], head_w, x_in)
+            gb, gf, gh, gx = vjp((jnp.float32(1.0), jnp.int32(0)))
+            pg_last = jax.tree.map(lambda a, d: a + d.astype(jnp.float32),
+                                   pg_last, gb)
+            return (act_, ls + tot, tc + cnt, gx.astype(jnp.float32),
+                    hg + gh.astype(jnp.float32),
+                    jax.tree.map(lambda a, d: a + d.astype(jnp.float32), fg, gf),
+                    pg_last)
+
+        last_grads0 = jax.tree.map(lambda a: jnp.zeros(a.shape[1:], jnp.float32),
+                                   pool)
+        if t == 0:
+            last_layer_grads = last_grads0
+        (act, loss_sum, tok_count, grad_carry, head_grad, fnorm_grad,
+         last_layer_grads) = jax.lax.cond(
+            fused_on, do_fused, lambda op: op,
+            (act, loss_sum, tok_count, grad_carry, head_grad, fnorm_grad,
+             last_layer_grads))
+
+        # ---- backward compute: worker w does block 2L-2-(t-w) ------------------
+        bb = 2 * l_total - 2 - fb
+        bwd_on = jnp.logical_and(fb >= l_total, fb <= 2 * l_total - 2)
+
+        def do_bwd(op):
+            gcarry, gbuf, eg = op
+            x_in = jax.lax.dynamic_index_in_dim(stash, bb, 0, keepdims=False)
+            gb, gx = bwd_block(bwd_ring, x_in, gcarry)
+            gbuf = jax.tree.map(lambda a, d: a + d.astype(a.dtype), gbuf, gb)
+
+            def embed_bwd(e):
+                if tokens is None:
+                    return e                                  # frontend stub
+                return e.at[tokens].add(gx.astype(jnp.float32))
+
+            eg = jax.lax.cond(bb == 0, embed_bwd, lambda e: e, eg)
+            return gx.astype(jnp.float32), gbuf, eg
+
+        grad_carry, grad_buf, embed_grad = jax.lax.cond(
+            bwd_on, do_bwd, lambda op: op, (grad_carry, grad_buf, embed_grad))
+
+        # ---- gradient deposit: block exits the ring at worker N-1 --------------
+        b_exit = 2 * l_total + n - 3 - t
+        if 0 <= b_exit <= l_total - 2:
+            owner, idx = divmod(b_exit, per)
+            arriving = jax.lax.ppermute(grad_buf, AXIS, [(n - 1, owner)])
+            pool_grads = jax.tree.map(
+                lambda pg, ar: pg.at[idx].add(ar), pool_grads, arriving)
+
+    # ---- finalize: reduce replicated-param grads, deposit last layer ----------
+    owner_last, idx_last = divmod(l_total - 1, per)
+    ll = jax.tree.map(lambda g: jax.lax.psum(g, AXIS), last_layer_grads)
+    pool_grads = jax.tree.map(
+        lambda pg, g: pg.at[idx_last].add(
+            jnp.where(w == owner_last, 1.0, 0.0) * g),
+        pool_grads, ll)
+    embed_grad = jax.lax.psum(embed_grad, AXIS)
+    head_grad = jax.lax.psum(head_grad, AXIS)
+    fnorm_grad = jax.tree.map(lambda g: jax.lax.psum(g, AXIS), fnorm_grad)
+    loss_sum = jax.lax.psum(loss_sum, AXIS)
+    tok_count = jax.lax.psum(tok_count, AXIS)
+
+    grads = {"embed": embed_grad, "layers": pool_grads,
+             "final_norm": fnorm_grad}
+    if "lm_head" in params:
+        grads["lm_head"] = head_grad
+    else:                                                   # tied embeddings
+        grads["embed"] = grads["embed"] + head_grad.T
+    scale = 1.0 / jnp.maximum(tok_count.astype(jnp.float32), 1.0)
+    grads = jax.tree.map(lambda g: g * scale, grads)
+    return grads, loss_sum * scale, tok_count
+
+
+# ---------------------------------------------------------------------------
+# jit-level builder (strategy="roundpipe")
+# ---------------------------------------------------------------------------
+
+def roundpipe_param_specs(cfg: ModelConfig, abstract) -> dict:
+    """Pool layout: layer dim sharded over `model`; the rest replicated on the
+    manual axis (auto axes may still shard them)."""
+    def rule(path, leaf):
+        names = [p.key for p in path if hasattr(p, "key")]
+        if names and names[0] == "layers":
+            return P(AXIS, *([None] * (leaf.ndim - 1)))
+        return P(*([None] * leaf.ndim))
+
+    return jax.tree_util.tree_map_with_path(rule, abstract)
+
+
+def build_roundpipe_train_step(cfg: ModelConfig, mesh, step_cfg,
+                               global_batch: int, seq_len: int):
+    n = axis_size(mesh, AXIS)
+    if cfg.n_layers % n:
+        raise ValueError(
+            f"roundpipe v1 requires n_layers % model axis == 0 "
+            f"({cfg.n_layers} % {n})")
+    if global_batch % n:
+        raise ValueError("global batch must divide the model axis")
+
+    abstract = T.abstract_params(cfg)
+    pspecs = roundpipe_param_specs(cfg, abstract)
+    ospecs = opt_state_specs(pspecs, step_cfg.opt)
+    state_specs = {"params": pspecs, "opt": ospecs}
+
+    batch_abs = {}
+    if cfg.frontend:
+        batch_abs["embeds"] = jax.ShapeDtypeStruct(
+            (global_batch, seq_len, cfg.d_model), jnp.bfloat16)
+    else:
+        batch_abs["tokens"] = jax.ShapeDtypeStruct((global_batch, seq_len),
+                                                   jnp.int32)
+    batch_abs["labels"] = jax.ShapeDtypeStruct((global_batch, seq_len), jnp.int32)
+    bspecs = jax.tree.map(
+        lambda leaf: P(AXIS, *([None] * (leaf.ndim - 1))), batch_abs)
+
+    body = functools.partial(roundpipe_forward_backward, cfg=cfg, n_workers=n,
+                             xent_chunk=step_cfg.xent_chunk,
+                             kv_chunk=step_cfg.kv_chunk,
+                             ring_grad_dtype=step_cfg.accum_dtype)
+    grads_specs = {k: v for k, v in pspecs.items() if k != "lm_head"}
+    grads_specs = dict(pspecs) if "lm_head" in abstract else \
+        {k: pspecs[k] for k in ("embed", "layers", "final_norm")}
+    mapped = jax.shard_map(
+        body, mesh=mesh, axis_names={AXIS},
+        in_specs=(pspecs, bspecs),
+        out_specs=(grads_specs, P(), P()),
+        check_vma=False)
+
+    def train_step(state, batch):
+        grads, loss, tokens = mapped(state["params"], batch)
+        new_params, new_opt, metrics = apply_updates(
+            state["opt"], grads, step_cfg.opt, param_like=state["params"])
+        metrics = dict(metrics, loss=loss, tokens=tokens)
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    state_shardings = jax.tree.map(
+        lambda s: NamedSharding(mesh, s), state_specs,
+        is_leaf=lambda x: isinstance(x, P))
+    batch_shardings = jax.tree.map(lambda s: NamedSharding(mesh, s), bspecs,
+                                   is_leaf=lambda x: isinstance(x, P))
+    step = jax.jit(train_step,
+                   in_shardings=(state_shardings, batch_shardings),
+                   out_shardings=(state_shardings, None),
+                   donate_argnums=(0,))
+    return step, state_shardings, batch_shardings
+
+
+def init_roundpipe_state(key, cfg: ModelConfig, step_cfg):
+    params = T.init_params(key, cfg)
+    return {"params": params, "opt": init_opt_state(params, step_cfg.opt)}

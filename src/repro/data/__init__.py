@@ -1,0 +1,2 @@
+from .pipeline import (DataConfig, SyntheticLMDataset, pack_documents,  # noqa: F401
+                       sharded_batches)

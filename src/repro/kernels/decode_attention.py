@@ -1,0 +1,94 @@
+"""Flash-decode for TPU (Pallas): one query token vs a long KV cache.
+
+The serve_step hot loop for decode_32k / long_500k shapes.  Grid iterates KV
+chunks sequentially (TPU semantics) keeping the online-softmax state in VMEM;
+invalid cache slots (beyond ``n_valid``) are masked, so ring buffers (SWA) and
+partially-filled caches use the same kernel.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(nv_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+                   *, scale, block_k, n_kv_blocks, groups):
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    n_valid = nv_ref[0]
+    q = q_ref[0, 0].astype(jnp.float32)                    # (G, d)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)              # (bk, d)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)              # (bk, dv)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    pos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(pos < n_valid, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * corr + p.sum(axis=1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(ki == n_kv_blocks - 1)
+    def _final():
+        o_ref[0, 0] = (acc_scr[...]
+                       / jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, n_valid, *, logit_scale=None,
+                     block_k=512, interpret=False):
+    """q: (B,H,Dh); caches: (B,S,KH,Dh|Dv); n_valid: scalar or (B,) valid len.
+
+    Returns (B,H,Dv).  Query heads of one kv group are processed together
+    (G×d tile) so the matmul unit sees a 2-D operand even for MQA.
+    """
+    b, h, dh = q.shape
+    s, kh = k_cache.shape[1], k_cache.shape[2]
+    dv = v_cache.shape[-1]
+    g = h // kh
+    scale = logit_scale if logit_scale is not None else 1.0 / math.sqrt(dh)
+    block_k = min(block_k, s)
+    nk = -(-s // block_k)
+
+    if jnp.ndim(n_valid) == 0:
+        n_valid = jnp.full((b,), n_valid, jnp.int32)
+    qg = q.reshape(b, kh, g, dh)
+
+    kernel = functools.partial(_decode_kernel, scale=scale, block_k=block_k,
+                               n_kv_blocks=nk, groups=g)
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, kh, nk),
+        in_specs=[
+            pl.BlockSpec((1,), lambda bi, hi, ki: (bi,)),
+            pl.BlockSpec((1, 1, g, dh), lambda bi, hi, ki: (bi, hi, 0, 0)),
+            pl.BlockSpec((1, block_k, 1, dh), lambda bi, hi, ki: (bi, ki, hi, 0)),
+            pl.BlockSpec((1, block_k, 1, dv), lambda bi, hi, ki: (bi, ki, hi, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, dv), lambda bi, hi, ki: (bi, hi, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, kh, g, dv), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, dv), jnp.float32),
+        ],
+        interpret=interpret,
+    )(n_valid, qg.reshape(b, kh, g, dh), k_cache, v_cache)
+    return out.reshape(b, h, dv)

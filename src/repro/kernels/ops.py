@@ -1,0 +1,72 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+``use_pallas`` selects the kernel (TPU target; interpret mode on CPU) vs the
+pure-jnp reference used by the dry-run / GSPMD path.  Models call these
+entry points only — nothing else imports kernels directly.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .decode_attention import decode_attention as _decode_pallas
+from .flash_attention import flash_attention as _flash_pallas
+from .fused_xent import fused_xent as _xent_pallas
+from .rwkv_scan import rwkv_scan as _rwkv_pallas
+from .ssm_scan import ssm_scan as _ssm_pallas
+
+_ON_TPU = jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "sliding_window",
+                                             "use_pallas", "interpret",
+                                             "block_q", "block_k"))
+def flash_attention(q, k, v, *, causal=True, sliding_window=None,
+                    use_pallas=_ON_TPU, interpret=not _ON_TPU,
+                    block_q=128, block_k=128):
+    if use_pallas:
+        return _flash_pallas(q, k, v, causal=causal,
+                             sliding_window=sliding_window,
+                             block_q=block_q, block_k=block_k,
+                             interpret=interpret)
+    return ref.flash_attention_ref(q, k, v, causal=causal,
+                                   sliding_window=sliding_window)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret", "block_k"))
+def decode_attention(q, k_cache, v_cache, n_valid, *, use_pallas=_ON_TPU,
+                     interpret=not _ON_TPU, block_k=512):
+    if use_pallas:
+        return _decode_pallas(q, k_cache, v_cache, n_valid,
+                              block_k=block_k, interpret=interpret)
+    return ref.decode_attention_ref(q, k_cache, v_cache, n_valid)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret",
+                                             "block_t", "block_v"))
+def fused_xent(x, w, labels, *, use_pallas=_ON_TPU, interpret=not _ON_TPU,
+               block_t=256, block_v=2048):
+    if use_pallas:
+        return _xent_pallas(x, w, labels, block_t, block_v, interpret)
+    return ref.fused_xent_ref(x, w, labels)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret", "chunk"))
+def rwkv_scan(r, k, v, w, u, s0, *, use_pallas=_ON_TPU, interpret=not _ON_TPU,
+              chunk=128):
+    if use_pallas:
+        return _rwkv_pallas(r, k, v, w, u, s0, chunk=chunk, interpret=interpret)
+    return ref.rwkv_scan_ref(r, k, v, w, u, s0)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret",
+                                             "block_d", "chunk"))
+def ssm_scan(x, dt, bmat, cmat, a, h0, *, use_pallas=_ON_TPU,
+             interpret=not _ON_TPU, block_d=256, chunk=128):
+    if use_pallas:
+        return _ssm_pallas(x, dt, bmat, cmat, a, h0, block_d=block_d,
+                           chunk=chunk, interpret=interpret)
+    return ref.ssm_scan_ref(x, dt, bmat, cmat, a, h0)

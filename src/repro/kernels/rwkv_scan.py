@@ -1,0 +1,83 @@
+"""RWKV6 recurrence (Pallas): per-(batch, head) state kept in VMEM across
+sequence chunks.
+
+The recurrence S_t = diag(w_t) S_{t-1} + k_t v_t^T is sequential in t; the
+kernel's win on TPU is locality — the (N, N) state never leaves VMEM while a
+chunk of the sequence streams through, instead of being written back to HBM
+every step as the lax.scan reference does.  Grid = (B, H, n_chunks) with the
+chunk axis innermost (sequential on TPU).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _rwkv_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref, y_ref, sT_ref,
+                 s_scr, *, chunk, n_chunks):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        s_scr[...] = s0_ref[0, 0].astype(jnp.float32)
+
+    r = r_ref[0, :, 0, :].astype(jnp.float32)     # (C, N)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+    w = w_ref[0, :, 0, :].astype(jnp.float32)
+    u = u_ref[0].astype(jnp.float32)              # (N,)
+
+    def step(t, carry):
+        s, ys = carry
+        rt, kt, vt, wt = r[t], k[t], v[t], w[t]
+        kv = kt[:, None] * vt[None, :]            # (N, N)
+        y = (rt[None, :] @ (u[:, None] * kv + s))[0]
+        s = wt[:, None] * s + kv
+        return s, ys.at[t].set(y)
+
+    s, ys = jax.lax.fori_loop(
+        0, chunk, step, (s_scr[...], jnp.zeros((chunk, r.shape[1]), jnp.float32)))
+    s_scr[...] = s
+    y_ref[0, :, 0, :] = ys.astype(y_ref.dtype)
+
+    @pl.when(ci == n_chunks - 1)
+    def _final():
+        sT_ref[0, 0] = s_scr[...].astype(sT_ref.dtype)
+
+
+def rwkv_scan(r, k, v, w, u, s0, *, chunk=128, interpret=False):
+    """r,k,v,w: (B,S,H,N); u: (H,N); s0: (B,H,N,N) fp32.
+    Returns (y (B,S,H,N), s_T (B,H,N,N))."""
+    b, s, h, n = r.shape
+    chunk = min(chunk, s)
+    if s % chunk:
+        raise ValueError("sequence length must divide by chunk")
+    nc = s // chunk
+    kernel = functools.partial(_rwkv_kernel, chunk=chunk, n_chunks=nc)
+    y, s_t = pl.pallas_call(
+        kernel,
+        grid=(b, h, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, 1, n), lambda bi, hi, ci: (bi, ci, hi, 0)),
+            pl.BlockSpec((1, chunk, 1, n), lambda bi, hi, ci: (bi, ci, hi, 0)),
+            pl.BlockSpec((1, chunk, 1, n), lambda bi, hi, ci: (bi, ci, hi, 0)),
+            pl.BlockSpec((1, chunk, 1, n), lambda bi, hi, ci: (bi, ci, hi, 0)),
+            pl.BlockSpec((1, n), lambda bi, hi, ci: (hi, 0)),
+            pl.BlockSpec((1, 1, n, n), lambda bi, hi, ci: (bi, hi, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, 1, n), lambda bi, hi, ci: (bi, ci, hi, 0)),
+            pl.BlockSpec((1, 1, n, n), lambda bi, hi, ci: (bi, hi, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, s, h, n), r.dtype),
+            jax.ShapeDtypeStruct((b, h, n, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((n, n), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, w, u, s0)
+    return y, s_t

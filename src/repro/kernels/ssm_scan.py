@@ -1,0 +1,84 @@
+"""Mamba selective scan (Pallas): per-(batch, channel-block) state in VMEM.
+
+h_t = exp(dt_t * A) ⊙ h_{t-1} + (dt_t * x_t) ⊗ B_t ;  y_t = h_t · C_t
+
+Channels (d_inner) are blocked so the (block_d, N) state tile stays resident
+in VMEM across the sequence chunks; B/C are shared across channels within a
+batch element.  Grid = (B, n_d_blocks, n_chunks), chunk axis sequential.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssm_kernel(x_ref, dt_ref, b_ref, c_ref, a_ref, h0_ref, y_ref, hT_ref,
+                h_scr, *, chunk, n_chunks):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_scr[...] = h0_ref[0].astype(jnp.float32)
+
+    x = x_ref[0].astype(jnp.float32)         # (C, bd)
+    dt = dt_ref[0].astype(jnp.float32)       # (C, 1)
+    bm = b_ref[0].astype(jnp.float32)        # (C, N)
+    cm = c_ref[0].astype(jnp.float32)        # (C, N)
+    a = a_ref[...].astype(jnp.float32)       # (bd, N)
+
+    def step(t, carry):
+        h, ys = carry
+        decay = jnp.exp(dt[t] * a)                         # (bd, N)
+        h = decay * h + (dt[t] * x[t])[:, None] * bm[t][None, :]
+        y = h @ cm[t]                                      # (bd,)
+        return h, ys.at[t].set(y)
+
+    h, ys = jax.lax.fori_loop(
+        0, chunk, step, (h_scr[...], jnp.zeros((chunk, x.shape[1]), jnp.float32)))
+    h_scr[...] = h
+    y_ref[0] = ys.astype(y_ref.dtype)
+
+    @pl.when(ci == n_chunks - 1)
+    def _final():
+        hT_ref[0] = h_scr[...].astype(hT_ref.dtype)
+
+
+def ssm_scan(x, dt, bmat, cmat, a, h0, *, block_d=256, chunk=128,
+             interpret=False):
+    """x: (B,S,Di); dt: (B,S,1); bmat,cmat: (B,S,N); a: (Di,N); h0: (B,Di,N).
+    Returns (y (B,S,Di), h_T (B,Di,N))."""
+    b, s, di = x.shape
+    n = a.shape[1]
+    block_d = min(block_d, di)
+    chunk = min(chunk, s)
+    if di % block_d or s % chunk:
+        raise ValueError("d_inner % block_d and S % chunk must be 0")
+    nd, nc = di // block_d, s // chunk
+    kernel = functools.partial(_ssm_kernel, chunk=chunk, n_chunks=nc)
+    y, h_t = pl.pallas_call(
+        kernel,
+        grid=(b, nd, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, block_d), lambda bi, d, ci: (bi, ci, d)),
+            pl.BlockSpec((1, chunk, 1), lambda bi, d, ci: (bi, ci, 0)),
+            pl.BlockSpec((1, chunk, n), lambda bi, d, ci: (bi, ci, 0)),
+            pl.BlockSpec((1, chunk, n), lambda bi, d, ci: (bi, ci, 0)),
+            pl.BlockSpec((block_d, n), lambda bi, d, ci: (d, 0)),
+            pl.BlockSpec((1, block_d, n), lambda bi, d, ci: (bi, d, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, block_d), lambda bi, d, ci: (bi, ci, d)),
+            pl.BlockSpec((1, block_d, n), lambda bi, d, ci: (bi, d, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, s, di), x.dtype),
+            jax.ShapeDtypeStruct((b, di, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((block_d, n), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, bmat, cmat, a, h0)
+    return y, h_t

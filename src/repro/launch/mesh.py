@@ -1,0 +1,45 @@
+"""Production mesh construction.
+
+All mesh construction is behind functions (never module-level) so importing
+this module never touches jax device state — the dry-run must set XLA_FLAGS
+*before* any jax initialization.
+
+Axis semantics:
+  pod    outer data-parallel axis across pods (DCN); hierarchical all-reduce
+  data   data parallel + FSDP weight sharding inside a pod (ICI)
+  model  tensor/expert/sequence parallel — and the RoundPipe worker-pool axis
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape, axes):
+    return jax.make_mesh(tuple(shape), tuple(axes))
+
+
+def make_host_mesh(n_data: int = 1, n_model: int = 1):
+    """Mesh over however many (possibly virtual) devices this host exposes."""
+    n = n_data * n_model
+    if len(jax.devices()) < n:
+        raise RuntimeError(
+            f"need {n} devices, have {len(jax.devices())}; set "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={n} before jax init")
+    return jax.make_mesh((n_data, n_model), ("data", "model"))
+
+
+def data_axes(mesh) -> tuple:
+    """The batch-sharding axes present in this mesh (pod first)."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def axis_size(mesh, name) -> int:
+    if name not in mesh.axis_names:
+        return 1
+    return mesh.shape[name]

@@ -1,0 +1,39 @@
+"""Per-arch step-config presets (memory-budget tuned for 16 GB v5e chips).
+
+The ≥100B archs use Adafactor-factored second moments + bf16 gradient
+accumulation so fp32 states fit fully-sharded even single-pod (DESIGN.md
+§2: the XLA:CPU dry-run cannot compile SPMD host-memory writes, so the
+paper's host-offloaded optimizer is exercised on the TPU target / 1-device
+tests, and the pooled-HBM sharding is the dry-run default).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.config import get_config
+from repro.models.transformer import param_count
+from repro.optim import OptConfig
+from .steps import StepConfig
+
+BIG = 60e9          # params above this: adafactor + bf16 accumulation
+
+
+def step_config_for(arch: str, shape: str, *, strategy: str = "gspmd",
+                    async_optimizer: bool = True) -> StepConfig:
+    cfg = get_config(arch)
+    n = param_count(cfg)
+    big = n > BIG
+    return StepConfig(
+        strategy=strategy,
+        grad_accum="auto",
+        accum_dtype=jnp.bfloat16 if big else jnp.float32,
+        # giants run RoundPipe-sync (paper §5's -sync variant): the staleness-1
+        # pending-gradient buffer is host-resident on the TPU target, which the
+        # XLA:CPU dry-run cannot express — dropping it saves 2·N bytes/chip
+        async_optimizer=async_optimizer and not big,
+        offload_boundaries=False,      # TPU-only (see DESIGN.md §2)
+        sequence_parallel=True,
+        kv_chunk=2048 if shape in ("prefill_32k",) else 1024,
+        xent_chunk=256,
+        opt=OptConfig(mode="adafactor" if big else "adamw"),
+    )

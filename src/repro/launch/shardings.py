@@ -1,0 +1,180 @@
+"""Sharding rules: parameter, optimizer, activation and cache PartitionSpecs.
+
+Baseline ("gspmd") strategy = FSDP × TP hybrid: every weight is sharded on its
+output-feature dim over ``model`` (tensor parallel) and its input dim over
+``data``/``pod`` (FSDP-style; GSPMD inserts the per-layer all-gathers, which
+is the ICI analogue of the paper's per-stage PCIe weight upload).  Divisibility
+is checked per dim — when a dim doesn't divide (e.g. vocab 32001, kv heads 8
+vs model 16) the rule falls back along the preference list, so every config
+in the pool shards without manual edits.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+from .mesh import axis_size, data_axes
+
+
+def _fits(mesh, dim_size: int, axes) -> bool:
+    if axes is None:
+        return True
+    axes = (axes,) if isinstance(axes, str) else tuple(axes)
+    total = 1
+    for a in axes:
+        total *= axis_size(mesh, a)
+    return dim_size % total == 0 and total > 1
+
+
+def _pick(mesh, dim_size: int, prefs):
+    """First preference (axis name / tuple / None) whose size divides dim."""
+    for cand in prefs:
+        if cand is None:
+            return None
+        if _fits(mesh, dim_size, cand):
+            return cand
+    return None
+
+
+def _spec(mesh, shape, dim_prefs, taken=None):
+    """Build a PartitionSpec choosing per-dim axes with divisibility + no-reuse."""
+    used = set(taken or ())
+    out = []
+    for size, prefs in zip(shape, dim_prefs):
+        choice = None
+        for cand in prefs:
+            if cand is None:
+                break
+            names = (cand,) if isinstance(cand, str) else tuple(cand)
+            if any(n in used for n in names):
+                continue
+            if _fits(mesh, size, cand):
+                choice = cand
+                break
+        if choice is not None:
+            used.update((choice,) if isinstance(choice, str) else choice)
+        out.append(choice)
+    return P(*out)
+
+
+def param_specs(mesh, cfg: ModelConfig, abstract) -> dict:
+    """PartitionSpec pytree mirroring ``abstract_params(cfg)``.
+
+    Rules keyed on the param path; layer-stacked leaves keep dim0 = None
+    (scan axis).  ``model`` goes to the biggest contraction-feature dim,
+    ``data``(+``pod``) to the other feature dim (FSDP).
+    """
+    dp = data_axes(mesh)
+    MODEL = "model"
+
+    def rule(path, leaf):
+        names = [p.key for p in path if hasattr(p, "key")]
+        shape = leaf.shape
+        name = names[-1] if names else ""
+        in_layer = names and names[0] == "layers"
+        body = shape[1:] if in_layer else shape
+        lead = [()] if in_layer else []
+
+        def build(prefs):
+            assert len(prefs) == len(body), (names, shape)
+            sp = _spec(mesh, body, prefs)
+            return P(*([None] * len(lead) + list(sp)))
+
+        if name == "embed":
+            return _spec(mesh, shape, [(MODEL, None), (dp, None)])
+        if name == "lm_head":
+            return _spec(mesh, shape, [(dp, None), (MODEL, None)])
+        if len(body) == 1:  # norms, biases, gates, per-channel vectors
+            return build([(MODEL, None)] if name in ("d_skip",) else [(None,)])
+        if len(names) >= 2 and names[-2] == "experts":
+            # (E, D, F): expert-parallel if E divides; otherwise the no-reuse
+            # logic in _spec leaves E unsharded and TP lands on F
+            return build([(MODEL, None), (dp, None), (MODEL, None)])
+        if name == "router":
+            return build([(dp, None), (None,)])
+        if name in ("w_q", "w_k", "w_v", "w_g", "w_up", "w_gate", "w_in",
+                    "w_dkv", "w_kpe", "decay_a", "w_bcdt"):
+            return build([(dp, None), (MODEL, None)])
+        if name in ("w_o", "w_down", "w_out", "decay_b"):
+            return build([(MODEL, None), (dp, None)])
+        if name in ("w_uk", "w_uv", "w_q3"):
+            return build([(dp, None), (MODEL, None), (None,)])
+        if name == "conv":
+            return build([(None,), (MODEL, None)])
+        if name == "a_log":
+            return build([(MODEL, None), (None,)])
+        if name == "mu":
+            return build([(None,), (None,)])
+        # default: model on last dim, data on first
+        prefs = [(dp, None)] * (len(body) - 1) + [(MODEL, None)]
+        return build(prefs)
+
+    # MLA w_q is 3-D (d, h, e): give it its own rule name
+    def rule_dispatch(path, leaf):
+        names = [p.key for p in path if hasattr(p, "key")]
+        if names and names[-1] == "w_q" and len(leaf.shape) == (3 + (names[0] == "layers")):
+            body = leaf.shape[1:] if names[0] == "layers" else leaf.shape
+            sp = _spec(mesh, body, [(data_axes(mesh), None), ("model", None), (None,)])
+            return P(*([None] if names[0] == "layers" else []) + list(sp))
+        return rule(path, leaf)
+
+    return jax.tree_util.tree_map_with_path(rule_dispatch, abstract)
+
+
+def batch_specs(mesh, cfg: ModelConfig, batch_abstract) -> dict:
+    dp = data_axes(mesh)
+
+    def rule(path, leaf):
+        b = leaf.shape[0]
+        lead = dp if _fits(mesh, b, dp) else (
+            ("data",) if _fits(mesh, b, "data") else None)
+        return P(lead, *([None] * (len(leaf.shape) - 1)))
+
+    return jax.tree_util.tree_map_with_path(rule, batch_abstract)
+
+
+def cache_specs(mesh, cfg: ModelConfig, cache_abstract) -> dict:
+    """KV/state caches: batch over data axes, long seq dim over model,
+    falling back to head-dim sharding where shapes allow."""
+    dp = data_axes(mesh)
+
+    def rule(path, leaf):
+        names = [p.key for p in path if hasattr(p, "key")]
+        name = names[-1] if names else ""
+        if name == "len" or leaf.ndim == 0:
+            return P()
+        shape = leaf.shape
+        if name in ("k", "v", "c_kv", "k_pe"):           # (L, B, S, [KH,] Dh)
+            batch_ax = dp if _fits(mesh, shape[1], dp) else (
+                "data" if _fits(mesh, shape[1], "data") else None)
+            # sequence-sharded cache + flash-decode combine constraints in
+            # layers.decode_attention (see DESIGN.md / §Perf iteration 1)
+            seq_ax = "model" if _fits(mesh, shape[2], "model") else None
+            return P(None, batch_ax, seq_ax, *([None] * (leaf.ndim - 3)))
+        # recurrent states: (L, B, ...) — shard feature dims over model
+        batch_ax = dp if _fits(mesh, shape[1], dp) else (
+            "data" if _fits(mesh, shape[1], "data") else None)
+        rest = []
+        used_model = False
+        for size in shape[2:]:
+            if not used_model and _fits(mesh, size, "model"):
+                rest.append("model")
+                used_model = True
+            else:
+                rest.append(None)
+        return P(None, batch_ax, *rest)
+
+    return jax.tree_util.tree_map_with_path(rule, cache_abstract)
+
+
+def named(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def host_named(mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s, memory_kind="pinned_host"), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,271 @@
+"""Step builders: jit-able train / prefill / decode steps with full sharding.
+
+``build_train_step`` returns the function plus in/out shardings so both the
+real trainer (``launch/train.py``) and the dry-run (``launch/dryrun.py``)
+lower the exact same program.  Strategy "gspmd" = FSDP×TP baseline;
+strategy "roundpipe" = the paper's schedule via ``repro.core.dispatch``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.optim import (OptConfig, apply_updates, async_apply, init_async,
+                         init_opt_state, opt_state_specs)
+from .mesh import axis_size, data_axes
+from .shardings import batch_specs, cache_specs, named, param_specs
+
+
+@dataclasses.dataclass(frozen=True)
+class StepConfig:
+    strategy: str = "gspmd"          # gspmd | roundpipe
+    grad_accum: int | str = "auto"   # microbatch count ('auto' -> 1/chip batch)
+    accum_dtype: Any = jnp.float32
+    async_optimizer: bool = True     # paper's staleness-1 update
+    offload_boundaries: bool = False  # host-offload remat boundaries (TPU)
+    sequence_parallel: bool = True
+    pure_dp: bool = False            # small models: batch over EVERY axis,
+                                     # params FSDP over data only (§Perf A)
+    kv_chunk: int = 1024
+    xent_chunk: int = 256
+    opt: OptConfig = dataclasses.field(default_factory=OptConfig)
+
+
+def resolve_grad_accum(step_cfg: StepConfig, mesh, global_batch: int) -> int:
+    if step_cfg.grad_accum != "auto":
+        return int(step_cfg.grad_accum)
+    dp = 1
+    for a in data_axes(mesh):
+        dp *= axis_size(mesh, a)
+    if step_cfg.pure_dp:
+        dp *= axis_size(mesh, "model")
+    return max(1, global_batch // dp)
+
+
+def _strip_model(spec_tree):
+    """Remove the `model` axis from every PartitionSpec (pure-DP layout)."""
+    def fix(s):
+        out = []
+        for ax in s:
+            if ax == "model":
+                out.append(None)
+            elif isinstance(ax, tuple):
+                kept = tuple(a for a in ax if a != "model")
+                out.append(kept[0] if len(kept) == 1 else (kept or None))
+            else:
+                out.append(ax)
+        return jax.sharding.PartitionSpec(*out)
+
+    return jax.tree.map(fix, spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _remat_policy(step_cfg: StepConfig):
+    if step_cfg.offload_boundaries:
+        return jax.checkpoint_policies.save_and_offload_only_these_names(
+            names_which_can_be_saved=[],
+            names_which_can_be_offloaded=["layer_boundary"],
+            offload_src="device", offload_dst="pinned_host")
+    return jax.checkpoint_policies.save_only_these_names("layer_boundary")
+
+
+def _boundary_constrainer(mesh, cfg: ModelConfig, step_cfg: StepConfig,
+                          micro_batch: int, seq: int):
+    """Sharding for the (B,S,D) layer boundary: batch over the data axes and,
+    under sequence parallelism, seq over `model`; under pure_dp the batch
+    spans every axis (and seq stays unsharded)."""
+    if step_cfg.pure_dp:
+        dp = data_axes(mesh) + ("model",)
+        total = _dp_size(mesh) * axis_size(mesh, "model")
+        b_ax = dp if micro_batch % max(1, total) == 0 else None
+        spec = P(b_ax, None, None)
+    elif not step_cfg.sequence_parallel:
+        return None
+    else:
+        dp = data_axes(mesh)
+        b_ax = dp if micro_batch % max(1, _dp_size(mesh)) == 0 else None
+        s_ax = "model" if seq % axis_size(mesh, "model") == 0 else None
+        spec = P(b_ax, s_ax, None)
+
+    def constrain(x):
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+    return constrain
+
+
+def _dp_size(mesh):
+    n = 1
+    for a in data_axes(mesh):
+        n *= axis_size(mesh, a)
+    return n
+
+
+# ---------------------------------------------------------------------------
+# Train
+# ---------------------------------------------------------------------------
+
+def build_train_step(cfg: ModelConfig, mesh, step_cfg: StepConfig,
+                     global_batch: int, seq_len: int):
+    """Returns (train_step, state_shardings, batch_shardings).
+
+    train_step(state, batch) -> (state, metrics); state donated.
+    state = {params, opt|async} with opt per ``step_cfg.opt.mode``.
+    """
+    if step_cfg.strategy == "roundpipe":
+        from repro.core.dispatch import build_roundpipe_train_step
+        return build_roundpipe_train_step(cfg, mesh, step_cfg, global_batch,
+                                          seq_len)
+    accum = resolve_grad_accum(step_cfg, mesh, global_batch)
+    micro = global_batch // accum
+    if micro * accum != global_batch:
+        raise ValueError(f"grad_accum {accum} does not divide batch {global_batch}")
+    policy = _remat_policy(step_cfg)
+    dp = data_axes(mesh) + (("model",) if step_cfg.pure_dp else ())
+    constrain = _boundary_constrainer(mesh, cfg, step_cfg, micro, seq_len)
+
+    abstract = T.abstract_params(cfg)
+    pspecs = param_specs(mesh, cfg, abstract)
+    if step_cfg.pure_dp:
+        pspecs = _strip_model(pspecs)
+    ospecs = opt_state_specs(pspecs, step_cfg.opt)
+    if step_cfg.async_optimizer:
+        from repro.optim.async_opt import AsyncOptState
+        state_specs = {"params": pspecs,
+                       "async": AsyncOptState(opt=ospecs, pending=pspecs,
+                                              has_pending=P())}
+    else:
+        state_specs = {"params": pspecs, "opt": ospecs}
+
+    def micro_spec(leaf_spec):
+        return P(None, *leaf_spec)
+
+    def loss_of(params, mb):
+        return T.loss_fn(params, mb, cfg, remat=True, remat_policy=policy,
+                         kv_chunk=step_cfg.kv_chunk,
+                         xent_chunk=step_cfg.xent_chunk, constrain=constrain)
+
+    def train_step(state, batch):
+        params = state["params"]
+        # microbatch split: (B, ...) -> (A, B/A, ...)
+        mbs = jax.tree.map(
+            lambda x: x.reshape(accum, micro, *x.shape[1:]), batch)
+        mbs = jax.lax.with_sharding_constraint(
+            mbs, jax.tree.map(
+                lambda x: NamedSharding(mesh, P(None, dp, *([None] * (x.ndim - 2)))),
+                mbs))
+
+        def micro_step(acc, mb):
+            loss, grads = jax.value_and_grad(loss_of)(params, mb)
+            acc = jax.tree.map(
+                lambda a, g: a + g.astype(step_cfg.accum_dtype), acc, grads)
+            return acc, loss
+
+        zeros = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, step_cfg.accum_dtype), params)
+        grads, losses = jax.lax.scan(micro_step, zeros, mbs)
+        grads = jax.tree.map(lambda g: g / accum, grads)
+
+        if step_cfg.async_optimizer:
+            new_params, new_async, metrics = async_apply(
+                params, state["async"], grads, step_cfg.opt)
+            new_state = {"params": new_params, "async": new_async}
+        else:
+            new_params, new_opt, metrics = apply_updates(
+                state["opt"], grads, step_cfg.opt)
+            new_state = {"params": new_params, "opt": new_opt}
+        metrics = dict(metrics, loss=losses.mean())
+        return new_state, metrics
+
+    state_shardings = named(mesh, state_specs)
+    babs = _abstract_batch(cfg, global_batch, seq_len)
+    if step_cfg.pure_dp:
+        bspecs = jax.tree.map(
+            lambda leaf: P(dp, *([None] * (leaf.ndim - 1))), babs)
+    else:
+        bspecs = batch_specs(mesh, cfg, babs)
+    batch_shardings = named(mesh, bspecs)
+    step = jax.jit(train_step,
+                   in_shardings=(state_shardings, batch_shardings),
+                   out_shardings=(state_shardings, None),
+                   donate_argnums=(0,))
+    return step, state_shardings, batch_shardings
+
+
+def init_train_state(key, cfg: ModelConfig, step_cfg: StepConfig):
+    params = T.init_params(key, cfg)
+    if step_cfg.async_optimizer:
+        return {"params": params, "async": init_async(params, step_cfg.opt)}
+    return {"params": params, "opt": init_opt_state(params, step_cfg.opt)}
+
+
+def abstract_train_state(cfg: ModelConfig, step_cfg: StepConfig):
+    return jax.eval_shape(
+        functools.partial(init_train_state, cfg=cfg, step_cfg=step_cfg),
+        jax.random.PRNGKey(0))
+
+
+def _abstract_batch(cfg: ModelConfig, global_batch: int, seq_len: int):
+    if cfg.frontend:
+        b = {"embeds": jax.ShapeDtypeStruct((global_batch, seq_len, cfg.d_model),
+                                            jnp.bfloat16)}
+    else:
+        b = {"tokens": jax.ShapeDtypeStruct((global_batch, seq_len), jnp.int32)}
+    b["labels"] = jax.ShapeDtypeStruct((global_batch, seq_len), jnp.int32)
+    return b
+
+
+# ---------------------------------------------------------------------------
+# Serve
+# ---------------------------------------------------------------------------
+
+def build_prefill_step(cfg: ModelConfig, mesh, step_cfg: StepConfig,
+                       global_batch: int, seq_len: int):
+    constrain = _boundary_constrainer(mesh, cfg, step_cfg, global_batch, seq_len)
+
+    def prefill_step(params, batch):
+        x, cache = T.prefill(params, batch, cfg, max_len=seq_len,
+                             kv_chunk=step_cfg.kv_chunk, constrain=constrain)
+        logits = (x[:, -1] @ T.lm_head_weights(params, cfg)).astype(jnp.float32)
+        return logits, cache
+
+    abstract = T.abstract_params(cfg)
+    pshard = named(mesh, param_specs(mesh, cfg, abstract))
+    binput = {"embeds": jax.ShapeDtypeStruct(
+        (global_batch, seq_len, cfg.d_model), jnp.bfloat16)} if cfg.frontend \
+        else {"tokens": jax.ShapeDtypeStruct((global_batch, seq_len), jnp.int32)}
+    bshard = named(mesh, batch_specs(mesh, cfg, binput))
+    cache_abstract = T.init_cache(cfg, global_batch, seq_len)
+    cshard = named(mesh, cache_specs(mesh, cfg, cache_abstract))
+    step = jax.jit(prefill_step, in_shardings=(pshard, bshard),
+                   out_shardings=(None, cshard))
+    return step, pshard, bshard, cshard
+
+
+def build_decode_step(cfg: ModelConfig, mesh, step_cfg: StepConfig,
+                      global_batch: int, seq_len: int):
+    """One-token serve_step with a KV cache of ``seq_len`` (decode shapes).
+
+    Serving layout: weights stay RESIDENT 2-D-sharded (TP over the whole
+    mesh); tokens/hidden are replicated over the data axes so matmuls
+    contract sharded dims with small activation psums instead of per-token
+    weight gathers.  The cache stays batch-sharded (attention is the only
+    batch-local op; GSPMD re-shards the (B,D) hidden around it)."""
+    def decode(params, cache, tokens):
+        return T.decode_step(params, cache, tokens, cfg,
+                             kv_chunk=step_cfg.kv_chunk)
+
+    abstract = T.abstract_params(cfg)
+    pshard = named(mesh, param_specs(mesh, cfg, abstract))
+    cache_abstract = T.init_cache(cfg, global_batch, seq_len)
+    cshard = named(mesh, cache_specs(mesh, cfg, cache_abstract))
+    tshard = NamedSharding(mesh, P(None))       # replicated: resident-TP serve
+    step = jax.jit(decode, in_shardings=(pshard, cshard, tshard),
+                   out_shardings=(None, cshard), donate_argnums=(1,))
+    return step, pshard, cshard, tshard

@@ -1,0 +1,203 @@
+"""Transformer building blocks: norms, RoPE, attention variants, MLPs.
+
+Everything is a pure function over explicit parameter pytrees (nested dicts of
+arrays) so the same code paths work under jit, scan, shard_map, eval_shape and
+the dry-run's ShapeDtypeStruct inputs.  Attention is implemented once as a
+*chunked online-softmax* (memory-bounded, compiles for 32k sequences without
+materialising S×S scores); the Pallas flash kernel in ``repro.kernels`` is a
+drop-in fast path selected by ``repro.models.transformer`` when enabled.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, scale, eps=1e-5):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps)).astype(x.dtype) * scale
+
+
+def layer_norm(x, scale, bias, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + eps)).astype(x.dtype) * scale + bias
+
+
+def apply_norm(x, params, kind, eps=1e-5):
+    if kind == "rmsnorm":
+        return rms_norm(x, params["scale"], eps)
+    return layer_norm(x, params["scale"], params["bias"], eps)
+
+
+def init_norm(d, kind, dtype=jnp.float32):
+    p = {"scale": jnp.ones((d,), dtype)}
+    if kind == "layernorm":
+        p["bias"] = jnp.zeros((d,), dtype)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(d_head: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, d_head, 2, dtype=jnp.float32) / d_head))
+
+
+def apply_rope(x, positions, theta=10_000.0):
+    """x: (..., S, H, D) with D even; positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    freqs = rope_frequencies(d, theta)                       # (D/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    cos = jnp.cos(angles)[..., None, :]                      # (..., S, 1, D/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Chunked online-softmax attention (GQA / MQA / MHA, causal / SWA / bidir)
+# ---------------------------------------------------------------------------
+
+NEG_INF = -1e30
+
+
+def chunked_attention(
+    q, k, v, *,
+    causal: bool = True,
+    sliding_window: Optional[int] = None,
+    q_offset=0,
+    kv_chunk: int = 1024,
+    logit_scale: Optional[float] = None,
+):
+    """Memory-bounded attention.  q: (B,Sq,H,Dh); k,v: (B,Skv,KH,Dh).
+
+    Scans over KV chunks maintaining flash-style running (max, sum, acc) so the
+    peak live buffer is O(Sq * chunk), never O(Sq * Skv).  ``q_offset`` is the
+    absolute position of q[0] (prefill continuation / decode).
+    """
+    b, sq, h, dh = q.shape
+    skv, kh = k.shape[1], k.shape[2]
+    dv = v.shape[-1]                                           # MLA: dv != dh
+    g = h // kh
+    scale = logit_scale if logit_scale is not None else 1.0 / math.sqrt(dh)
+
+    n_chunks = -(-skv // kv_chunk)
+    pad = n_chunks * kv_chunk - skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = k.reshape(b, n_chunks, kv_chunk, kh, dh).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, n_chunks, kv_chunk, kh, dv).transpose(1, 0, 2, 3, 4)
+
+    qg = q.reshape(b, sq, kh, g, dh)
+    q_pos = q_offset + jnp.arange(sq)
+
+    m0 = jnp.full((b, sq, kh, g), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, sq, kh, g), jnp.float32)
+    acc0 = jnp.zeros((b, sq, kh, g, dv), jnp.float32)
+
+    def body(carry, inputs):
+        m, l, acc = carry
+        idx, kb, vb = inputs                                   # kb: (B,C,KH,Dh)
+        kv_pos = idx * kv_chunk + jnp.arange(kv_chunk)
+        s = jnp.einsum("bqkgd,bckd->bqkgc", qg, kb,
+                       preferred_element_type=jnp.float32) * scale
+        mask = jnp.ones((sq, kv_chunk), bool)
+        mask &= (kv_pos[None, :] < skv)                        # padding
+        if causal:
+            mask &= kv_pos[None, :] <= q_pos[:, None]
+        if sliding_window is not None:
+            mask &= kv_pos[None, :] > q_pos[:, None] - sliding_window
+        s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bqkgc,bckd->bqkgd", p.astype(vb.dtype), vb,
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, acc0), (jnp.arange(n_chunks), kc, vc))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(b, sq, h, dv).astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, cache_len, *,
+                     sliding_window: Optional[int] = None,
+                     logit_scale: Optional[float] = None):
+    """Single-token attention against a (possibly ring-buffered) KV cache.
+
+    q: (B,1,H,Dh); caches: (B,S,KH,Dh); ``cache_len`` is the number of valid
+    entries.  Pure-jnp flash-decode; the Pallas kernel in
+    ``repro.kernels.decode_attention`` implements the same contract.
+
+    Sharding: constraints pin the sequence-sharded (`model` axis) layout so
+    the softmax partials reduce over small (B,KH,G) tensors instead of GSPMD
+    rematerialising the cache (flash-decode combine, GSPMD-derived).
+    """
+    from .shard_utils import maybe_constrain
+    b, _, h, dh = q.shape
+    s, kh = k_cache.shape[1], k_cache.shape[2]
+    g = h // kh
+    scale = logit_scale if logit_scale is not None else 1.0 / math.sqrt(dh)
+    qg = q.reshape(b, kh, g, dh)
+    k_cache = maybe_constrain(k_cache, jax.sharding.PartitionSpec(
+        ("pod", "data"), "model", None, None))
+    v_cache = maybe_constrain(v_cache, jax.sharding.PartitionSpec(
+        ("pod", "data"), "model", None, None))
+    scores = jnp.einsum("bkgd,bskd->bkgs", qg, k_cache,
+                        preferred_element_type=jnp.float32) * scale
+    scores = maybe_constrain(scores, jax.sharding.PartitionSpec(
+        ("pod", "data"), None, None, "model"))
+    pos = jnp.arange(s)
+    mask = pos[None, :] < cache_len if jnp.ndim(cache_len) == 0 \
+        else pos[None, :] < cache_len[:, None]
+    if sliding_window is not None:
+        lo = (cache_len if jnp.ndim(cache_len) else jnp.full((b,), cache_len)) - sliding_window
+        mask = mask & (pos[None, :] >= lo[:, None] if jnp.ndim(lo) else pos[None, :] >= lo)
+    scores = jnp.where(mask[:, None, None, :] if mask.ndim == 2 else mask,
+                       scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, 1, h, dh).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Dense MLPs
+# ---------------------------------------------------------------------------
+
+def mlp(x, p, kind):
+    if kind == "swiglu":
+        return (jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])) @ p["w_down"]
+    if kind == "geglu":
+        return (jax.nn.gelu(x @ p["w_gate"]) * (x @ p["w_up"])) @ p["w_down"]
+    if kind == "relu2":
+        return jnp.square(jax.nn.relu(x @ p["w_up"])) @ p["w_down"]
+    if kind == "gelu":
+        return jax.nn.gelu(x @ p["w_up"]) @ p["w_down"]
+    raise ValueError(kind)
+
+
+def init_mlp(key, d, d_ff, kind, dtype):
+    ks = jax.random.split(key, 3)
+    sc_in, sc_out = 1.0 / math.sqrt(d), 1.0 / math.sqrt(d_ff)
+    p = {"w_up": jax.random.normal(ks[0], (d, d_ff), dtype) * sc_in,
+         "w_down": jax.random.normal(ks[1], (d_ff, d), dtype) * sc_out}
+    if kind in ("swiglu", "geglu"):
+        p["w_gate"] = jax.random.normal(ks[2], (d, d_ff), dtype) * sc_in
+    return p

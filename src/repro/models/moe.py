@@ -1,0 +1,105 @@
+"""Mixture-of-Experts block: top-k routing with sort-based capacity dispatch.
+
+FLOP-faithful: expert compute scales with *active* experts (E_act), not total
+E — tokens are sorted by assigned expert, packed into per-expert capacity
+buffers with gathers (no S×E one-hot matmuls), processed with a batched
+einsum over experts, and combined with a scatter.  Overflowing tokens are
+dropped (standard capacity-factor semantics); shared experts (DeepSeek-V2)
+run as one fused dense MLP.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .layers import init_mlp, mlp
+from .shard_utils import maybe_constrain as _maybe_constrain
+
+
+def expert_capacity(n_tokens: int, n_experts: int, k: int, capacity_factor: float) -> int:
+    return max(1, int(math.ceil(n_tokens * k / n_experts * capacity_factor)))
+
+
+def moe_block(x, p, cfg):
+    """x: (T, D) flattened tokens -> (T, D).  p: router/experts/(shared)."""
+    t, d = x.shape
+    e, k = cfg.n_experts, cfg.experts_per_token
+    cap = expert_capacity(t, e, k, cfg.capacity_factor)
+
+    x = _maybe_constrain(x, P(("pod", "data", "model"), None))
+    logits = (x @ p["router"]).astype(jnp.float32)              # (T, E)
+    logits = _maybe_constrain(logits, P(("pod", "data", "model"), None))
+    top_w, top_i = jax.lax.top_k(logits, k)                     # (T, k)
+    top_w = jax.nn.softmax(top_w, axis=-1)
+
+    flat_expert = top_i.reshape(-1)                             # (T*k,)
+    flat_token = jnp.repeat(jnp.arange(t), k)
+    flat_w = top_w.reshape(-1)
+
+    # sort assignments by expert; position within the expert group gives the
+    # capacity slot, overflow positions are dropped
+    order = jnp.argsort(flat_expert)
+    se, stok, sw = flat_expert[order], flat_token[order], flat_w[order]
+    group_start = jnp.searchsorted(se, jnp.arange(e))
+    pos = jnp.arange(t * k) - group_start[se]
+    keep = pos < cap
+    slot = jnp.where(keep, se * cap + pos, e * cap)             # drop -> junk slot
+
+    buf = jnp.zeros((e * cap + 1, d), x.dtype).at[slot].set(x[stok])
+    h = buf[: e * cap].reshape(e, cap, d)
+    # expert-parallel placement for the dispatch buffer and expert compute
+    h = _maybe_constrain(h, P("model", ("pod", "data"), None))
+
+    # batched expert FFN: (E, C, D) x (E, D, F)
+    if cfg.mlp_kind in ("swiglu", "geglu"):
+        act = jax.nn.silu if cfg.mlp_kind == "swiglu" else jax.nn.gelu
+        gate = jnp.einsum("ecd,edf->ecf", h, p["experts"]["w_gate"])
+        up = jnp.einsum("ecd,edf->ecf", h, p["experts"]["w_up"])
+        h = act(gate) * up
+    elif cfg.mlp_kind == "relu2":
+        h = jnp.square(jax.nn.relu(jnp.einsum("ecd,edf->ecf", h, p["experts"]["w_up"])))
+    else:
+        h = jax.nn.gelu(jnp.einsum("ecd,edf->ecf", h, p["experts"]["w_up"]))
+    h = _maybe_constrain(h, P("model", ("pod", "data"), None))
+    h = jnp.einsum("ecf,efd->ecd", h, p["experts"]["w_down"])
+    h = _maybe_constrain(h, P("model", ("pod", "data"), None))
+
+    out_slots = jnp.concatenate([h.reshape(e * cap, d),
+                                 jnp.zeros((1, d), h.dtype)])   # junk slot -> 0
+    contrib = out_slots[slot] * (sw * keep)[:, None].astype(h.dtype)
+    out = jnp.zeros((t, d), x.dtype).at[stok].add(contrib.astype(x.dtype))
+    out = _maybe_constrain(out, P(("pod", "data", "model"), None))
+
+    if "shared" in p:                                           # DeepSeek shared experts
+        out = out + mlp(x, p["shared"], cfg.mlp_kind)
+    return out
+
+
+def init_moe(key, cfg, dtype):
+    d, e, f = cfg.d_model, cfg.n_experts, cfg.moe_d_ff
+    ks = jax.random.split(key, 5)
+    sc_in, sc_out = 1.0 / math.sqrt(d), 1.0 / math.sqrt(f)
+    experts = {"w_up": jax.random.normal(ks[0], (e, d, f), dtype) * sc_in,
+               "w_down": jax.random.normal(ks[1], (e, f, d), dtype) * sc_out}
+    if cfg.mlp_kind in ("swiglu", "geglu"):
+        experts["w_gate"] = jax.random.normal(ks[2], (e, d, f), dtype) * sc_in
+    p = {"router": jax.random.normal(ks[3], (d, e), dtype) / math.sqrt(d),
+         "experts": experts}
+    if cfg.n_shared_experts:
+        p["shared"] = init_mlp(ks[4], d, cfg.n_shared_experts * cfg.moe_d_ff,
+                               cfg.mlp_kind, dtype)
+    return p
+
+
+def aux_load_balance_loss(x, router, cfg):
+    """Switch-style auxiliary loss (fraction-dispatched x router-prob)."""
+    logits = (x @ router).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    _, top_i = jax.lax.top_k(logits, cfg.experts_per_token)
+    onehot = jax.nn.one_hot(top_i, cfg.n_experts).sum(axis=1)
+    frac_tokens = onehot.mean(axis=0)
+    frac_prob = probs.mean(axis=0)
+    return cfg.n_experts * jnp.sum(frac_tokens * frac_prob)

@@ -1,0 +1,200 @@
+"""State-space / linear-recurrence blocks: Mamba selective scan (Hymba's SSM
+heads) and RWKV6 "Finch" time-mix with data-dependent decay.
+
+Each block exposes a full-sequence path (train / prefill: ``*_seq``) and a
+single-token path (decode: ``*_step``) operating on an explicit recurrent
+state — the constant-size state is what makes the ``long_500k`` shape viable
+for these families.  Pure jnp here; ``repro.kernels.ssm_scan`` / ``rwkv_scan``
+are the Pallas fast paths validated against these references.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .layers import rms_norm
+
+CONV_W = 4          # mamba depthwise conv window
+DECAY_RANK = 32     # rwkv6 low-rank data-dependent decay
+
+
+# ---------------------------------------------------------------------------
+# Mamba selective scan
+# ---------------------------------------------------------------------------
+
+def init_mamba(key, d_model, d_inner, n_state, dtype):
+    ks = jax.random.split(key, 7)
+    sc = 1.0 / math.sqrt(d_model)
+    return {
+        "w_in": jax.random.normal(ks[0], (d_model, 2 * d_inner), dtype) * sc,
+        "conv": jax.random.normal(ks[1], (CONV_W, d_inner), dtype) * 0.5,
+        "w_bcdt": jax.random.normal(ks[2], (d_inner, 2 * n_state + 1), dtype)
+                  / math.sqrt(d_inner),
+        "dt_bias": jnp.zeros((1,), dtype),
+        "a_log": jnp.zeros((d_inner, n_state), jnp.float32),
+        "d_skip": jnp.ones((d_inner,), dtype),
+        "w_out": jax.random.normal(ks[3], (d_inner, d_model), dtype)
+                 / math.sqrt(d_inner),
+    }
+
+
+def _mamba_inner(xz, p, n_state, h0, conv_state):
+    """xz: (B,S,2*Di) post-in_proj.  Returns (y, h_T, conv_state_T)."""
+    di = xz.shape[-1] // 2
+    x, z = jnp.split(xz, 2, axis=-1)                        # (B,S,Di)
+    # depthwise causal conv over time
+    xp = jnp.concatenate([conv_state, x], axis=1)           # (B, S+W-1, Di)
+    conv_out = sum(xp[:, i : i + x.shape[1]] * p["conv"][i] for i in range(CONV_W))
+    x = jax.nn.silu(conv_out)
+    bcdt = x @ p["w_bcdt"]                                  # (B,S,2N+1)
+    bmat = bcdt[..., :n_state]
+    cmat = bcdt[..., n_state : 2 * n_state]
+    dt = jax.nn.softplus(bcdt[..., -1:] + p["dt_bias"])     # (B,S,1)
+    a = -jnp.exp(p["a_log"])                                # (Di,N)
+
+    def step(h, inp):
+        xt, bt, ct, dtt = inp                               # (B,Di),(B,N),(B,N),(B,1)
+        decay = jnp.exp(dtt[..., None] * a)                 # (B,Di,N)
+        h = decay * h + (dtt * xt)[..., None] * bt[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, ct)
+        return h, y
+
+    xs = (x.transpose(1, 0, 2), bmat.transpose(1, 0, 2),
+          cmat.transpose(1, 0, 2), dt.transpose(1, 0, 2))
+    h_t, ys = jax.lax.scan(step, h0, xs)
+    y = ys.transpose(1, 0, 2) + x * p["d_skip"]
+    y = y * jax.nn.silu(z)
+    new_conv_state = xp[:, -(CONV_W - 1):] if CONV_W > 1 else conv_state
+    return y, h_t, new_conv_state
+
+
+def mamba_seq(x, p, n_state):
+    """x: (B,S,D) -> (B,S,D); fresh state (training / prefill)."""
+    b = x.shape[0]
+    di = p["w_in"].shape[1] // 2
+    h0 = jnp.zeros((b, di, n_state), jnp.float32)
+    conv0 = jnp.zeros((b, CONV_W - 1, di), x.dtype)
+    y, h_t, conv_t = _mamba_inner(x @ p["w_in"], p, n_state, h0, conv0)
+    return (y @ p["w_out"]).astype(x.dtype), (h_t, conv_t)
+
+
+def mamba_step(x, p, n_state, state):
+    """x: (B,1,D); state = (h, conv_state) -> (y, new_state)."""
+    h, conv = state
+    y, h_t, conv_t = _mamba_inner(x @ p["w_in"], p, n_state, h, conv)
+    return (y @ p["w_out"]).astype(x.dtype), (h_t, conv_t)
+
+
+def mamba_state_shape(batch, d_inner, n_state, dtype=jnp.bfloat16):
+    return (jax.ShapeDtypeStruct((batch, d_inner, n_state), jnp.float32),
+            jax.ShapeDtypeStruct((batch, CONV_W - 1, d_inner), dtype))
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 (Finch)
+# ---------------------------------------------------------------------------
+
+RWKV_HEAD = 64
+
+
+def init_rwkv6(key, d_model, d_ff, dtype):
+    d, r = d_model, DECAY_RANK
+    ks = jax.random.split(key, 10)
+    sc = 1.0 / math.sqrt(d)
+    return {
+        "time": {
+            "mu": jax.random.uniform(ks[0], (5, d), dtype),   # r,k,v,g,w shifts
+            "w_r": jax.random.normal(ks[1], (d, d), dtype) * sc,
+            "w_k": jax.random.normal(ks[2], (d, d), dtype) * sc,
+            "w_v": jax.random.normal(ks[3], (d, d), dtype) * sc,
+            "w_g": jax.random.normal(ks[4], (d, d), dtype) * sc,
+            "w_o": jax.random.normal(ks[5], (d, d), dtype) * sc,
+            "decay_a": jax.random.normal(ks[6], (d, r), dtype) * sc,
+            "decay_b": jax.random.normal(ks[7], (r, d), dtype) / math.sqrt(r),
+            "w0": jnp.full((d,), -6.0, jnp.float32),          # base decay (slow)
+            "u": jnp.zeros((d,), jnp.float32),                # first-token bonus
+            "ln_x": jnp.ones((d,), dtype),
+        },
+        "channel": {
+            "mu": jax.random.uniform(ks[8], (2, d), dtype),   # r,k shifts
+            "w_r": jax.random.normal(ks[9], (d, d), dtype) * sc,
+            "w_k": jax.random.normal(jax.random.fold_in(key, 11), (d, d_ff), dtype) * sc,
+            "w_v": jax.random.normal(jax.random.fold_in(key, 12), (d_ff, d), dtype)
+                   / math.sqrt(d_ff),
+        },
+    }
+
+
+def _rwkv_time_mix(x, x_prev, p):
+    """Project one token group.  x,x_prev: (B,S,D) with x_prev = shift(x)."""
+    mu = p["mu"]
+
+    def lerp(i):
+        return x + mu[i] * (x_prev - x)
+
+    r = lerp(0) @ p["w_r"]
+    k = lerp(1) @ p["w_k"]
+    v = lerp(2) @ p["w_v"]
+    g = jax.nn.silu(lerp(3) @ p["w_g"])
+    # data-dependent decay (Finch): w = exp(-exp(w0 + lora(x_w)))
+    wx = jnp.tanh(lerp(4) @ p["decay_a"]) @ p["decay_b"]
+    w = jnp.exp(-jnp.exp(p["w0"] + wx.astype(jnp.float32)))   # (B,S,D) in (0,1)
+    return r, k, v, g, w
+
+
+def _rwkv_recurrence(r, k, v, w, u, s0):
+    """Per-head linear recurrence.  r,k,v,w: (B,S,H,N); s0: (B,H,N,N).
+
+    y_t = r_t · (diag(u) k_t v_t^T + S_{t-1});  S_t = diag(w_t) S_{t-1} + k_t v_t^T
+    """
+    def step(s, inp):
+        rt, kt, vt, wt = inp                                  # (B,H,N)
+        kv = kt[..., :, None] * vt[..., None, :]              # (B,H,N,N)
+        y = jnp.einsum("bhn,bhnm->bhm", rt, u[..., None] * kv + s)
+        s = wt[..., None] * s + kv
+        return s, y
+
+    xs = tuple(t.transpose(1, 0, 2, 3) for t in (r, k, v, w))
+    s_t, ys = jax.lax.scan(step, s0, xs)
+    return ys.transpose(1, 0, 2, 3), s_t                      # (B,S,H,N)
+
+
+def rwkv6_time_seq(x, p, x_last=None, s0=None):
+    """Full-sequence time-mix.  x: (B,S,D).  Returns (out, (x_T, S_T))."""
+    b, s, d = x.shape
+    h, n = d // RWKV_HEAD, RWKV_HEAD
+    if x_last is None:
+        x_last = jnp.zeros((b, 1, d), x.dtype)
+    x_prev = jnp.concatenate([x_last, x[:, :-1]], axis=1)
+    r, k, v, g, w = _rwkv_time_mix(x, x_prev, p)
+    rh, kh, vh, wh = (t.reshape(b, s, h, n).astype(jnp.float32) for t in (r, k, v, w))
+    if s0 is None:
+        s0 = jnp.zeros((b, h, n, n), jnp.float32)
+    u = p["u"].reshape(h, n)
+    y, s_t = _rwkv_recurrence(rh, kh, vh, wh, u, s0)
+    y = y.reshape(b, s, d).astype(x.dtype)
+    y = rms_norm(y, p["ln_x"]) * g
+    return y @ p["w_o"], (x[:, -1:], s_t)
+
+
+def rwkv6_channel_seq(x, p, x_last=None):
+    b, s, d = x.shape
+    if x_last is None:
+        x_last = jnp.zeros((b, 1, d), x.dtype)
+    x_prev = jnp.concatenate([x_last, x[:, :-1]], axis=1)
+    mu = p["mu"]
+    xr = x + mu[0] * (x_prev - x)
+    xk = x + mu[1] * (x_prev - x)
+    k = jnp.square(jax.nn.relu(xk @ p["w_k"]))
+    return jax.nn.sigmoid(xr @ p["w_r"]) * (k @ p["w_v"]), x[:, -1:]
+
+
+def rwkv6_state_shape(batch, d_model, dtype=jnp.bfloat16):
+    h = d_model // RWKV_HEAD
+    return {
+        "time_x": jax.ShapeDtypeStruct((batch, 1, d_model), dtype),
+        "time_s": jax.ShapeDtypeStruct((batch, h, RWKV_HEAD, RWKV_HEAD), jnp.float32),
+        "chan_x": jax.ShapeDtypeStruct((batch, 1, d_model), dtype),
+    }

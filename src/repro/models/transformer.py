@@ -1,0 +1,522 @@
+"""Composable decoder/encoder stack covering all ten assigned architectures.
+
+One ``forward`` works for dense / MoE / MLA / SWA / RWKV6 / hybrid / encoder
+models; layers are stacked along a leading axis and executed with
+``lax.scan`` + ``jax.remat`` (full activation recomputation, paper §2.1.1 —
+the boundary activation may be offloaded to host, paper's "checkpointed
+activations in DRAM").  Serving paths (``prefill`` / ``decode_step``) carry an
+explicit per-arch cache pytree whose size is what the long-context claims
+rest on (constant for SSM/RWKV, window-bounded for SWA, full for GQA/MLA).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.ad_checkpoint import checkpoint_name
+
+from .config import ModelConfig
+from .layers import (apply_norm, apply_rope, chunked_attention, decode_attention,
+                     init_mlp, init_norm, mlp)
+from .moe import init_moe, moe_block
+from .ssm import (CONV_W, init_mamba, init_rwkv6, mamba_seq, mamba_step,
+                  mamba_state_shape, rwkv6_channel_seq, rwkv6_state_shape,
+                  rwkv6_time_seq)
+
+Params = Any
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def _init_attn(key, cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    ks = jax.random.split(key, 6)
+    sc = 1.0 / math.sqrt(d)
+    if cfg.attn_kind == "mla":
+        r, h = cfg.kv_lora_rank, cfg.n_heads
+        return {
+            "w_dkv": jax.random.normal(ks[0], (d, r), dtype) * sc,
+            "w_kpe": jax.random.normal(ks[1], (d, cfg.qk_rope_dim), dtype) * sc,
+            "w_uk": jax.random.normal(ks[2], (r, h, cfg.d_head), dtype) / math.sqrt(r),
+            "w_uv": jax.random.normal(ks[3], (r, h, cfg.v_head_dim), dtype) / math.sqrt(r),
+            "w_q": jax.random.normal(ks[4], (d, h, cfg.d_head + cfg.qk_rope_dim), dtype) * sc,
+            "w_o": jax.random.normal(ks[5], (h * cfg.v_head_dim, d), dtype)
+                   / math.sqrt(h * cfg.v_head_dim),
+        }
+    return {
+        "w_q": jax.random.normal(ks[0], (d, cfg.q_dim), dtype) * sc,
+        "w_k": jax.random.normal(ks[1], (d, cfg.kv_dim), dtype) * sc,
+        "w_v": jax.random.normal(ks[2], (d, cfg.kv_dim), dtype) * sc,
+        "w_o": jax.random.normal(ks[3], (cfg.q_dim, d), dtype) / math.sqrt(cfg.q_dim),
+    }
+
+
+def init_layer(key, cfg: ModelConfig, dtype=jnp.bfloat16):
+    ks = jax.random.split(key, 6)
+    p: dict = {"norm1": init_norm(cfg.d_model, cfg.norm_kind, dtype),
+               "norm2": init_norm(cfg.d_model, cfg.norm_kind, dtype)}
+    if cfg.block_kind == "rwkv6":
+        p["rwkv"] = init_rwkv6(ks[0], cfg.d_model, cfg.d_ff, dtype)
+        return p
+    p["attn"] = _init_attn(ks[0], cfg, dtype)
+    if cfg.block_kind == "hybrid":
+        p["mamba"] = init_mamba(ks[1], cfg.d_model, cfg.d_inner, cfg.ssm_state, dtype)
+        p["norm_attn_out"] = init_norm(cfg.d_model, "rmsnorm", dtype)
+        p["norm_mamba_out"] = init_norm(cfg.d_model, "rmsnorm", dtype)
+    if cfg.is_moe:
+        p["moe"] = init_moe(ks[2], cfg, dtype)
+    else:
+        p["mlp"] = init_mlp(ks[2], cfg.d_model, cfg.d_ff, cfg.mlp_kind, dtype)
+    return p
+
+
+def init_params(key, cfg: ModelConfig, dtype=jnp.bfloat16) -> Params:
+    k_emb, k_layers, k_head = jax.random.split(key, 3)
+    layer_keys = jax.random.split(k_layers, cfg.n_layers)
+    layers = jax.vmap(lambda k: init_layer(k, cfg, dtype))(layer_keys)
+    p = {
+        "embed": jax.random.normal(k_emb, (cfg.vocab_size, cfg.d_model), dtype)
+                 * (1.0 / math.sqrt(cfg.d_model)),
+        "layers": layers,
+        "final_norm": init_norm(cfg.d_model, cfg.norm_kind, dtype),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = jax.random.normal(k_head, (cfg.d_model, cfg.vocab_size), dtype) \
+                       * (1.0 / math.sqrt(cfg.d_model))
+    return p
+
+
+def abstract_params(cfg: ModelConfig, dtype=jnp.bfloat16) -> Params:
+    return jax.eval_shape(
+        lambda: init_params(jax.random.PRNGKey(0), cfg, dtype))
+
+
+@functools.lru_cache(maxsize=None)
+def _param_count_cached(name: str) -> int:
+    from .config import get_config
+    tree = abstract_params(get_config(name))
+    return sum(math.prod(l.shape) for l in jax.tree.leaves(tree))
+
+
+def param_count(cfg: ModelConfig) -> int:
+    """Authoritative N (from real init shapes, via eval_shape — no allocation)."""
+    return _param_count_cached(cfg.name)
+
+
+def active_param_count(cfg: ModelConfig) -> int:
+    """Params touched per token: MoE counts top-k routed + shared experts only."""
+    n = param_count(cfg)
+    if not cfg.is_moe:
+        return n
+    tree = abstract_params(cfg)
+    expert_total = sum(
+        math.prod(l.shape)
+        for l in jax.tree.leaves(tree["layers"].get("moe", {}).get("experts", {})))
+    return n - expert_total + expert_total * cfg.experts_per_token // cfg.n_experts
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+def _attention_block(x, p, cfg: ModelConfig, *, q_offset=0, kv_chunk=1024):
+    """Full-sequence attention (train / prefill).  x: (B,S,D)."""
+    b, s, d = x.shape
+    if cfg.attn_kind == "mla":
+        c_kv = x @ p["w_dkv"]                                      # (B,S,r)
+        k_pe = (x @ p["w_kpe"]).reshape(b, s, 1, cfg.qk_rope_dim)
+        k_pe = apply_rope(k_pe, jnp.arange(s) + q_offset, cfg.rope_theta)
+        k_c = jnp.einsum("bsr,rhd->bshd", c_kv, p["w_uk"])         # (B,S,H,dh)
+        v = jnp.einsum("bsr,rhd->bshd", c_kv, p["w_uv"])
+        q = jnp.einsum("bsd,dhe->bshe", x, p["w_q"])               # (B,S,H,dh+rope)
+        q_nope, q_pe = q[..., : cfg.d_head], q[..., cfg.d_head:]
+        q_pe = apply_rope(q_pe, jnp.arange(s) + q_offset, cfg.rope_theta)
+        q = jnp.concatenate([q_nope, q_pe], axis=-1)
+        k = jnp.concatenate([k_c, jnp.broadcast_to(k_pe, (b, s, cfg.n_heads,
+                                                          cfg.qk_rope_dim))], axis=-1)
+        scale = 1.0 / math.sqrt(cfg.d_head + cfg.qk_rope_dim)
+        o = chunked_attention(q, k, v, causal=cfg.causal, q_offset=q_offset,
+                              kv_chunk=kv_chunk, logit_scale=scale,
+                              sliding_window=cfg.sliding_window)
+        return o.reshape(b, s, -1) @ p["w_o"]
+    q = (x @ p["w_q"]).reshape(b, s, cfg.n_heads, cfg.d_head)
+    k = (x @ p["w_k"]).reshape(b, s, cfg.n_kv_heads, cfg.d_head)
+    v = (x @ p["w_v"]).reshape(b, s, cfg.n_kv_heads, cfg.d_head)
+    if cfg.rope:
+        pos = jnp.arange(s) + q_offset
+        q = apply_rope(q, pos, cfg.rope_theta)
+        k = apply_rope(k, pos, cfg.rope_theta)
+    o = chunked_attention(q, k, v, causal=cfg.causal,
+                          sliding_window=cfg.sliding_window,
+                          q_offset=q_offset, kv_chunk=kv_chunk)
+    return o.reshape(b, s, -1) @ p["w_o"]
+
+
+MOE_CHUNK_TOKENS = 65_536
+
+
+def _mlp_block(x, p, cfg: ModelConfig):
+    b, s, d = x.shape
+    if cfg.is_moe:
+        t = b * s
+        flat = x.reshape(t, d)
+        if t <= MOE_CHUNK_TOKENS:
+            return moe_block(flat, p["moe"], cfg).reshape(b, s, d)
+        # long-prefill path: route/dispatch in token chunks so the capacity
+        # buffers stay bounded (per-chunk capacity, standard in streaming MoE)
+        n_chunks = -(-t // MOE_CHUNK_TOKENS)
+        pad = n_chunks * MOE_CHUNK_TOKENS - t
+        if pad:
+            flat = jnp.pad(flat, ((0, pad), (0, 0)))
+        chunks = flat.reshape(n_chunks, MOE_CHUNK_TOKENS, d)
+
+        def body(_, xc):
+            return None, moe_block(xc, p["moe"], cfg)
+
+        _, out = jax.lax.scan(body, None, chunks)
+        return out.reshape(n_chunks * MOE_CHUNK_TOKENS, d)[:t].reshape(b, s, d)
+    return mlp(x, p["mlp"], cfg.mlp_kind)
+
+
+def layer_forward(x, p, cfg: ModelConfig, *, q_offset=0, kv_chunk=1024):
+    """One decoder layer, pre-norm residual.  x: (B,S,D)."""
+    if cfg.block_kind == "rwkv6":
+        h = apply_norm(x, p["norm1"], cfg.norm_kind, cfg.norm_eps)
+        t_out, _ = rwkv6_time_seq(h, p["rwkv"]["time"])
+        x = x + t_out
+        h = apply_norm(x, p["norm2"], cfg.norm_kind, cfg.norm_eps)
+        c_out, _ = rwkv6_channel_seq(h, p["rwkv"]["channel"])
+        return x + c_out
+    h = apply_norm(x, p["norm1"], cfg.norm_kind, cfg.norm_eps)
+    if cfg.block_kind == "hybrid":
+        a = _attention_block(h, p["attn"], cfg, q_offset=q_offset, kv_chunk=kv_chunk)
+        m, _ = mamba_seq(h, p["mamba"], cfg.ssm_state)
+        mix = 0.5 * (apply_norm(a, p["norm_attn_out"], "rmsnorm", cfg.norm_eps)
+                     + apply_norm(m, p["norm_mamba_out"], "rmsnorm", cfg.norm_eps))
+        x = x + mix
+    else:
+        x = x + _attention_block(h, p["attn"], cfg, q_offset=q_offset, kv_chunk=kv_chunk)
+    h = apply_norm(x, p["norm2"], cfg.norm_kind, cfg.norm_eps)
+    return x + _mlp_block(h, p, cfg)
+
+
+# ---------------------------------------------------------------------------
+# Full model: training forward + loss
+# ---------------------------------------------------------------------------
+
+def embed_inputs(params, batch, cfg: ModelConfig):
+    if "embeds" in batch:                      # audio / vlm stubbed frontend
+        return batch["embeds"].astype(params["embed"].dtype)
+    return jnp.take(params["embed"], batch["tokens"], axis=0)
+
+
+def forward(params, batch, cfg: ModelConfig, *,
+            remat: bool = True,
+            remat_policy=None,
+            kv_chunk: int = 1024,
+            constrain=None):
+    """Token/embedding inputs -> final hidden states (B,S,D).
+
+    ``constrain`` (optional) applies a sharding constraint to the layer
+    boundary activation — sequence parallelism lives here."""
+    x = embed_inputs(params, batch, cfg)
+    if constrain is not None:
+        x = constrain(x)
+
+    def body(carry, layer_params):
+        h = checkpoint_name(carry, "layer_boundary")
+        out = layer_forward(h, layer_params, cfg, kv_chunk=kv_chunk)
+        if constrain is not None:
+            out = constrain(out)
+        return out, None
+
+    if remat:
+        body = jax.remat(body, policy=remat_policy, prevent_cse=False)
+    x, _ = jax.lax.scan(body, x, params["layers"])
+    return apply_norm(x, params["final_norm"], cfg.norm_kind, cfg.norm_eps)
+
+
+def lm_head_weights(params, cfg: ModelConfig):
+    return params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+
+
+def chunked_softmax_xent(x, w_head, labels, *, chunk: int = 512,
+                         ignore_index: int = -100):
+    """Cross-entropy without materialising (B,S,V): scan over S chunks with
+    rematerialised logits.  Returns (sum_loss, n_valid)."""
+    b, s, d = x.shape
+    n_chunks = -(-s // chunk)
+    pad = n_chunks * chunk - s
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=ignore_index)
+    xs = x.reshape(b, n_chunks, chunk, d).transpose(1, 0, 2, 3)
+    ls = labels.reshape(b, n_chunks, chunk).transpose(1, 0, 2)
+
+    @functools.partial(jax.remat, prevent_cse=False)
+    def chunk_loss(xc, lc):
+        logits = (xc @ w_head).astype(jnp.float32)             # (B,C,V)
+        lse = jax.scipy.special.logsumexp(logits, axis=-1)
+        valid = lc != ignore_index
+        gold = jnp.take_along_axis(
+            logits, jnp.maximum(lc, 0)[..., None], axis=-1)[..., 0]
+        return jnp.where(valid, lse - gold, 0.0).sum(), valid.sum()
+
+    def body(carry, inp):
+        tot, cnt = carry
+        l, c = chunk_loss(*inp)
+        return (tot + l, cnt + c), None
+
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.float32(0.0), jnp.int32(0)), (xs, ls))
+    return tot, cnt
+
+
+def loss_fn(params, batch, cfg: ModelConfig, *, remat=True, remat_policy=None,
+            kv_chunk: int = 1024, xent_chunk: int = 512, constrain=None):
+    """Mean next-token (or frame-classification) cross-entropy."""
+    x = forward(params, batch, cfg, remat=remat, remat_policy=remat_policy,
+                kv_chunk=kv_chunk, constrain=constrain)
+    tot, cnt = chunked_softmax_xent(x, lm_head_weights(params, cfg),
+                                    batch["labels"], chunk=xent_chunk)
+    return tot / jnp.maximum(cnt, 1)
+
+
+# ---------------------------------------------------------------------------
+# Serving: cache init / prefill / decode
+# ---------------------------------------------------------------------------
+
+def cache_window(cfg: ModelConfig, max_len: int) -> int:
+    """Physical KV length: SWA needs only its window (ring buffer)."""
+    if cfg.attn_kind == "none":
+        return 0
+    if cfg.sliding_window is not None:
+        return min(cfg.sliding_window, max_len)
+    return max_len
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    """Abstract cache spec (ShapeDtypeStruct); zeros_like for a real one."""
+    l = cfg.n_layers
+    cache: dict = {"len": jax.ShapeDtypeStruct((), jnp.int32)}
+    w = cache_window(cfg, max_len)
+    if cfg.block_kind == "rwkv6":
+        cache["rwkv"] = jax.tree.map(
+            lambda sds: jax.ShapeDtypeStruct((l,) + sds.shape, sds.dtype),
+            rwkv6_state_shape(batch, cfg.d_model, dtype))
+        return cache
+    if cfg.attn_kind == "mla":
+        cache["c_kv"] = jax.ShapeDtypeStruct((l, batch, w, cfg.kv_lora_rank), dtype)
+        cache["k_pe"] = jax.ShapeDtypeStruct((l, batch, w, cfg.qk_rope_dim), dtype)
+    else:
+        cache["k"] = jax.ShapeDtypeStruct((l, batch, w, cfg.n_kv_heads, cfg.d_head), dtype)
+        cache["v"] = jax.ShapeDtypeStruct((l, batch, w, cfg.n_kv_heads, cfg.d_head), dtype)
+    if cfg.block_kind == "hybrid":
+        h, conv = mamba_state_shape(batch, cfg.d_inner, cfg.ssm_state, dtype)
+        cache["ssm_h"] = jax.ShapeDtypeStruct((l,) + h.shape, h.dtype)
+        cache["ssm_conv"] = jax.ShapeDtypeStruct((l,) + conv.shape, conv.dtype)
+    return cache
+
+
+def zero_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        init_cache(cfg, batch, max_len, dtype))
+
+
+def _decode_attn_layer(x, p, cfg: ModelConfig, k_all, v_all, layer, pos, window):
+    """One-token attention with in-place cache insert.  x: (B,1,D);
+    k_all/v_all: stacked (L,B,W,KH,Dh) carried through the layer scan so XLA
+    keeps ONE live cache buffer (donated+aliased) instead of scan-ys copies."""
+    b = x.shape[0]
+    q = (x @ p["w_q"]).reshape(b, 1, cfg.n_heads, cfg.d_head)
+    k = (x @ p["w_k"]).reshape(b, 1, cfg.n_kv_heads, cfg.d_head)
+    v = (x @ p["w_v"]).reshape(b, 1, cfg.n_kv_heads, cfg.d_head)
+    if cfg.rope:
+        q = apply_rope(q, pos[None], cfg.rope_theta)
+        k = apply_rope(k, pos[None], cfg.rope_theta)
+    slot = pos % window                        # ring for SWA; identity otherwise
+    k_all = jax.lax.dynamic_update_slice(k_all, k[None], (layer, 0, slot, 0, 0))
+    v_all = jax.lax.dynamic_update_slice(v_all, v[None], (layer, 0, slot, 0, 0))
+    k_cache = jax.lax.dynamic_index_in_dim(k_all, layer, 0, keepdims=False)
+    v_cache = jax.lax.dynamic_index_in_dim(v_all, layer, 0, keepdims=False)
+    n_valid = jnp.minimum(pos + 1, window)
+    # ring buffers are softmax-permutation-safe: mask on validity only
+    o = decode_attention(q, k_cache, v_cache, n_valid)
+    return (o.reshape(b, 1, -1) @ p["w_o"]), k_all, v_all
+
+
+def _decode_mla_layer(x, p, cfg: ModelConfig, ckv_all, kpe_all, layer, pos):
+    b = x.shape[0]
+    c_kv = x @ p["w_dkv"]                                       # (B,1,r)
+    k_pe = (x @ p["w_kpe"]).reshape(b, 1, 1, cfg.qk_rope_dim)
+    k_pe = apply_rope(k_pe, pos[None], cfg.rope_theta).reshape(b, 1, cfg.qk_rope_dim)
+    ckv_all = jax.lax.dynamic_update_slice(ckv_all, c_kv[None], (layer, 0, pos, 0))
+    kpe_all = jax.lax.dynamic_update_slice(kpe_all, k_pe[None], (layer, 0, pos, 0))
+    ckv_cache = jax.lax.dynamic_index_in_dim(ckv_all, layer, 0, keepdims=False)
+    kpe_cache = jax.lax.dynamic_index_in_dim(kpe_all, layer, 0, keepdims=False)
+    from .shard_utils import maybe_constrain
+    from jax.sharding import PartitionSpec as _P
+    ckv_cache = maybe_constrain(ckv_cache, _P(("pod", "data"), "model", None))
+    kpe_cache = maybe_constrain(kpe_cache, _P(("pod", "data"), "model", None))
+    q = jnp.einsum("bsd,dhe->bshe", x, p["w_q"])[:, 0]          # (B,H,dh+rope)
+    q_nope, q_pe = q[..., : cfg.d_head], q[..., cfg.d_head:]
+    q_pe = apply_rope(q_pe[:, None], pos[None], cfg.rope_theta)[:, 0]
+    # absorbed attention: score in the compressed space (B,H,S)
+    q_c = jnp.einsum("bhd,rhd->bhr", q_nope, p["w_uk"])
+    scores = (jnp.einsum("bhr,bsr->bhs", q_c, ckv_cache)
+              + jnp.einsum("bhe,bse->bhs", q_pe, kpe_cache)) \
+        * (1.0 / math.sqrt(cfg.d_head + cfg.qk_rope_dim))
+    scores = maybe_constrain(scores, _P(("pod", "data"), None, "model"))
+    mask = jnp.arange(ckv_cache.shape[1]) <= pos
+    scores = jnp.where(mask[None, None, :], scores.astype(jnp.float32), -1e30)
+    pr = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bhs,bsr->bhr", pr.astype(ckv_cache.dtype), ckv_cache)
+    o = jnp.einsum("bhr,rhd->bhd", ctx, p["w_uv"]).reshape(b, 1, -1)
+    return (o @ p["w_o"]), ckv_all, kpe_all
+
+
+def decode_step(params, cache, tokens, cfg: ModelConfig, *, kv_chunk: int = 1024):
+    """One decoding step.  tokens: (B,) int32 (or (B,1,D) embeds).
+    Returns (logits (B,V), new_cache)."""
+    if tokens.ndim == 1:
+        x = jnp.take(params["embed"], tokens[:, None], axis=0)
+    else:
+        x = tokens.astype(params["embed"].dtype)
+    pos = cache["len"]
+    w = None
+    if cfg.block_kind == "rwkv6":
+        def body(carry, xs):
+            h = carry
+            p, tx, ts, cx = xs
+            hn = apply_norm(h, p["norm1"], cfg.norm_kind, cfg.norm_eps)
+            t_out, (tx2, ts2) = rwkv6_time_seq(hn, p["rwkv"]["time"], tx, ts)
+            h = h + t_out
+            hn = apply_norm(h, p["norm2"], cfg.norm_kind, cfg.norm_eps)
+            c_out, cx2 = rwkv6_channel_seq(hn, p["rwkv"]["channel"], cx)
+            return h + c_out, (tx2, ts2, cx2)
+
+        x, (tx, ts, cx) = jax.lax.scan(
+            body, x, (params["layers"], cache["rwkv"]["time_x"],
+                      cache["rwkv"]["time_s"], cache["rwkv"]["chan_x"]))
+        new_cache = {"len": pos + 1,
+                     "rwkv": {"time_x": tx, "time_s": ts, "chan_x": cx}}
+    elif cfg.attn_kind == "mla":
+        def body(carry, p):
+            h, ckv, kpe, l = carry
+            hn = apply_norm(h, p["norm1"], cfg.norm_kind, cfg.norm_eps)
+            a, ckv, kpe = _decode_mla_layer(hn, p["attn"], cfg, ckv, kpe, l, pos)
+            h = h + a
+            hn = apply_norm(h, p["norm2"], cfg.norm_kind, cfg.norm_eps)
+            return (h + _mlp_block(hn, p, cfg), ckv, kpe, l + 1), None
+
+        (x, ckv, kpe, _), _ = jax.lax.scan(
+            body, (x, cache["c_kv"], cache["k_pe"], jnp.int32(0)),
+            params["layers"])
+        new_cache = {"len": pos + 1, "c_kv": ckv, "k_pe": kpe}
+    else:
+        w = cache["k"].shape[2]
+
+        def body(carry, xs):
+            if cfg.block_kind == "hybrid":
+                (h, kc, vc, l), (p, sh_x, sc_x) = carry, xs
+            else:
+                (h, kc, vc, l), p = carry, xs
+            hn = apply_norm(h, p["norm1"], cfg.norm_kind, cfg.norm_eps)
+            a, kc, vc = _decode_attn_layer(hn, p["attn"], cfg, kc, vc, l, pos, w)
+            if cfg.block_kind == "hybrid":
+                m, (sh, sc) = mamba_step(hn, p["mamba"], cfg.ssm_state, (sh_x, sc_x))
+                a = 0.5 * (apply_norm(a, p["norm_attn_out"], "rmsnorm", cfg.norm_eps)
+                           + apply_norm(m, p["norm_mamba_out"], "rmsnorm", cfg.norm_eps))
+                h = h + a
+                hn = apply_norm(h, p["norm2"], cfg.norm_kind, cfg.norm_eps)
+                return (h + _mlp_block(hn, p, cfg), kc, vc, l + 1), (sh, sc)
+            h = h + a
+            hn = apply_norm(h, p["norm2"], cfg.norm_kind, cfg.norm_eps)
+            return (h + _mlp_block(hn, p, cfg), kc, vc, l + 1), None
+
+        carry0 = (x, cache["k"], cache["v"], jnp.int32(0))
+        if cfg.block_kind == "hybrid":
+            (x, kc, vc, _), (sh, sc) = jax.lax.scan(
+                body, carry0, (params["layers"], cache["ssm_h"], cache["ssm_conv"]))
+            new_cache = {"len": pos + 1, "k": kc, "v": vc,
+                         "ssm_h": sh, "ssm_conv": sc}
+        else:
+            (x, kc, vc, _), _ = jax.lax.scan(body, carry0, params["layers"])
+            new_cache = {"len": pos + 1, "k": kc, "v": vc}
+    x = apply_norm(x, params["final_norm"], cfg.norm_kind, cfg.norm_eps)
+    logits = (x[:, 0] @ lm_head_weights(params, cfg)).astype(jnp.float32)
+    return logits, new_cache
+
+
+def prefill(params, batch, cfg: ModelConfig, max_len: int, *, kv_chunk=1024,
+            dtype=jnp.bfloat16, constrain=None):
+    """Run the prompt through the model, filling the cache.  Returns
+    (final hidden (B,S,D), cache)."""
+    x = embed_inputs(params, batch, cfg)
+    b, s, _ = x.shape
+    w = cache_window(cfg, max_len)
+    if constrain is not None:
+        x = constrain(x)
+
+    def body(carry, p):
+        h = carry if constrain is None else constrain(carry)
+        if cfg.block_kind == "rwkv6":
+            hn = apply_norm(h, p["norm1"], cfg.norm_kind, cfg.norm_eps)
+            t_out, (tx, ts) = rwkv6_time_seq(hn, p["rwkv"]["time"])
+            h = h + t_out
+            hn = apply_norm(h, p["norm2"], cfg.norm_kind, cfg.norm_eps)
+            c_out, cx = rwkv6_channel_seq(hn, p["rwkv"]["channel"])
+            return h + c_out, {"time_x": tx, "time_s": ts, "chan_x": cx}
+        hn = apply_norm(h, p["norm1"], cfg.norm_kind, cfg.norm_eps)
+        out = {}
+        if cfg.attn_kind == "mla":
+            c_kv = hn @ p["attn"]["w_dkv"]
+            k_pe = (hn @ p["attn"]["w_kpe"]).reshape(b, s, 1, cfg.qk_rope_dim)
+            k_pe = apply_rope(k_pe, jnp.arange(s), cfg.rope_theta).reshape(b, s, -1)
+            out["c_kv"] = _fit_window(c_kv, w, dtype)
+            out["k_pe"] = _fit_window(k_pe, w, dtype)
+            a = _attention_block(hn, p["attn"], cfg, kv_chunk=kv_chunk)
+        else:
+            k = (hn @ p["attn"]["w_k"]).reshape(b, s, cfg.n_kv_heads, cfg.d_head)
+            v = (hn @ p["attn"]["w_v"]).reshape(b, s, cfg.n_kv_heads, cfg.d_head)
+            if cfg.rope:
+                k = apply_rope(k, jnp.arange(s), cfg.rope_theta)
+            out["k"] = _fit_window(k, w, dtype)
+            out["v"] = _fit_window(v, w, dtype)
+            a = _attention_block(hn, p["attn"], cfg, kv_chunk=kv_chunk)
+        if cfg.block_kind == "hybrid":
+            m, (sh, sc) = mamba_seq(hn, p["mamba"], cfg.ssm_state)
+            a = 0.5 * (apply_norm(a, p["norm_attn_out"], "rmsnorm", cfg.norm_eps)
+                       + apply_norm(m, p["norm_mamba_out"], "rmsnorm", cfg.norm_eps))
+            out["ssm_h"], out["ssm_conv"] = sh, sc
+        h = h + a
+        hn = apply_norm(h, p["norm2"], cfg.norm_kind, cfg.norm_eps)
+        return h + _mlp_block(hn, p, cfg), out
+
+    x, per_layer = jax.lax.scan(body, x, params["layers"])
+    cache = dict(per_layer) if cfg.block_kind != "rwkv6" else {"rwkv": per_layer}
+    cache["len"] = jnp.int32(s)
+    x = apply_norm(x, params["final_norm"], cfg.norm_kind, cfg.norm_eps)
+    return x, cache
+
+
+def _fit_window(t, w, dtype):
+    """Keep the last ``w`` positions along axis 1 (ring-equivalent for SWA).
+
+    For SWA the prompt suffix modulo-aligns with the decode ring: slot
+    ``pos % w`` of position ``pos`` — we roll so future inserts land right."""
+    s = t.shape[1]
+    t = t.astype(dtype)
+    if s == w:
+        return t
+    if s > w:
+        tail = jax.lax.dynamic_slice_in_dim(t, s - w, w, axis=1)
+        # align ring phase: position p sits at slot p % w
+        return jnp.roll(tail, shift=s % w, axis=1)
+    pad = [(0, 0)] * t.ndim
+    pad[1] = (0, w - s)
+    return jnp.pad(t, pad)

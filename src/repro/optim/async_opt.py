@@ -1,0 +1,65 @@
+"""Staleness-1 asynchronous optimizer (paper §2.1.2, §3.2, §4.3) — the
+jit-compatible realization.
+
+Inside one XLA program the paper's "CPU applies iteration-T gradients while
+the GPU computes T+1" becomes *data independence*: the update consuming the
+**pending** gradients (from iteration T-1) shares no dependency with the
+current forward/backward, so XLA schedules them concurrently.  The params
+used by iteration T are exactly those produced after iteration T-2's
+gradients — the same staleness-1 semantics the event protocol
+(``repro.core.consistency``) enforces for the multi-worker driver, verified
+against the same oracle in tests.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .adam import OptConfig, apply_updates, init_opt_state
+
+
+class AsyncOptState(NamedTuple):
+    opt: Any          # inner optimizer state (master, moments, step)
+    pending: Any      # gradients of the previous iteration (or zeros)
+    has_pending: Any  # bool scalar
+
+
+def init_async(params, cfg: OptConfig) -> AsyncOptState:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.bfloat16), params)
+    return AsyncOptState(init_opt_state(params, cfg), zeros, jnp.bool_(False))
+
+
+def async_apply(params, state: AsyncOptState, new_grads, cfg: OptConfig):
+    """Apply the PENDING grads (iteration T-1), stash the new ones.
+
+    Returns (params for iteration T+1, new state, metrics).  The returned
+    params reflect grads up to T-1 — one step stale, per the paper.
+    """
+    def do_update(_):
+        return apply_updates(state.opt, state.pending, cfg, param_like=params)
+
+    def skip(_):
+        return (params, state.opt,
+                {"grad_norm": jnp.float32(0), "step": state.opt["step"]})
+
+    new_params, new_opt, metrics = jax.lax.cond(
+        state.has_pending, do_update, skip, None)
+    stash = jax.tree.map(lambda g: g.astype(jnp.bfloat16), new_grads)
+    return new_params, AsyncOptState(new_opt, stash, jnp.bool_(True)), metrics
+
+
+def flush(params, state: AsyncOptState, cfg: OptConfig):
+    """Drain the pending gradients (end of training / checkpoint boundary)."""
+    def do_update(_):
+        return apply_updates(state.opt, state.pending, cfg, param_like=params)
+
+    def skip(_):
+        return (params, state.opt,
+                {"grad_norm": jnp.float32(0), "step": state.opt["step"]})
+
+    new_params, new_opt, metrics = jax.lax.cond(
+        state.has_pending, do_update, skip, None)
+    zeros = jax.tree.map(lambda g: jnp.zeros_like(g), state.pending)
+    return new_params, AsyncOptState(new_opt, zeros, jnp.bool_(False)), metrics

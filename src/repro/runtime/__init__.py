@@ -1,0 +1,2 @@
+from .fault_tolerance import (FaultTolerantLoop, HeartbeatMonitor,  # noqa: F401
+                              StragglerPolicy)

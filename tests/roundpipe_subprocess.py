@@ -1,0 +1,102 @@
+"""Subprocess body for RoundPipe dispatch correctness (needs 8 host devices
+set BEFORE jax init, so it cannot run in the main pytest process).
+
+Compares the shard_map ring pipeline's loss and gradients against the plain
+single-program reference on identical fp32 parameters.
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.configs import smoke_config  # noqa: E402
+from repro.core.dispatch import (build_roundpipe_train_step,  # noqa: E402
+                                 init_roundpipe_state, roundpipe_param_specs)
+from repro.launch.steps import StepConfig  # noqa: E402
+from repro.models import transformer as T  # noqa: E402
+from repro.models.config import get_config  # noqa: E402
+from repro.optim import OptConfig  # noqa: E402
+import dataclasses  # noqa: E402
+
+
+def main():
+    arch = sys.argv[1] if len(sys.argv) > 1 else "qwen3-1.7b"
+    cfg = smoke_config(get_config(arch))
+    cfg = dataclasses.replace(cfg, n_layers=8, name=cfg.name + "-rp")
+    n_model = 4
+    mesh = jax.make_mesh((2, n_model), ("data", "model"))
+    step_cfg = StepConfig(strategy="roundpipe", async_optimizer=False,
+                          xent_chunk=8, kv_chunk=8, opt=OptConfig(lr=1e-3))
+
+    key = jax.random.PRNGKey(0)
+    # fp32 params for tight comparison
+    params = T.init_params(key, cfg, dtype=jnp.float32)
+    b, s = 8, 16
+    if cfg.frontend:
+        batch = {"embeds": jax.random.normal(key, (b, s, cfg.d_model), jnp.float32)}
+    else:
+        batch = {"tokens": jax.random.randint(key, (b, s), 0, cfg.vocab_size)}
+    batch["labels"] = jax.random.randint(jax.random.fold_in(key, 1), (b, s),
+                                         0, cfg.vocab_size)
+
+    # ---- reference loss & grads (single program, no pipeline) ---------------
+    def ref_loss(p):
+        return T.loss_fn(p, batch, cfg, remat=False, xent_chunk=8, kv_chunk=8)
+
+    ref_l, ref_g = jax.value_and_grad(ref_loss)(params)
+
+    # ---- roundpipe ----------------------------------------------------------
+    from repro.core.dispatch import roundpipe_forward_backward
+    import functools
+    body = functools.partial(roundpipe_forward_backward, cfg=cfg,
+                             n_workers=n_model, xent_chunk=8, kv_chunk=8)
+    abstract = jax.tree.map(lambda x: x, params)
+    pspecs = roundpipe_param_specs(cfg, abstract)
+    from jax.sharding import PartitionSpec as P
+    bspecs = jax.tree.map(lambda leaf: P("model", *([None] * (leaf.ndim - 1))),
+                          batch)
+    mapped = jax.jit(jax.shard_map(
+        body, mesh=mesh, axis_names={"model"},
+        in_specs=(pspecs, bspecs),
+        out_specs=(jax.tree.map(lambda _: P() , pspecs) if False else _grad_specs(pspecs, params), P(), P()),
+        check_vma=False))
+    with mesh:
+        rp_g, rp_loss, rp_tokens = mapped(params, batch)
+
+    print("ref loss", float(ref_l), "rp loss", float(rp_loss))
+    np.testing.assert_allclose(float(rp_loss), float(ref_l), rtol=1e-4)
+    assert int(rp_tokens) == b * s
+
+    flat_ref = jax.tree_util.tree_flatten_with_path(ref_g)[0]
+    flat_rp = jax.tree_util.tree_flatten_with_path(rp_g)[0]
+    ref_map = {jax.tree_util.keystr(k): v for k, v in flat_ref}
+    rp_map = {jax.tree_util.keystr(k): v for k, v in flat_rp}
+    assert set(ref_map) == set(rp_map), (set(ref_map) ^ set(rp_map))
+    worst = 0.0
+    for k, rv in ref_map.items():
+        gv = np.asarray(rp_map[k], np.float32)
+        rv = np.asarray(rv, np.float32)
+        denom = np.abs(rv).max() + 1e-6
+        err = np.abs(gv - rv).max() / denom
+        worst = max(worst, err)
+        if err > 5e-3:
+            print("MISMATCH", k, err)
+    print("worst rel grad err:", worst)
+    assert worst < 5e-3, worst
+    print("ROUNDPIPE_DISPATCH_OK")
+
+
+def _grad_specs(pspecs, params):
+    if "lm_head" in params:
+        return pspecs
+    return {k: pspecs[k] for k in ("embed", "layers", "final_norm")}
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,179 @@
+"""Schedule generator + simulator tests (paper §3.2, §3.3, Fig. 15)."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.schedule import (
+    Schedule,
+    gpipe_schedule,
+    interleaved_1f1b_schedule,
+    looped_bfs_schedule,
+    one_f_one_b_schedule,
+    roundpipe_schedule,
+    theoretical_bubble_roundpipe,
+    validate,
+)
+from repro.core.simulator import simulate, steady_state_bubble
+
+
+def uniform(n_stages, t=1.0):
+    return [t] * n_stages
+
+
+class TestRoundPipeSchedule:
+    def test_device_assignment_is_round_robin(self):
+        sched = roundpipe_schedule(4, 8, uniform(4), uniform(4), round_size=4)
+        validate(sched)
+        # slot i of round r runs on (g0 + r*S + i) % N with g0=0, S=8
+        for t in sched.tasks:
+            rnd = t.microbatch // 4
+            assert t.device == (rnd * 8 + t.stage) % 4
+
+    def test_every_microbatch_hits_every_slot_once(self):
+        sched = roundpipe_schedule(4, 8, uniform(3), uniform(5), round_size=4)
+        seen = {}
+        for t in sched.tasks:
+            seen.setdefault(t.microbatch, []).append(t.stage)
+        for mb, slots in seen.items():
+            assert sorted(slots) == list(range(8)), mb
+
+    def test_uniform_bubble_matches_paper_formula(self):
+        n, m = 4, 16
+        fwd, bwd = uniform(4), uniform(4)
+        s = len(fwd) + len(bwd)
+        sched = roundpipe_schedule(n, m, fwd, bwd, round_size=4)
+        res = simulate(sched)
+        expect = theoretical_bubble_roundpipe(n, m, s)
+        assert res.bubble_ratio == pytest.approx(expect, rel=1e-9)
+
+    def test_async_steady_state_is_bubble_free(self):
+        n, m = 8, 16
+        sched = roundpipe_schedule(n, m, uniform(6), uniform(6), round_size=8, iterations=3)
+        bub = steady_state_bubble(sched, iteration=1)
+        assert bub < 0.01, bub
+
+    def test_round_chaining_never_drains(self):
+        """Across rounds the slot->device map must continue, not reset."""
+        sched = roundpipe_schedule(4, 16, uniform(4), uniform(4), round_size=4)
+        res = simulate(sched)
+        # with M_R >= N and uniform t, every device is continuously busy
+        # between its first and last task
+        starts, finishes = {}, {}
+        for t in sched.tasks:
+            starts.setdefault(t.device, []).append(res.start[t.key])
+            finishes.setdefault(t.device, []).append(res.finish[t.key])
+        for d in range(4):
+            span = max(finishes[d]) - min(starts[d])
+            assert span == pytest.approx(res.busy[d], rel=1e-9)
+
+    def test_rejects_round_smaller_than_devices(self):
+        with pytest.raises(ValueError):
+            roundpipe_schedule(8, 8, uniform(4), uniform(4), round_size=4)
+
+
+class TestClassicSchedules:
+    @pytest.mark.parametrize("maker", [gpipe_schedule, one_f_one_b_schedule])
+    def test_single_stage_per_device(self, maker):
+        sched = maker(4, 8, uniform(4), uniform(4, 3.0))
+        validate(sched)
+        res = simulate(sched)
+        assert res.makespan >= 8 * (1 + 3)  # critical path through one device
+
+    def test_gpipe_bubble_formula(self):
+        # uniform f=b=1: bubble = (N-1)/(M+N-1) per phase, same overall
+        n, m = 4, 8
+        res = simulate(gpipe_schedule(n, m, uniform(n), uniform(n)))
+        expect = (n - 1) / (m + n - 1)
+        assert res.bubble_ratio == pytest.approx(expect, rel=1e-9)
+
+    def test_1f1b_same_bubble_as_gpipe_uniform(self):
+        n, m = 4, 8
+        g = simulate(gpipe_schedule(n, m, uniform(n), uniform(n)))
+        f = simulate(one_f_one_b_schedule(n, m, uniform(n), uniform(n)))
+        assert f.bubble_ratio == pytest.approx(g.bubble_ratio, rel=1e-6)
+
+    def test_looped_bfs_bubble_shrinks_with_more_stages(self):
+        n, m = 4, 8
+        b1 = simulate(looped_bfs_schedule(n, m, uniform(n), uniform(n))).bubble_ratio
+        b2 = simulate(looped_bfs_schedule(n, m, uniform(2 * n), uniform(2 * n))).bubble_ratio
+        assert b2 < b1
+
+    def test_interleaved_1f1b_valid_and_better_than_1f1b(self):
+        n, m = 4, 8
+        sched = interleaved_1f1b_schedule(n, m, uniform(2 * n, 0.5), uniform(2 * n, 0.5))
+        validate(sched)
+        res = simulate(sched)
+        base = simulate(one_f_one_b_schedule(n, m, uniform(n), uniform(n)))
+        assert res.bubble_ratio < base.bubble_ratio
+
+
+class TestImbalance:
+    """The paper's motivating case: a heavy LM-head stage (Fig. 1, Fig. 3)."""
+
+    def _heavy_head_costs(self, s):
+        f = [1.0] * (s - 1) + [2.5]   # last stage (head) is 2.5x
+        b = [3.0] * (s - 1) + [7.5]
+        return f, b
+
+    def test_roundpipe_beats_looped_bfs_under_imbalance(self):
+        n, m = 4, 16
+        f, b = self._heavy_head_costs(n)
+        bfs = simulate(looped_bfs_schedule(n, m, f, b)).bubble_ratio
+        # RoundPipe rebalances via asymmetric splitting: 8 fwd slots of ~equal
+        # cost, 6 bwd slots -> feed near-uniform costs (partitioner's output)
+        total_f, total_b = sum(f), sum(b)
+        sf, sb = 6, 5
+        rp = simulate(roundpipe_schedule(
+            n, m, [total_f / sf] * sf, [total_b / sb] * sb, round_size=4)).bubble_ratio
+        assert rp < bfs
+
+    def test_bottleneck_stage_dominates_looped_bfs(self):
+        n, m = 4, 16
+        f, b = self._heavy_head_costs(n)
+        res = simulate(looped_bfs_schedule(n, m, f, b))
+        # makespan is at least the bottleneck device's serial work
+        assert res.makespan >= m * (f[-1] + b[-1])
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(2, 6),
+    rounds=st.integers(1, 3),
+    sf=st.integers(1, 6),
+    sb=st.integers(1, 6),
+)
+def test_roundpipe_schedule_properties(n, rounds, sf, sb):
+    m = n * rounds
+    sched = roundpipe_schedule(n, m, uniform(sf), uniform(sb), round_size=n)
+    validate(sched)
+    res = simulate(sched)
+    # conservation: busy time equals total work
+    assert sum(res.busy) == pytest.approx(sched.total_work)
+    # makespan bounded below by critical path and work/device
+    assert res.makespan >= sched.total_work / n - 1e-9
+    assert res.makespan >= sf + sb - 1e-9
+    # exact paper formula under uniform costs and M_R = N
+    expect = theoretical_bubble_roundpipe(n, m, sf + sb)
+    assert res.bubble_ratio == pytest.approx(expect, rel=1e-9)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(2, 5),
+    m_mult=st.integers(1, 3),
+    costs=st.lists(st.floats(0.1, 5.0), min_size=2, max_size=5),
+)
+def test_simulator_respects_dependencies(n, m_mult, costs):
+    m = n * m_mult
+    sched = roundpipe_schedule(n, m, list(costs), list(costs), round_size=n)
+    res = simulate(sched)
+    by_key = {t.key: t for t in sched.tasks}
+    for t in sched.tasks:
+        for dep in t.deps:
+            assert res.finish[dep] <= res.start[t.key] + 1e-9, (t.key, dep)
+    # per-device serial execution
+    for d in range(n):
+        dev = sorted((res.start[t.key], res.finish[t.key]) for t in sched.tasks if t.device == d)
+        for (s1, f1), (s2, _) in zip(dev, dev[1:]):
+            assert f1 <= s2 + 1e-9

@@ -1,0 +1,82 @@
+"""LPT transfer-window packing tests (paper §4.2.2)."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.transfer import TransferItem, lpt_pack, plan_stage_transfers, split_oversized
+
+
+class TestSplitOversized:
+    def test_small_items_untouched(self):
+        items = [TransferItem("a", 10), TransferItem("b", 5)]
+        assert split_oversized(items, 16) == items
+
+    def test_large_item_split_evenly(self):
+        out = split_oversized([TransferItem("lm_head", 100)], 30)
+        assert len(out) == 4
+        assert sum(c.bytes for c in out) == 100
+        assert all(c.chunk_of == "lm_head" for c in out)
+        assert max(c.bytes for c in out) - min(c.bytes for c in out) <= 1
+
+
+class TestLptPack:
+    def test_all_assigned(self):
+        items = [TransferItem(f"t{i}", 10 * (i + 1)) for i in range(7)]
+        plan = lpt_pack(items, 3)
+        assert plan.total == sum(i.bytes for i in items)
+        names = sorted(c.name for w in plan.windows for c in w)
+        assert names == sorted(i.name for i in items)
+
+    def test_graham_bound(self):
+        items = [TransferItem(f"t{i}", s) for i, s in enumerate([31, 29, 17, 13, 11, 7, 5])]
+        plan = lpt_pack(items, 3)
+        total = sum(i.bytes for i in items)
+        assert plan.max_load <= total / 3 + max(i.bytes for i in items)
+
+    def test_deterministic(self):
+        items = [TransferItem(f"t{i}", 10) for i in range(6)]
+        a = lpt_pack(items, 3)
+        b = lpt_pack(list(items), 3)
+        assert a.loads == b.loads
+        assert [[c.name for c in w] for w in a.windows] == [[c.name for c in w] for w in b.windows]
+
+
+class TestPlanStageTransfers:
+    def test_lm_head_chunked_to_fit(self):
+        """The paper's example: the LM head is split so no window blocks."""
+        params = {"lm_head": 1000, "layer0": 50, "layer1": 50}
+        plan = plan_stage_transfers(params, n_microbatches=8, window_capacity_bytes=150)
+        assert plan.max_load <= 150
+        assert plan.total == 1100
+
+    def test_overflow_raises(self):
+        with pytest.raises(OverflowError):
+            plan_stage_transfers({"w": 1000}, n_microbatches=2, window_capacity_bytes=100)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    sizes=st.lists(st.integers(1, 10_000), min_size=1, max_size=40),
+    n_windows=st.integers(1, 12),
+)
+def test_lpt_properties(sizes, n_windows):
+    items = [TransferItem(f"t{i}", s) for i, s in enumerate(sizes)]
+    plan = lpt_pack(items, n_windows)
+    # conservation
+    assert plan.total == sum(sizes)
+    # Graham bound: max load <= avg + max item
+    assert plan.max_load <= sum(sizes) / n_windows + max(sizes) + 1e-9
+    # loads match window contents
+    for load, win in zip(plan.loads, plan.windows):
+        assert load == sum(c.bytes for c in win)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    sizes=st.lists(st.integers(1, 10_000), min_size=1, max_size=20),
+    limit=st.integers(100, 5_000),
+)
+def test_split_conserves_bytes(sizes, limit):
+    items = [TransferItem(f"t{i}", s) for i, s in enumerate(sizes)]
+    out = split_oversized(items, limit)
+    assert sum(c.bytes for c in out) == sum(sizes)
+    assert all(c.bytes <= limit for c in out)

@@ -1,0 +1,73 @@
+"""Roofline cost-model invariants (benchmarks/cost_model.py)."""
+import sys
+from pathlib import Path
+
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+from benchmarks.cost_model import (CHIPS_PER_POD, serve_cost, train_cost)
+from repro.configs import ASSIGNED
+from repro.configs.shapes import SHAPES, cell_status
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_terms_positive_and_finite(arch):
+    for shape in SHAPES:
+        if not cell_status(arch, shape)[0]:
+            continue
+        c = train_cost(arch, shape) if SHAPES[shape].step == "train" \
+            else serve_cost(arch, shape)
+        assert c.compute_s > 0 and c.memory_s > 0 and c.collective_s > 0
+        assert 0 < c.useful_ratio <= 1.05, (arch, shape, c.useful_ratio)
+        assert 0 < c.roofline_fraction <= 1.05, (arch, shape)
+        assert c.dominant in ("compute", "memory", "collective")
+
+
+def test_useful_ratio_counts_remat_waste():
+    """Training pays full recompute: useful ratio must be < 1 for dense."""
+    c = train_cost("stablelm-12b", "train_4k")
+    assert c.useful_ratio < 0.8
+
+
+def test_decode_is_never_compute_bound():
+    for arch in ASSIGNED:
+        if not cell_status(arch, "decode_32k")[0]:
+            continue
+        c = serve_cost(arch, "decode_32k")
+        assert c.dominant != "compute", arch
+
+
+def test_pure_dp_removes_collective_dominance_small_models():
+    base = train_cost("hymba-1.5b", "train_4k")
+    pd = train_cost("hymba-1.5b", "train_4k", layout="pure_dp")
+    assert base.dominant == "collective"
+    assert pd.dominant == "compute"
+    assert pd.roofline_fraction > 2 * base.roofline_fraction
+
+
+def test_ring_unfavourable_for_sparse_moe():
+    """The C2 finding: full-ring streaming loses for high-sparsity MoE."""
+    base = train_cost("mixtral-8x7b", "train_4k")
+    ring = train_cost("mixtral-8x7b", "train_4k", ring_weights=True)
+    assert ring.collective_s > base.collective_s
+
+
+def test_ring_favourable_for_small_dense():
+    base = train_cost("hymba-1.5b", "train_4k")
+    ring = train_cost("hymba-1.5b", "train_4k", ring_weights=True)
+    assert ring.collective_s < base.collective_s
+
+
+def test_flash_attention_reduces_compute_for_causal():
+    base = train_cost("internvl2-76b", "train_4k")
+    fl = train_cost("internvl2-76b", "train_4k", flash_attention=True)
+    assert fl.compute_s < base.compute_s
+
+
+def test_residency_fits_v5e():
+    """Every runnable train cell's analytic residency fits 16 GB/chip."""
+    for arch in ASSIGNED:
+        c = train_cost(arch, "train_4k")
+        total = sum(c.device_bytes.values())
+        assert total < 16e9, (arch, total / 2**30)

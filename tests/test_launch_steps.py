@@ -1,0 +1,84 @@
+"""Launch-layer integration: step builders lower/compile on a small mesh in a
+subprocess (device count must precede jax init)."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def run_py(body: str, timeout=900):
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import sys
+        sys.path.insert(0, {src!r})
+        import jax, jax.numpy as jnp
+        from repro.configs import smoke_config
+        from repro.launch.mesh import make_mesh
+        from repro.launch.steps import (StepConfig, abstract_train_state,
+                                        build_decode_step, build_prefill_step,
+                                        build_train_step)
+        from repro.models import transformer as T
+        from repro.models.config import get_config
+        mesh = make_mesh((2, 4), ("data", "model"))
+    """).format(src=os.path.abspath(SRC)) + textwrap.dedent(body)
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, timeout=timeout)
+    assert r.returncode == 0, r.stderr[-3000:]
+    return r.stdout
+
+
+@pytest.mark.parametrize("arch", ["qwen3-1.7b", "mixtral-8x7b", "hymba-1.5b",
+                                  "hubert-xlarge"])
+def test_train_step_compiles_small_mesh(arch):
+    run_py(f"""
+        cfg = smoke_config(get_config({arch!r}))
+        scfg = StepConfig(grad_accum=2, kv_chunk=16, xent_chunk=16)
+        with mesh:
+            step, ssh, bsh = build_train_step(cfg, mesh, scfg, 8, 32)
+            from repro.configs.shapes import input_specs
+            state = abstract_train_state(cfg, scfg)
+            batch = {{"tokens": jax.ShapeDtypeStruct((8, 32), jnp.int32),
+                     "labels": jax.ShapeDtypeStruct((8, 32), jnp.int32)}}
+            if cfg.frontend:
+                batch = {{"embeds": jax.ShapeDtypeStruct((8, 32, cfg.d_model), jnp.bfloat16),
+                         "labels": batch["labels"]}}
+            c = step.lower(state, batch).compile()
+            print("COMPILED", c.memory_analysis().temp_size_in_bytes)
+    """)
+
+
+@pytest.mark.parametrize("arch", ["qwen3-1.7b", "rwkv6-7b", "deepseek-v2-236b"])
+def test_serve_steps_compile_small_mesh(arch):
+    run_py(f"""
+        cfg = smoke_config(get_config({arch!r}))
+        scfg = StepConfig(kv_chunk=16, xent_chunk=16)
+        with mesh:
+            pre, _, _, _ = build_prefill_step(cfg, mesh, scfg, 8, 64)
+            c1 = pre.lower(T.abstract_params(cfg),
+                           {{"tokens": jax.ShapeDtypeStruct((8, 64), jnp.int32)}}).compile()
+            dec, _, _, _ = build_decode_step(cfg, mesh, scfg, 8, 64)
+            cache = T.init_cache(cfg, 8, 64)
+            c2 = dec.lower(T.abstract_params(cfg), cache,
+                           jax.ShapeDtypeStruct((8,), jnp.int32)).compile()
+            print("COMPILED")
+    """)
+
+
+def test_pure_dp_variant_compiles():
+    run_py("""
+        cfg = smoke_config(get_config("hymba-1.5b"))
+        scfg = StepConfig(grad_accum="auto", pure_dp=True, kv_chunk=16,
+                          xent_chunk=16)
+        with mesh:
+            step, ssh, bsh = build_train_step(cfg, mesh, scfg, 8, 32)
+            state = abstract_train_state(cfg, scfg)
+            batch = {"tokens": jax.ShapeDtypeStruct((8, 32), jnp.int32),
+                     "labels": jax.ShapeDtypeStruct((8, 32), jnp.int32)}
+            step.lower(state, batch).compile()
+            print("COMPILED")
+    """)

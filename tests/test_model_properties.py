@@ -1,0 +1,148 @@
+"""Property-based tests on model-layer invariants (hypothesis)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models.layers import (apply_rope, chunked_attention, decode_attention,
+                                 rms_norm)
+from repro.kernels.ref import flash_attention_ref
+from repro.models import moe as moe_mod
+from repro.models.config import get_config
+from repro.configs import smoke_config
+
+KEY = jax.random.PRNGKey(7)
+
+
+class TestRope:
+    @settings(max_examples=10, deadline=None)
+    @given(s=st.integers(2, 32), d=st.sampled_from([8, 16, 32]))
+    def test_preserves_norm(self, s, d):
+        x = jax.random.normal(KEY, (1, s, 2, d))
+        y = apply_rope(x, jnp.arange(s))
+        np.testing.assert_allclose(
+            np.linalg.norm(np.asarray(x), axis=-1),
+            np.linalg.norm(np.asarray(y), axis=-1), rtol=1e-5)
+
+    def test_relative_position_property(self):
+        """q_i . k_j after RoPE depends only on (i - j)."""
+        d = 16
+        q = jax.random.normal(KEY, (1, 1, 1, d))
+        k = jax.random.normal(jax.random.fold_in(KEY, 1), (1, 1, 1, d))
+
+        def dot_at(i, j):
+            qr = apply_rope(q, jnp.array([i]))
+            kr = apply_rope(k, jnp.array([j]))
+            return float(jnp.sum(qr * kr))
+
+        assert dot_at(5, 3) == pytest.approx(dot_at(12, 10), rel=1e-5)
+        assert dot_at(7, 0) == pytest.approx(dot_at(27, 20), rel=1e-4)
+
+
+class TestAttentionProperties:
+    @settings(max_examples=10, deadline=None)
+    @given(s=st.integers(4, 48), kh=st.sampled_from([1, 2]),
+           g=st.sampled_from([1, 3]), chunk=st.sampled_from([4, 16, 64]))
+    def test_chunked_equals_reference(self, s, kh, g, chunk):
+        h, d = kh * g, 8
+        ks = jax.random.split(jax.random.fold_in(KEY, s * kh * g * chunk), 3)
+        q = jax.random.normal(ks[0], (2, s, h, d))
+        k = jax.random.normal(ks[1], (2, s, kh, d))
+        v = jax.random.normal(ks[2], (2, s, kh, d))
+        out = chunked_attention(q, k, v, causal=True, kv_chunk=chunk)
+        ref = flash_attention_ref(q, k, v, causal=True)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=2e-5, atol=2e-5)
+
+    def test_causality(self):
+        """Output at position i must not depend on tokens after i."""
+        s, d = 16, 8
+        ks = jax.random.split(KEY, 3)
+        q = jax.random.normal(ks[0], (1, s, 2, d))
+        k = jax.random.normal(ks[1], (1, s, 2, d))
+        v = jax.random.normal(ks[2], (1, s, 2, d))
+        base = chunked_attention(q, k, v, causal=True, kv_chunk=4)
+        k2 = k.at[:, 10:].set(99.0)
+        v2 = v.at[:, 10:].set(-99.0)
+        pert = chunked_attention(q, k2, v2, causal=True, kv_chunk=4)
+        np.testing.assert_allclose(np.asarray(base[:, :10]),
+                                   np.asarray(pert[:, :10]), rtol=1e-5)
+        assert not np.allclose(np.asarray(base[:, 10:]), np.asarray(pert[:, 10:]))
+
+    def test_sliding_window_locality(self):
+        """With window w, position i ignores tokens before i - w + 1."""
+        s, w = 24, 4
+        ks = jax.random.split(KEY, 3)
+        q = jax.random.normal(ks[0], (1, s, 1, 8))
+        k = jax.random.normal(ks[1], (1, s, 1, 8))
+        v = jax.random.normal(ks[2], (1, s, 1, 8))
+        base = chunked_attention(q, k, v, causal=True, sliding_window=w, kv_chunk=8)
+        k2 = k.at[:, :s - w].set(7.0)   # perturb everything out of the last window
+        v2 = v.at[:, :s - w].set(-7.0)
+        pert = chunked_attention(q, k2, v2, causal=True, sliding_window=w, kv_chunk=8)
+        np.testing.assert_allclose(np.asarray(base[:, -1]), np.asarray(pert[:, -1]),
+                                   rtol=1e-5)
+
+    def test_decode_matches_last_row_of_full(self):
+        s = 20
+        ks = jax.random.split(KEY, 3)
+        q = jax.random.normal(ks[0], (1, s, 4, 8))
+        k = jax.random.normal(ks[1], (1, s, 2, 8))
+        v = jax.random.normal(ks[2], (1, s, 2, 8))
+        full = chunked_attention(q, k, v, causal=True, kv_chunk=8)
+        dec = decode_attention(q[:, -1:], k, v, jnp.int32(s))
+        np.testing.assert_allclose(np.asarray(dec[:, 0]), np.asarray(full[:, -1]),
+                                   rtol=1e-5, atol=1e-5)
+
+
+class TestMoEProperties:
+    def _cfg(self, cf=4.0):
+        import dataclasses
+        cfg = smoke_config(get_config("mixtral-8x7b"))
+        return dataclasses.replace(cfg, capacity_factor=cf)
+
+    def test_no_drop_total_weight(self):
+        """With ample capacity every token's top-k weights sum to 1 and the
+        output is a convex combination of expert outputs."""
+        cfg = self._cfg()
+        p = moe_mod.init_moe(KEY, cfg, jnp.float32)
+        x = jax.random.normal(KEY, (16, cfg.d_model))
+        out = moe_mod.moe_block(x, p, cfg)
+        assert np.isfinite(np.asarray(out)).all()
+        # zero experts => zero output
+        p0 = jax.tree.map(jnp.zeros_like, p)
+        out0 = moe_mod.moe_block(x, p0, cfg)
+        np.testing.assert_allclose(np.asarray(out0), 0.0, atol=1e-6)
+
+    def test_capacity_drops_reduce_output(self):
+        """cf=0.1 must drop assignments: some tokens get zero expert output."""
+        cfg_hi, cfg_lo = self._cfg(8.0), self._cfg(0.1)
+        p = moe_mod.init_moe(KEY, cfg_hi, jnp.float32)
+        x = jax.random.normal(KEY, (32, cfg_hi.d_model))
+        hi = np.asarray(moe_mod.moe_block(x, p, cfg_hi))
+        lo = np.asarray(moe_mod.moe_block(x, p, cfg_lo))
+        assert (np.abs(lo).sum(axis=1) <= np.abs(hi).sum(axis=1) + 1e-4).all()
+        assert np.abs(lo).sum() < np.abs(hi).sum()
+
+    def test_aux_loss_uniform_router_is_minimal(self):
+        cfg = self._cfg()
+        x = jax.random.normal(KEY, (64, cfg.d_model))
+        router_uniform = jnp.zeros((cfg.d_model, cfg.n_experts))
+        biased = router_uniform.at[:, 0].set(10.0)
+        lu = float(moe_mod.aux_load_balance_loss(x, router_uniform, cfg))
+        lb = float(moe_mod.aux_load_balance_loss(x, biased, cfg))
+        assert lb > lu
+
+
+class TestNorms:
+    @settings(max_examples=10, deadline=None)
+    @given(d=st.sampled_from([8, 32]), scale=st.floats(1.0, 10.0))
+    def test_rmsnorm_scale_invariance(self, d, scale):
+        # exact invariance only holds for variance >> eps, hence scale >= 1
+        x = jax.random.normal(KEY, (3, d)) * 10.0
+        g = jnp.ones((d,))
+        a = rms_norm(x, g, eps=1e-6)
+        b = rms_norm(x * scale, g, eps=1e-6)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-3, atol=1e-4)

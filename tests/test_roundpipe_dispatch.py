@@ -1,0 +1,19 @@
+"""RoundPipe computation-dispatch runtime: correctness vs single-program
+reference.  Runs in a subprocess because the 8 virtual devices must be set
+before jax initializes (the main pytest process holds 1 device)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+SCRIPT = os.path.join(os.path.dirname(__file__), "roundpipe_subprocess.py")
+
+
+@pytest.mark.parametrize("arch", ["qwen3-1.7b", "mixtral-8x7b", "rwkv6-7b",
+                                  "starcoder2-7b", "internvl2-76b"])
+def test_dispatch_matches_reference(arch):
+    r = subprocess.run([sys.executable, SCRIPT, arch],
+                       capture_output=True, text=True, timeout=1200)
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert "ROUNDPIPE_DISPATCH_OK" in r.stdout, r.stdout[-2000:]
