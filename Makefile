@@ -1,0 +1,16 @@
+# Tier-1 verify: `make test` wraps the canonical command from ROADMAP.md.
+.PHONY: test test-fast bench-bubble
+
+test:
+	PYTHONPATH=src python -m pytest -x -q
+
+# skip the slow subprocess-compile suites (quick signal while iterating)
+test-fast:
+	PYTHONPATH=src python -m pytest -x -q \
+		--ignore=tests/test_roundpipe_dispatch.py \
+		--ignore=tests/test_launch_steps.py \
+		--ignore=tests/test_end_to_end.py \
+		--ignore=tests/test_models_smoke.py
+
+bench-bubble:
+	PYTHONPATH=src python -m benchmarks.bubble_ratio

@@ -8,9 +8,9 @@ bubble below ~4.5%.
 from __future__ import annotations
 
 from repro.core.partition import auto_partition, symmetric_partition
+from repro.core.plan import compile_plan
 from repro.core.schedule import (gpipe_schedule, interleaved_1f1b_schedule,
-                                 looped_bfs_schedule, one_f_one_b_schedule,
-                                 roundpipe_schedule)
+                                 looped_bfs_schedule, one_f_one_b_schedule)
 from repro.core.simulator import simulate, steady_state_bubble
 
 from .workloads import PAPER_WORKLOADS, layer_costs
@@ -39,23 +39,24 @@ def bubble_ratios(arch: str) -> dict:
         looped_bfs_schedule(N_GPUS, MICROBATCHES, f2, b2)).bubble_ratio
     out["interleaved_1f1b"] = simulate(
         interleaved_1f1b_schedule(N_GPUS, MICROBATCHES, f2, b2)).bubble_ratio
-    # roundpipe: asymmetric auto-partition
+    # roundpipe: asymmetric auto-partition compiled into the SAME
+    # ExecutionPlan object the SPMD dispatch runtime executes — the simulated
+    # schedule below IS the executed schedule (DESIGN.md §1).
     p = auto_partition(layers, n_devices=N_GPUS, n_microbatches=MICROBATCHES)
-    fc, bc = p.stage_costs(layers)
+    plan = compile_plan(p, layers, n_workers=N_GPUS)
     out["roundpipe_sync"] = simulate(
-        roundpipe_schedule(N_GPUS, MICROBATCHES, fc, bc,
-                           round_size=N_GPUS)).bubble_ratio
+        plan.schedule(MICROBATCHES, round_size=N_GPUS)).bubble_ratio
     out["roundpipe_async"] = steady_state_bubble(
-        roundpipe_schedule(N_GPUS, MICROBATCHES, fc, bc, round_size=N_GPUS,
-                           iterations=3), iteration=1)
+        plan.schedule(MICROBATCHES, round_size=N_GPUS, iterations=3),
+        iteration=1)
     # beyond-paper: vocab-chunked LM head as 4 schedulable pseudo-layers,
     # plus a full-iteration round (M_R = M) to amortise per-round imbalance
     layers_v = layer_costs(arch, head_chunks=4)
     pv = auto_partition(layers_v, n_devices=N_GPUS, n_microbatches=MICROBATCHES)
-    fv, bv = pv.stage_costs(layers_v)
+    plan_v = compile_plan(pv, layers_v, n_workers=N_GPUS)
     out["roundpipe_async_vsplit"] = steady_state_bubble(
-        roundpipe_schedule(N_GPUS, MICROBATCHES, fv, bv,
-                           round_size=MICROBATCHES, iterations=3), iteration=1)
+        plan_v.schedule(MICROBATCHES, round_size=MICROBATCHES, iterations=3),
+        iteration=1)
     return out
 
 

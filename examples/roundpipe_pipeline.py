@@ -2,6 +2,11 @@
 dispatch pipeline (strategy=roundpipe) on a 2x4 virtual mesh and verify the
 loss matches the plain GSPMD strategy step-for-step.
 
+The model has SEVEN layers on a four-worker ring (7 % 4 != 0) and the stage
+split is the cost-model auto-partition (paper §4.4) — uneven blocks plus an
+LM-head pseudo-stage — compiled into one ExecutionPlan.  The schedule we
+simulate and the schedule the SPMD runtime executes are that same object.
+
 Run: python examples/roundpipe_pipeline.py      (sets its own XLA_FLAGS)
 """
 import os
@@ -17,13 +22,14 @@ import numpy as np
 
 from repro.configs import smoke_config
 from repro.core.dispatch import build_roundpipe_train_step, init_roundpipe_state
+from repro.core.simulator import simulate_plan
 from repro.launch.mesh import make_mesh
 from repro.launch.steps import (StepConfig, build_train_step, init_train_state)
 from repro.models.config import get_config
 from repro.optim import OptConfig
 
 cfg = smoke_config(get_config("starcoder2-7b"))
-cfg = dataclasses.replace(cfg, n_layers=8, name=cfg.name + "-pipe")
+cfg = dataclasses.replace(cfg, n_layers=7, name=cfg.name + "-pipe")
 mesh = make_mesh((2, 4), ("data", "model"))
 B, S = 8, 32
 step_cfg = StepConfig(strategy="roundpipe", async_optimizer=False,
@@ -37,9 +43,15 @@ batches = [{"tokens": rng.integers(0, cfg.vocab_size, (B, S)).astype(np.int32),
            for _ in range(5)]
 
 with mesh:
-    rp_step, rp_sh, _ = build_roundpipe_train_step(cfg, mesh, step_cfg, B, S)
+    rp_step, rp_sh, _, plan = build_roundpipe_train_step(cfg, mesh, step_cfg,
+                                                         B, S)
+    print(plan.describe())
+    sim = simulate_plan(plan)           # the very object rp_step executes
+    print(f"simulated bubble ratio: {sim.bubble_ratio:.4f} "
+          f"(makespan {sim.makespan:.1f})")
     rp_state = jax.device_put(
-        init_roundpipe_state(jax.random.PRNGKey(0), cfg, step_cfg), rp_sh)
+        init_roundpipe_state(jax.random.PRNGKey(0), cfg, step_cfg,
+                             n_workers=mesh.shape["model"]), rp_sh)
     ref_step, ref_sh, _ = build_train_step(cfg, mesh, ref_cfg, B, S)
     ref_state = jax.device_put(
         init_train_state(jax.random.PRNGKey(0), cfg, ref_cfg), ref_sh)

@@ -1,0 +1,8 @@
+#!/usr/bin/env bash
+# Tier-1 verify entry point: run the repo test suite exactly the way CI does.
+#   scripts/test.sh             -> PYTHONPATH=src python -m pytest -x -q
+#   scripts/test.sh tests/foo.py -k bar   (extra args pass through)
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+exec python -m pytest -x -q "$@"

@@ -1,0 +1,77 @@
+"""JAX version-compatibility shims.
+
+The repo targets the current `jax.shard_map` API, but the pinned container
+ships JAX 0.4.37 where (a) ``shard_map`` still lives in
+``jax.experimental.shard_map`` with the older ``check_rep``/``auto`` keyword
+surface, and (b) ``jax.sharding.get_abstract_mesh`` does not exist.  Every
+module that touches either goes through this shim so the rest of the codebase
+can be written against the modern API.
+
+Shimmed surface
+---------------
+``shard_map(f, mesh, in_specs=..., out_specs=..., axis_names=..., check_vma=...)``
+    Resolves to ``jax.shard_map`` when present; otherwise wraps
+    ``jax.experimental.shard_map.shard_map``, translating ``axis_names``
+    (the *manual* axes) into the legacy ``auto`` frozenset (every mesh axis
+    NOT named manual) and ``check_vma`` into ``check_rep``.
+
+``get_abstract_mesh()``
+    Returns the ambient abstract mesh, or ``None`` on JAX versions that
+    predate the concept (callers fall back to the physical `with mesh:` form).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(f, mesh, *, in_specs, out_specs, axis_names=None,
+              check_vma: bool = True):
+    """Version-portable ``shard_map``.
+
+    ``axis_names`` is the set of mesh axes mapped manually (the modern
+    calling convention); ``None`` means every axis.  ``check_vma`` maps to
+    the legacy ``check_rep`` flag on old JAX.
+    """
+    manual = frozenset(axis_names) if axis_names is not None \
+        else frozenset(mesh.axis_names)
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, axis_names=manual,
+                             check_vma=check_vma)
+    # Legacy (0.4.x) partial-auto shard_map is unreliable for this workload:
+    # axis_index lowers to PartitionId (unsupported under SPMD partitioning)
+    # and mixed manual-subgroup shardings trip fatal partitioner checks.  Run
+    # fully manual instead: axes outside ``axis_names`` carry no sharded
+    # operands in our callers, so they become replicated-manual — identical
+    # results, at worst redundant compute across those axes.
+    from jax.experimental.shard_map import shard_map as _legacy_shard_map
+    return _legacy_shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_rep=check_vma,
+                             auto=frozenset())
+
+
+def get_abstract_mesh():
+    """``jax.sharding.get_abstract_mesh`` or ``None`` when unavailable."""
+    getter = getattr(jax.sharding, "get_abstract_mesh", None)
+    if getter is None:
+        return None
+    return getter()
+
+
+def bound_axis_names() -> frozenset:
+    """Mesh axis names bound in the current trace's axis environment.
+
+    On JAX versions whose ``Mesh.axis_types`` is ``None`` (0.4.x) this is the
+    only signal that we are inside a shard_map body — where sharding
+    constraints naming mesh axes are invalid and must be dropped.  Under a
+    plain ``jit`` the environment is empty.
+    """
+    try:
+        from jax._src import core as _core
+        env = _core.get_axis_env()
+        sizes = getattr(env, "axis_sizes", None)
+        if sizes is not None:
+            return frozenset(sizes)
+        return frozenset(env.axis_names())
+    except Exception:
+        return frozenset()

@@ -1,3 +1,11 @@
 # The paper's primary contribution — implement the SYSTEM here
 # (scheduler, optimizer, data path, serving loop, etc.) in the
 # host framework. Add sibling subpackages for substrates.
+#
+# The plan layer (partition -> schedule -> execution) is jax-free and safe
+# to import anywhere; `dispatch` pulls in jax and stays a lazy import.
+from .partition import LayerCost, Partition, auto_partition  # noqa: F401
+from .plan import (ExecutionPlan, StageSpec, compile_plan,  # noqa: F401
+                   plan_from_config, uniform_partition)
+from .schedule import Schedule, StageTask, roundpipe_schedule  # noqa: F401
+from .simulator import SimResult, simulate, simulate_plan  # noqa: F401

@@ -1,51 +1,61 @@
-"""RoundPipe computation-dispatch runtime for TPU (shard_map over `model`).
+"""RoundPipe computation-dispatch runtime (shard_map over `model`).
 
-TPU-native realization of the paper's §3 paradigm (see DESIGN.md §2).  The
-weight pool is layer-sharded across the N workers of the `model` axis (the
-"host DRAM" analogue: the pool is the union of HBMs).  Stages are NOT bound
-to workers: each tick, layer-blocks travel one hop around a **weight ring**
-(`ppermute`) — the computation-dispatch "upload" — while each worker's
-resident micro-batches stay put.  Worker w starts block 0 at tick w, so at
-any tick the N workers execute N *different* stages round-robin, exactly the
-paper's slot→worker map `(g0 + i) mod N`; a stage visits every worker once
-per round.
+SPMD realization of the paper's §3 paradigm, driven entirely by a compiled
+:class:`~repro.core.plan.ExecutionPlan` (see DESIGN.md §2).  The weight pool
+is layer-sharded across the N workers of the `model` axis (the "host DRAM"
+analogue: the pool is the union of HBMs).  Stages are NOT bound to workers:
+each tick one *slot* — a variable-size, possibly uneven block of layers
+chosen by the auto-partitioner (paper §4.4) — is injected at worker 0 and
+travels one hop per tick around a **weight ring** (`ppermute`), while each
+worker's resident micro-batch group stays put.  Worker w executes slot
+``t - w`` at tick t, so at any tick the N workers run N *different* slots
+round-robin, exactly the paper's slot→worker map ``(g0 + i) mod N``.
 
-Structural properties inherited from the paper:
-  * zero weight binding — any worker executes any stage when its weights
-    arrive (§3.1);
-  * fill/drain bubble = N-1 ticks each ≙ N(N-1)·t total (§3.3 formula);
-  * the fused first-backward stage: the LAST forward tick computes
-    layer+head+loss AND their backward in one slot, so those layers'
-    forward is never paid twice (§3.2 asymmetric splitting's B1 term);
-  * full activation recomputation: backward ticks re-run the stage forward
-    from the stashed boundary (§2.1.1), boundaries live in the per-worker
-    stash (the "host-offloaded checkpoint" analogue — optionally offloaded
-    for real on TPU).
+Unified slot ring
+-----------------
+Unlike the v1 runtime (one layer per tick, ``n_layers % N == 0`` required),
+there is a single ring of ``S = Sf + Sb`` slots in plan order:
 
-Beyond-paper: on the backward ring the traveling gradient buffer accumulates
-each worker's contribution hop by hop, so by the time a block's weights exit
-the ring its gradient is already globally reduced — the pipeline's weight
-traffic doubles as the gradient ring-all-reduce, removing the separate
-reduce phase entirely (recorded in EXPERIMENTS.md §Perf).
+  * slots ``0..Sf-1`` — plain forward stages; each worker folds the block's
+    layers over its resident activations, stashing every layer-boundary
+    input for later recompute (§2.1.1);
+  * slot ``Sf`` — the fused FB stage (§3.2): forward of the deepest
+    (possibly empty) body block + final norm + LM head + loss AND their
+    backward, so those layers' forward is never paid twice;
+  * slots ``Sf+1..S-1`` — backward stages, deepest-first: re-run the block
+    forward from the stashed boundary under ``jax.vjp`` and emit block
+    weight grads plus the activation gradient carried to the next slot.
 
-v1 constraints: n_layers % N == 0, block = 1 layer, one resident micro-batch
-group per worker per call (round chaining across optimizer steps is the
-async extension — see core/schedule.py for the schedule-level version).
+Blocks are padded to the plan's ``max_block``; padding rows repeat the
+block's first layer and are masked out of both activations and gradients,
+so uneven stages (including an LM-head-only fused slot) cost one ring
+buffer of fixed depth.  ``n_layers`` need not divide N: the pool is padded
+to ``ceil(L/N)*N`` rows and the ring is staggered by *slot*, not by layer.
+
+Beyond-paper: a gradient buffer travels in lockstep with the weight ring;
+each worker adds its resident micro-batches' block gradients hop by hop, so
+when a slot's weights exit the ring its gradient is already globally
+reduced — the dispatch traffic doubles as the gradient ring-all-reduce
+(recorded in EXPERIMENTS.md §Perf).
+
+Structural properties inherited from the paper: zero weight binding (§3.1);
+fill/drain bubble of N-1 ticks each ≙ N(N-1)·t (§3.3); full activation
+recomputation from per-worker stashed boundaries (§2.1.1).
 """
 from __future__ import annotations
 
 import functools
-from typing import Any
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.models import transformer as T
 from repro.models.config import ModelConfig
 from repro.models.layers import apply_norm
-from repro.optim import OptConfig, apply_updates, init_opt_state, opt_state_specs
-from repro.launch.mesh import axis_size, data_axes
+from repro.optim import apply_updates, init_opt_state, opt_state_specs
+from repro.launch.mesh import axis_size
 
 AXIS = "model"
 
@@ -58,24 +68,37 @@ def _ring_add(tree_a, tree_b):
     return jax.tree.map(jnp.add, tree_a, tree_b)
 
 
-def _zeros_like_block(layers_local):
-    return jax.tree.map(lambda a: jnp.zeros(a.shape[1:], a.dtype), layers_local)
+def _zeros_block(layers_local, depth):
+    return jax.tree.map(
+        lambda a: jnp.zeros((depth,) + a.shape[1:], a.dtype), layers_local)
 
 
-def roundpipe_forward_backward(params, batch, cfg: ModelConfig, *,
-                               n_workers: int, xent_chunk: int = 256,
-                               kv_chunk: int = 1024,
+def roundpipe_forward_backward(params, batch, worker_id, cfg: ModelConfig, *,
+                               plan, n_workers: int, l_pad: int,
+                               xent_chunk: int = 256, kv_chunk: int = 1024,
                                ring_grad_dtype=jnp.float32):
     """Inside-shard_map body: returns (grads pytree, loss_sum, token_count).
 
-    ``params['layers']`` leaves arrive LOCAL: (L/N, ...) — this worker's pool
-    shard.  ``batch`` arrives with the micro-batch group resident on this
-    worker.  Everything else (embed/head/norm) is replicated over `model`.
+    ``params['layers']`` leaves arrive LOCAL: (l_pad/N, ...) — this worker's
+    pool shard (zero-padded rows beyond ``cfg.n_layers``).  ``batch`` arrives
+    with the micro-batch group resident on this worker.  Everything else
+    (embed/head/norm) is replicated over `model`.  ``plan`` supplies the
+    static slot structure; all ring plumbing below is static per tick, only
+    *which* slot a worker computes is traced.
     """
     n = n_workers
     l_total = cfg.n_layers
-    per = l_total // n
-    w = jax.lax.axis_index(AXIS)
+    per = l_pad // n
+    # worker id from a P(AXIS)-sharded iota input rather than axis_index —
+    # the latter lowers to PartitionId, unsupported under partial-auto SPMD
+    # on older JAX (see repro.compat).
+    w = worker_id[0]
+
+    slots = plan.stages
+    sf = plan.n_fwd
+    s_total = plan.n_slots
+    kmax = plan.max_block
+    fused_spec = plan.fused
 
     pool = params["layers"]
     head_w = T.lm_head_weights(params, cfg)
@@ -83,15 +106,18 @@ def roundpipe_forward_backward(params, batch, cfg: ModelConfig, *,
     x_emb = T.embed_inputs(params, batch, cfg)
     bshape = x_emb.shape                                   # (B_w, S, D)
 
+    # static per-slot lookup tables (indexed by the traced slot id)
+    starts_arr = jnp.array([s.start for s in slots] + [0], jnp.int32)
+    sizes_arr = jnp.array([s.size for s in slots] + [0], jnp.int32)
+
     # ---- tick-state ---------------------------------------------------------
-    fwd_ring = _zeros_like_block(pool)
-    bwd_ring = _zeros_like_block(pool)
+    ring = _zeros_block(pool, kmax)                        # traveling weights
     # traveling gradients: fp32 for exactness; bf16 (§Perf C1b) halves the
     # dominant dispatch traffic (hop count <= N keeps the error ~2^-8)
-    grad_buf = jax.tree.map(lambda a: a.astype(ring_grad_dtype),
-                            _zeros_like_block(pool))
+    gbuf = jax.tree.map(lambda a: a.astype(ring_grad_dtype),
+                        _zeros_block(pool, kmax))
     pool_grads = jax.tree.map(lambda a: jnp.zeros(a.shape, jnp.float32), pool)
-    stash = jnp.zeros((l_total,) + bshape, x_emb.dtype)
+    stash = jnp.zeros((l_total + 1,) + bshape, x_emb.dtype)  # row L = scratch
     act = jnp.zeros(bshape, x_emb.dtype)
     grad_carry = jnp.zeros(bshape, jnp.float32)
     loss_sum = jnp.float32(0.0)
@@ -101,120 +127,156 @@ def roundpipe_forward_backward(params, batch, cfg: ModelConfig, *,
     fnorm_grad = jax.tree.map(lambda a: jnp.zeros(a.shape, jnp.float32),
                               params["final_norm"])
 
-    def plain_fwd(block, x):
-        return T.layer_forward(x, block, cfg, kv_chunk=kv_chunk)
+    def block_row(block, k):
+        return jax.tree.map(lambda a: a[k], block)
+
+    if kmax == 1:
+        # fast path: single-layer blocks — no scan wrapper, the seed
+        # runtime's exact per-tick compute shape (MoE archs compile slowly
+        # under an extra scan level around each vjp)
+        def stage_fwd(block, n_active, x):
+            y = T.layer_forward(x, block_row(block, 0), cfg,
+                                kv_chunk=kv_chunk)
+            return jnp.where(n_active > 0, y, x)
+    else:
+        def stage_fwd(block, n_active, x):
+            """Fold a padded block over x; inactive rows are identity."""
+            def body(xc, inp):
+                k, lw = inp
+                y = T.layer_forward(xc, lw, cfg, kv_chunk=kv_chunk)
+                return jnp.where(k < n_active, y, xc), None
+            out, _ = jax.lax.scan(body, x, (jnp.arange(kmax), block))
+            return out
 
     def fused_loss(block, fnorm, hw, x):
-        h = T.layer_forward(x, block, cfg, kv_chunk=kv_chunk)
-        h = apply_norm(h, fnorm, cfg.norm_kind, cfg.norm_eps)
+        if fused_spec.size:                    # static: fused body block
+            x = stage_fwd(block, fused_spec.size, x)
+        h = apply_norm(x, fnorm, cfg.norm_kind, cfg.norm_eps)
         tot, cnt = T.chunked_softmax_xent(h, hw, batch["labels"],
                                           chunk=xent_chunk)
-        return tot, cnt
+        return tot, cnt                        # cnt rides as vjp aux
 
-    def bwd_block(block, x, g):
-        y, vjp = jax.vjp(lambda b, xx: plain_fwd(b, xx), block, x)
-        gb, gx = vjp(g.astype(y.dtype))
-        return gb, gx
+    def assemble_block(spec):
+        """Gather slot ``spec``'s layers from their pool owners to worker 0
+        (static plumbing).  Padding rows repeat the first layer so every ring
+        row holds real weights (finite jacobians for the masked lanes)."""
+        rows = []
+        for lid in spec.layers:
+            owner, idx = divmod(lid, per)
+            inj = jax.tree.map(lambda a: a[idx], pool)
+            rows.append(jax.lax.ppermute(inj, AXIS, [(owner, 0)]))
+        if not rows:
+            return None
+        rows += [rows[0]] * (kmax - len(rows))
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *rows)
 
-    n_ticks = 2 * l_total + n - 1
+    n_ticks = s_total + n - 1
     for t in range(n_ticks):
-        # ---- weight-ring plumbing (static per tick) --------------------------
-        if t < l_total:                                    # forward injection
-            owner, idx = divmod(t, per)
-            inj = jax.tree.map(lambda a: a[idx], pool)
-            inj = jax.lax.ppermute(inj, AXIS, [(owner, 0)])
-            shifted = jax.lax.ppermute(fwd_ring, AXIS, _shift_perm(n))
-            fwd_ring = _ring_add(shifted, inj)
-        elif t <= l_total + n - 2:                         # drain: staggered
-            fwd_ring = jax.lax.ppermute(fwd_ring, AXIS, _shift_perm(n))
-        b_inject_bwd = 2 * l_total - 2 - t                 # backward injection
-        if 0 <= b_inject_bwd <= l_total - 2:
-            owner, idx = divmod(b_inject_bwd, per)
-            inj = jax.tree.map(lambda a: a[idx], pool)
-            inj = jax.lax.ppermute(inj, AXIS, [(owner, 0)])
-            shifted = jax.lax.ppermute(bwd_ring, AXIS, _shift_perm(n))
-            bwd_ring = _ring_add(shifted, inj)
-            gshift = jax.lax.ppermute(grad_buf, AXIS, _shift_perm(n))
-            grad_buf = gshift
-        elif b_inject_bwd < 0 and t <= 2 * l_total + n - 3:
-            bwd_ring = jax.lax.ppermute(bwd_ring, AXIS, _shift_perm(n))
-            grad_buf = jax.lax.ppermute(grad_buf, AXIS, _shift_perm(n))
+        # ---- ring plumbing (static per tick) --------------------------------
+        shifted = jax.tree.map(
+            lambda a: jax.lax.ppermute(a, AXIS, _shift_perm(n)), ring)
+        gbuf = jax.tree.map(
+            lambda a: jax.lax.ppermute(a, AXIS, _shift_perm(n)), gbuf)
+        if t < s_total:
+            inj = assemble_block(slots[t])
+            ring = _ring_add(shifted, inj) if inj is not None else shifted
+        else:
+            ring = shifted
 
-        # ---- forward compute: worker w holds block (t - w) --------------------
+        # ---- compute: worker w holds slot (t - w) ---------------------------
         fb = t - w                                          # traced
-        plain_on = jnp.logical_and(fb >= 0, fb < l_total - 1)
-        fused_on = fb == l_total - 1
+        slot_i = jnp.clip(fb, 0, s_total)
+        start = starts_arr[slot_i]
+        n_act = sizes_arr[slot_i]
+        plain_on = jnp.logical_and(fb >= 0, fb < sf)
+        fused_on = fb == sf
+        bwd_on = jnp.logical_and(fb > sf, fb < s_total)
 
         def do_plain(op):
             act_, stash_ = op
             x_in = jnp.where(fb == 0, x_emb, act_)
-            stash_ = jax.lax.dynamic_update_slice(
-                stash_, x_in[None], (fb,) + (0,) * len(bshape))
-            return plain_fwd(fwd_ring, x_in), stash_
+
+            def step_one(xc, st_, k, lw):
+                active = k < n_act
+                lid = jnp.where(active, jnp.minimum(start + k, l_total),
+                                l_total)                  # row L = scratch
+                st_ = jax.lax.dynamic_update_slice(
+                    st_, xc[None].astype(st_.dtype),
+                    (lid,) + (jnp.int32(0),) * len(bshape))
+                y = T.layer_forward(xc, lw, cfg, kv_chunk=kv_chunk)
+                return jnp.where(active, y, xc), st_
+
+            if kmax == 1:
+                return step_one(x_in, stash_, 0, block_row(ring, 0))
+
+            def body(carry, inp):
+                xc, st_ = carry
+                k, lw = inp
+                return step_one(xc, st_, k, lw), None
+
+            (y, stash_), _ = jax.lax.scan(body, (x_in, stash_),
+                                          (jnp.arange(kmax), ring))
+            return y, stash_
 
         act, stash = jax.lax.cond(plain_on, do_plain,
                                   lambda op: op, (act, stash))
 
         def do_fused(op):
-            act_, ls, tc, gcarry, hg, fg, pg_last = op
-            x_in = jnp.where(fb == 0, x_emb, act_)          # L==1 edge
-            (tot, cnt), vjp = jax.vjp(
-                lambda blk, fn, hw, xx: fused_loss(blk, fn, hw, xx),
-                fwd_ring, params["final_norm"], head_w, x_in)
-            gb, gf, gh, gx = vjp((jnp.float32(1.0), jnp.int32(0)))
-            pg_last = jax.tree.map(lambda a, d: a + d.astype(jnp.float32),
-                                   pg_last, gb)
+            act_, ls, tc, gcarry, hg, fg, gb_, eg = op
+            x_in = jnp.where(fb == 0, x_emb, act_)          # Sf == 0 edge
+            tot, vjp, cnt = jax.vjp(
+                fused_loss, ring, params["final_norm"], head_w, x_in,
+                has_aux=True)
+            gb, gf, gh, gx = vjp(jnp.float32(1.0))
+            gb_ = jax.tree.map(lambda a, d: a + d.astype(a.dtype), gb_, gb)
+            if sf == 0 and fused_spec.layers and tokens is not None:
+                eg = eg.at[tokens].add(gx.astype(jnp.float32))
             return (act_, ls + tot, tc + cnt, gx.astype(jnp.float32),
                     hg + gh.astype(jnp.float32),
-                    jax.tree.map(lambda a, d: a + d.astype(jnp.float32), fg, gf),
-                    pg_last)
+                    jax.tree.map(lambda a, d: a + d.astype(jnp.float32),
+                                 fg, gf),
+                    gb_, eg)
 
-        last_grads0 = jax.tree.map(lambda a: jnp.zeros(a.shape[1:], jnp.float32),
-                                   pool)
-        if t == 0:
-            last_layer_grads = last_grads0
-        (act, loss_sum, tok_count, grad_carry, head_grad, fnorm_grad,
-         last_layer_grads) = jax.lax.cond(
+        (act, loss_sum, tok_count, grad_carry, head_grad, fnorm_grad, gbuf,
+         embed_grad) = jax.lax.cond(
             fused_on, do_fused, lambda op: op,
             (act, loss_sum, tok_count, grad_carry, head_grad, fnorm_grad,
-             last_layer_grads))
-
-        # ---- backward compute: worker w does block 2L-2-(t-w) ------------------
-        bb = 2 * l_total - 2 - fb
-        bwd_on = jnp.logical_and(fb >= l_total, fb <= 2 * l_total - 2)
+             gbuf, embed_grad))
 
         def do_bwd(op):
-            gcarry, gbuf, eg = op
-            x_in = jax.lax.dynamic_index_in_dim(stash, bb, 0, keepdims=False)
-            gb, gx = bwd_block(bwd_ring, x_in, gcarry)
-            gbuf = jax.tree.map(lambda a, d: a + d.astype(a.dtype), gbuf, gb)
+            gcarry, gb_, eg = op
+            x_in = jax.lax.dynamic_index_in_dim(
+                stash, jnp.minimum(start, l_total), 0, keepdims=False)
+            y, vjp = jax.vjp(lambda blk, xx: stage_fwd(blk, n_act, xx),
+                             ring, x_in)
+            gb, gx = vjp(gcarry.astype(y.dtype))
+            gb_ = jax.tree.map(lambda a, d: a + d.astype(a.dtype), gb_, gb)
 
             def embed_bwd(e):
                 if tokens is None:
                     return e                                  # frontend stub
                 return e.at[tokens].add(gx.astype(jnp.float32))
 
-            eg = jax.lax.cond(bb == 0, embed_bwd, lambda e: e, eg)
-            return gx.astype(jnp.float32), gbuf, eg
+            eg = jax.lax.cond(jnp.logical_and(start == 0, n_act > 0),
+                              embed_bwd, lambda e: e, eg)
+            return gx.astype(jnp.float32), gb_, eg
 
-        grad_carry, grad_buf, embed_grad = jax.lax.cond(
-            bwd_on, do_bwd, lambda op: op, (grad_carry, grad_buf, embed_grad))
+        grad_carry, gbuf, embed_grad = jax.lax.cond(
+            bwd_on, do_bwd, lambda op: op, (grad_carry, gbuf, embed_grad))
 
-        # ---- gradient deposit: block exits the ring at worker N-1 --------------
-        b_exit = 2 * l_total + n - 3 - t
-        if 0 <= b_exit <= l_total - 2:
-            owner, idx = divmod(b_exit, per)
-            arriving = jax.lax.ppermute(grad_buf, AXIS, [(n - 1, owner)])
-            pool_grads = jax.tree.map(
-                lambda pg, ar: pg.at[idx].add(ar), pool_grads, arriving)
+        # ---- gradient deposit: slot exits the ring at worker N-1 -------------
+        e_slot = t - (n - 1)
+        if 0 <= e_slot < s_total and slots[e_slot].kind != "F":
+            for k, lid in enumerate(slots[e_slot].layers):
+                owner, idx = divmod(lid, per)
+                row = jax.tree.map(lambda a: a[k], gbuf)
+                arriving = jax.tree.map(
+                    lambda a: jax.lax.ppermute(a, AXIS, [(n - 1, owner)]), row)
+                pool_grads = jax.tree.map(
+                    lambda pg, ar: pg.at[idx].add(ar.astype(jnp.float32)),
+                    pool_grads, arriving)
 
-    # ---- finalize: reduce replicated-param grads, deposit last layer ----------
-    owner_last, idx_last = divmod(l_total - 1, per)
-    ll = jax.tree.map(lambda g: jax.lax.psum(g, AXIS), last_layer_grads)
-    pool_grads = jax.tree.map(
-        lambda pg, g: pg.at[idx_last].add(
-            jnp.where(w == owner_last, 1.0, 0.0) * g),
-        pool_grads, ll)
+    # ---- finalize: reduce replicated-param grads ------------------------------
     embed_grad = jax.lax.psum(embed_grad, AXIS)
     head_grad = jax.lax.psum(head_grad, AXIS)
     fnorm_grad = jax.tree.map(lambda g: jax.lax.psum(g, AXIS), fnorm_grad)
@@ -233,7 +295,7 @@ def roundpipe_forward_backward(params, batch, cfg: ModelConfig, *,
 
 
 # ---------------------------------------------------------------------------
-# jit-level builder (strategy="roundpipe")
+# jit-level builders (strategy="roundpipe")
 # ---------------------------------------------------------------------------
 
 def roundpipe_param_specs(cfg: ModelConfig, abstract) -> dict:
@@ -248,18 +310,124 @@ def roundpipe_param_specs(cfg: ModelConfig, abstract) -> dict:
     return jax.tree_util.tree_map_with_path(rule, abstract)
 
 
-def build_roundpipe_train_step(cfg: ModelConfig, mesh, step_cfg,
-                               global_batch: int, seq_len: int):
+def resolve_plan(cfg: ModelConfig, step_cfg, n_workers: int):
+    """The plan a roundpipe step executes: ``step_cfg.partition`` if set
+    (entry points hand in an auto- or hand-partitioned :class:`Partition`),
+    else auto-derived from the architecture's cost model (paper §4.4)."""
+    from repro.core.plan import ExecutionPlan, plan_from_config
+
+    partition = getattr(step_cfg, "partition", None)
+    if isinstance(partition, ExecutionPlan):
+        return partition
+    return plan_from_config(cfg, n_workers, partition=partition)
+
+
+def pool_rows(cfg: ModelConfig, n_workers: int) -> int:
+    """Pool depth after padding the stacked layer dim to a multiple of N
+    (`n_layers % N != 0` support — the ring staggers by stage, not layer)."""
+    return -(-cfg.n_layers // n_workers) * n_workers
+
+
+def pad_pool(params, cfg: ModelConfig, n_workers: int):
+    """Zero-pad ``params['layers']`` to ``pool_rows`` rows.  Padding rows are
+    never referenced by any plan slot, receive exactly-zero gradients, and
+    therefore stay zero under the optimizer — they exist only so the pool
+    shards evenly over the `model` axis."""
+    l_pad = pool_rows(cfg, n_workers)
+    if l_pad == cfg.n_layers:
+        return params
+    out = dict(params)
+    out["layers"] = jax.tree.map(
+        lambda a: jnp.pad(
+            a, [(0, l_pad - cfg.n_layers)] + [(0, 0)] * (a.ndim - 1)),
+        params["layers"])
+    return out
+
+
+def _build_mapped(cfg: ModelConfig, mesh, plan, *, xent_chunk: int,
+                  kv_chunk: int, ring_grad_dtype):
+    """The shard_map'ed plan executor over PADDED params.
+
+    Returns ``(mapped, l_pad, pspecs, grads_specs)`` where
+    ``mapped(padded_params, batch) -> (padded_grads, loss, tokens)``.
+    """
     n = axis_size(mesh, AXIS)
-    if cfg.n_layers % n:
+    if plan.n_workers != n:
         raise ValueError(
-            f"roundpipe v1 requires n_layers % model axis == 0 "
-            f"({cfg.n_layers} % {n})")
-    if global_batch % n:
-        raise ValueError("global batch must divide the model axis")
+            f"plan compiled for {plan.n_workers} workers, mesh has {n}")
+    if plan.n_layers != cfg.n_layers:
+        raise ValueError(
+            f"plan covers {plan.n_layers} layers, model has {cfg.n_layers}")
+    plan.validate()
+    l_pad = pool_rows(cfg, n)
 
     abstract = T.abstract_params(cfg)
     pspecs = roundpipe_param_specs(cfg, abstract)
+    body = functools.partial(
+        roundpipe_forward_backward, cfg=cfg, plan=plan, n_workers=n,
+        l_pad=l_pad, xent_chunk=xent_chunk, kv_chunk=kv_chunk,
+        ring_grad_dtype=ring_grad_dtype)
+    grads_specs = dict(pspecs) if "lm_head" in abstract else \
+        {k: pspecs[k] for k in ("embed", "layers", "final_norm")}
+
+    def mapped(padded_params, batch):
+        bspecs = jax.tree.map(
+            lambda leaf: P(AXIS, *([None] * (leaf.ndim - 1))), batch)
+        f = shard_map(
+            body, mesh, axis_names={AXIS},
+            in_specs=(pspecs, bspecs, P(AXIS)),
+            out_specs=(grads_specs, P(), P()),
+            check_vma=False)
+        return f(padded_params, batch, jnp.arange(n, dtype=jnp.int32))
+
+    return mapped, l_pad, pspecs, grads_specs
+
+
+def build_roundpipe_grads_fn(cfg: ModelConfig, mesh, plan, *,
+                             xent_chunk: int = 256, kv_chunk: int = 1024,
+                             ring_grad_dtype=jnp.float32):
+    """shard_map'ed ``f(params, batch) -> (grads, loss, tokens)`` executing
+    ``plan`` on UNPADDED params (reference-comparison API): pads the pool on
+    the way in and slices the gradient rows back out."""
+    mapped, l_pad, _, _ = _build_mapped(
+        cfg, mesh, plan, xent_chunk=xent_chunk, kv_chunk=kv_chunk,
+        ring_grad_dtype=ring_grad_dtype)
+    n = axis_size(mesh, AXIS)
+
+    def grads_fn(params, batch):
+        grads, loss, tokens = mapped(pad_pool(params, cfg, n), batch)
+        if l_pad != cfg.n_layers:
+            grads = dict(grads)
+            grads["layers"] = jax.tree.map(
+                lambda a: a[:cfg.n_layers], grads["layers"])
+        return grads, loss, tokens
+
+    return grads_fn
+
+
+def build_roundpipe_train_step(cfg: ModelConfig, mesh, step_cfg,
+                               global_batch: int, seq_len: int, *,
+                               plan=None):
+    """Compile the full roundpipe train step for ``plan`` (auto-derived from
+    ``step_cfg.partition`` / the cost model when None).
+
+    The train state keeps the layer pool PADDED at rest (``pool_rows`` rows,
+    see ``pad_pool``) so it shards evenly over the `model` axis even when
+    ``n_layers % N != 0`` — use ``init_roundpipe_state(..., n_workers=N)``.
+
+    Returns ``(step, state_shardings, batch_shardings, plan)`` — the returned
+    plan is the exact object the step executes, so callers can simulate it
+    (``simulate_plan``) and compare against the real run.
+    """
+    n = axis_size(mesh, AXIS)
+    if global_batch % n:
+        raise ValueError("global batch must divide the model axis")
+    if plan is None:
+        plan = resolve_plan(cfg, step_cfg, n)
+
+    mapped, l_pad, pspecs, _ = _build_mapped(
+        cfg, mesh, plan, xent_chunk=step_cfg.xent_chunk,
+        kv_chunk=step_cfg.kv_chunk, ring_grad_dtype=step_cfg.accum_dtype)
     ospecs = opt_state_specs(pspecs, step_cfg.opt)
     state_specs = {"params": pspecs, "opt": ospecs}
 
@@ -273,19 +441,6 @@ def build_roundpipe_train_step(cfg: ModelConfig, mesh, step_cfg,
     batch_abs["labels"] = jax.ShapeDtypeStruct((global_batch, seq_len), jnp.int32)
     bspecs = jax.tree.map(
         lambda leaf: P(AXIS, *([None] * (leaf.ndim - 1))), batch_abs)
-
-    body = functools.partial(roundpipe_forward_backward, cfg=cfg, n_workers=n,
-                             xent_chunk=step_cfg.xent_chunk,
-                             kv_chunk=step_cfg.kv_chunk,
-                             ring_grad_dtype=step_cfg.accum_dtype)
-    grads_specs = {k: v for k, v in pspecs.items() if k != "lm_head"}
-    grads_specs = dict(pspecs) if "lm_head" in abstract else \
-        {k: pspecs[k] for k in ("embed", "layers", "final_norm")}
-    mapped = jax.shard_map(
-        body, mesh=mesh, axis_names={AXIS},
-        in_specs=(pspecs, bspecs),
-        out_specs=(grads_specs, P(), P()),
-        check_vma=False)
 
     def train_step(state, batch):
         grads, loss, tokens = mapped(state["params"], batch)
@@ -303,9 +458,14 @@ def build_roundpipe_train_step(cfg: ModelConfig, mesh, step_cfg,
                    in_shardings=(state_shardings, batch_shardings),
                    out_shardings=(state_shardings, None),
                    donate_argnums=(0,))
-    return step, state_shardings, batch_shardings
+    return step, state_shardings, batch_shardings, plan
 
 
-def init_roundpipe_state(key, cfg: ModelConfig, step_cfg):
+def init_roundpipe_state(key, cfg: ModelConfig, step_cfg,
+                         n_workers: int | None = None):
+    """Fresh roundpipe train state; pass ``n_workers`` (the `model` axis
+    size) so the layer pool is padded to shard evenly (``pad_pool``)."""
     params = T.init_params(key, cfg)
+    if n_workers is not None:
+        params = pad_pool(params, cfg, n_workers)
     return {"params": params, "opt": init_opt_state(params, step_cfg.opt)}

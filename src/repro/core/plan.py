@@ -1,0 +1,298 @@
+"""ExecutionPlan: the single object tying partition -> schedule -> execution.
+
+This module is the junction of the paper's three subsystems:
+
+* the automatic asymmetric partitioner (:mod:`repro.core.partition`,
+  paper §4.4) decides *which layers form which stage*;
+* the round-robin schedule generator (:mod:`repro.core.schedule`,
+  paper §3.2) decides *which worker runs which stage when*;
+* the priority-aware transfer planner (:mod:`repro.core.transfer`,
+  paper §4.2) decides *in which idle window each weight chunk is prefetched*.
+
+``compile_plan`` fuses the three into one :class:`ExecutionPlan` that BOTH
+consumers execute: the event-driven simulator (`core/simulator.simulate_plan`)
+and the SPMD dispatch runtime (`core/dispatch.build_roundpipe_train_step`).
+Because both read the same compiled object, the simulated schedule and the
+executed schedule are provably identical — the property the paper's headline
+numbers rest on.
+
+Slot model
+----------
+A plan is a sequence of *slots* (``StageSpec``), the unit the weight ring
+moves per tick:
+
+    slot 0 .. Sf-1      'F'   plain forward stages (shallow -> deep)
+    slot Sf             'FB'  the fused first-backward stage (paper §3.2):
+                              forward of the deepest block + LM head + loss
+                              AND their backward in one slot
+    slot Sf+1 .. S-1    'B'   backward-with-recompute stages (deep -> shallow)
+
+Stages are *uneven*: each slot owns a contiguous, variable-size set of layer
+ids.  The optional LM-head pseudo-layer (cost-model id ``n_body_layers``)
+always lives in the fused slot — the runtime computes head+loss there with
+replicated head weights, so the pseudo-layer never enters the weight ring.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+from .partition import LayerCost, Partition, auto_partition
+from .schedule import Schedule, roundpipe_schedule
+from .transfer import WindowPlan, plan_stage_transfers
+
+
+@dataclasses.dataclass(frozen=True)
+class StageSpec:
+    """One ring slot: a contiguous block of body layers (possibly empty for a
+    head-only fused slot) executed as a unit by whichever worker holds it."""
+    slot: int              # position in the unified F..FB..B slot sequence
+    kind: str              # 'F' | 'FB' | 'B'
+    layers: tuple          # body layer ids, ascending & contiguous; may be ()
+    cost: float            # schedule-time duration of this slot
+    includes_head: bool = False
+
+    @property
+    def start(self) -> int:
+        return self.layers[0] if self.layers else 0
+
+    @property
+    def size(self) -> int:
+        return len(self.layers)
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutionPlan:
+    """Compiled partition + schedule + prefetch order (see module docstring)."""
+    n_workers: int
+    n_layers: int          # body (ring-resident) layers
+    partition: Partition   # the auto_partition output this plan was built from
+    stages: tuple          # tuple[StageSpec] in slot order
+    layer_costs: tuple     # tuple[LayerCost]; body layers + optional head
+    has_head_stage: bool   # cost model included an LM-head pseudo-layer
+
+    # ---- derived views -----------------------------------------------------
+    @property
+    def n_fwd(self) -> int:
+        return sum(1 for s in self.stages if s.kind == "F")
+
+    @property
+    def n_slots(self) -> int:
+        return len(self.stages)
+
+    @property
+    def fused(self) -> StageSpec:
+        return self.stages[self.n_fwd]
+
+    @property
+    def max_block(self) -> int:
+        """Ring buffer depth: the largest body-layer block of any slot."""
+        return max(1, max(s.size for s in self.stages))
+
+    @property
+    def fwd_costs(self) -> tuple:
+        return tuple(s.cost for s in self.stages if s.kind == "F")
+
+    @property
+    def bwd_costs(self) -> tuple:
+        return tuple(s.cost for s in self.stages if s.kind != "F")
+
+    # ---- the two consumers -------------------------------------------------
+    def schedule(self, n_microbatches: int, *, round_size: int | None = None,
+                 iterations: int = 1, g0: int = 0) -> Schedule:
+        """The round-robin dispatch schedule for this plan (paper §3.2).
+
+        The simulator executes exactly this; the dispatch runtime realizes
+        the ``round_size == n_workers`` single-round case per training step.
+        """
+        return roundpipe_schedule(
+            self.n_workers, n_microbatches, list(self.fwd_costs),
+            list(self.bwd_costs), round_size=round_size, g0=g0,
+            iterations=iterations)
+
+    def prefetch(self, n_windows: int | None = None,
+                 *, window_capacity_bytes: int | None = None,
+                 chunk_limit: int | None = None) -> tuple:
+        """Per-slot transfer plans (paper §4.2): each slot's weight bytes
+        LPT-packed into its idle windows — the prefetch order a
+        double-buffered weight uploader follows, and what the simulator
+        checks to confirm parameter traffic hides inside activation
+        windows.  NOTE: the current dispatch runtime moves whole blocks on
+        the ring and does not consume this yet; wiring the prefetch overlap
+        into execution is a planned follow-up (ROADMAP)."""
+        m = n_windows or self.n_workers
+        plans = []
+        for stage in self.stages:
+            names = {f"layer{l}": int(self.layer_costs[l].weight_bytes)
+                     for l in stage.layers}
+            if stage.includes_head:
+                names["lm_head"] = int(self.layer_costs[-1].weight_bytes)
+            plans.append(plan_stage_transfers(
+                names, m, window_capacity_bytes=window_capacity_bytes,
+                chunk_limit=chunk_limit))
+        return tuple(plans)
+
+    # ---- validation --------------------------------------------------------
+    def validate(self) -> None:
+        """Raise ValueError unless the plan is a sound execution order."""
+        sf = self.n_fwd
+        if not self.stages:
+            raise ValueError("empty plan")
+        for i, s in enumerate(self.stages):
+            if s.slot != i:
+                raise ValueError(f"slot index mismatch at {i}: {s.slot}")
+            if not s.layers and s.kind != "FB":
+                # only the fused slot may be body-empty (head-only); an empty
+                # F/B slot would run with start==0 at runtime and corrupt the
+                # embedding-gradient deposit
+                raise ValueError(f"empty {s.kind} slot {i}")
+            if s.layers and list(s.layers) != list(
+                    range(s.layers[0], s.layers[-1] + 1)):
+                raise ValueError(f"slot {i} layers not contiguous: {s.layers}")
+        kinds = [s.kind for s in self.stages]
+        if kinds != ["F"] * sf + ["FB"] + ["B"] * (self.n_slots - sf - 1):
+            raise ValueError(f"bad slot kind sequence: {kinds}")
+        fused = self.stages[sf]
+        fwd_layers = [l for s in self.stages[:sf] for l in s.layers]
+        fwd_covered = self.n_layers - fused.size
+        if fwd_layers != list(range(fwd_covered)):
+            raise ValueError(
+                f"forward slots cover {fwd_layers}, want 0..{fwd_covered - 1}")
+        if fused.layers and fused.layers[-1] != self.n_layers - 1:
+            raise ValueError("fused slot must contain the deepest body layer")
+        bwd = self.stages[sf:]
+        bwd_layers = [l for s in bwd for l in s.layers]
+        if sorted(bwd_layers) != list(range(self.n_layers)):
+            raise ValueError(
+                f"backward slots cover {sorted(bwd_layers)}, "
+                f"want 0..{self.n_layers - 1}")
+        for a, b in zip(bwd, bwd[1:]):           # deepest-first execution order
+            if a.layers and b.layers and b.layers[-1] + 1 != a.layers[0]:
+                raise ValueError("backward slots not deepest-first contiguous")
+        if self.has_head_stage and not fused.includes_head:
+            raise ValueError("head pseudo-layer must live in the fused slot")
+        if any(s.includes_head for s in self.stages if s.kind != "FB"):
+            raise ValueError("only the fused slot may include the LM head")
+
+    def describe(self) -> str:
+        parts = []
+        for s in self.stages:
+            span = f"{s.layers[0]}..{s.layers[-1]}" if s.layers else "-"
+            head = "+head" if s.includes_head else ""
+            parts.append(f"{s.kind}[{span}{head}]")
+        return (f"ExecutionPlan(N={self.n_workers}, L={self.n_layers}, "
+                f"slots={' '.join(parts)}, t_max={self.partition.t_max:.3g})")
+
+
+# ---------------------------------------------------------------------------
+# Compilation
+# ---------------------------------------------------------------------------
+
+def compile_plan(partition: Partition, layer_costs: Sequence[LayerCost],
+                 *, n_workers: int,
+                 n_body_layers: int | None = None) -> ExecutionPlan:
+    """Compile a :class:`Partition` into an executable/simulatable plan.
+
+    ``n_body_layers`` — number of real model layers.  When it equals
+    ``len(layer_costs) - 1`` the final cost-model entry is the LM-head
+    pseudo-layer (paper Fig. 1's "layer 13"), which must land in the fused
+    backward stage; it is recorded as ``includes_head`` rather than as a ring
+    layer.  ``None`` means every cost entry is a body layer.
+    """
+    layer_costs = tuple(layer_costs)
+    l_total = len(layer_costs)
+    if n_body_layers is None:
+        n_body = l_total
+    elif n_body_layers == l_total:
+        n_body = l_total
+    elif n_body_layers == l_total - 1:
+        n_body = n_body_layers
+    else:
+        raise ValueError(
+            f"{l_total} cost layers cannot model {n_body_layers} body layers "
+            f"(want L or L+1 with a trailing head pseudo-layer)")
+    head_id = l_total - 1 if n_body < l_total else None
+
+    fcosts, bcosts = partition.stage_costs(layer_costs)
+    stages: list[StageSpec] = []
+    for ids, cost in zip(partition.fwd_stages, fcosts):
+        if head_id is not None and head_id in ids:
+            raise ValueError("LM-head pseudo-layer in a forward stage")
+        stages.append(StageSpec(len(stages), "F", tuple(ids), cost))
+    for j, (ids, cost) in enumerate(zip(partition.bwd_stages, bcosts)):
+        body = tuple(i for i in ids if i != head_id)
+        includes_head = head_id is not None and head_id in ids
+        kind = "FB" if j == 0 else "B"
+        if includes_head and kind != "FB":
+            raise ValueError("LM-head pseudo-layer outside the fused stage")
+        stages.append(StageSpec(len(stages), kind, body, cost, includes_head))
+    plan = ExecutionPlan(n_workers=n_workers, n_layers=n_body,
+                         partition=partition, stages=tuple(stages),
+                         layer_costs=layer_costs,
+                         has_head_stage=head_id is not None)
+    plan.validate()
+    return plan
+
+
+def uniform_partition(n_layers: int, *, fwd_cost: float = 1.0,
+                      grad_ratio: float = 2.0) -> Partition:
+    """The degenerate 1-layer-per-stage partition (the seed runtime's only
+    mode): L-1 forward slots, a 1-layer fused slot, L-1 backward slots."""
+    if n_layers < 1:
+        raise ValueError("need at least one layer")
+    fwd = tuple((i,) for i in range(n_layers - 1))
+    bwd = tuple((i,) for i in range(n_layers - 1, -1, -1))
+    t_max = fwd_cost * (1.0 + grad_ratio)
+    return Partition(fwd_stages=fwd, bwd_stages=bwd, t_max=t_max,
+                     objective=float("nan"), n_stages=2 * n_layers - 1)
+
+
+def default_layer_costs(cfg, *, head_stage: bool = True,
+                        grad_ratio: float = 2.0) -> list[LayerCost]:
+    """Cost model derived from the architecture: per-layer cost proportional
+    to its parameter count (flops proxy at fixed batch), head pseudo-layer
+    proportional to ``d_model * vocab_size``.  Weight bytes assume bf16."""
+    import numpy as np
+
+    from repro.models import transformer as T
+
+    abstract = T.abstract_params(cfg)
+    import jax
+    layer_params = sum(int(np.prod(leaf.shape[1:]))
+                       for leaf in jax.tree_util.tree_leaves(abstract["layers"]))
+    scale = 1.0 / max(layer_params, 1)
+    out = [LayerCost(1.0, grad_ratio,
+                     weight_bytes=2 * layer_params)
+           for _ in range(cfg.n_layers)]
+    if head_stage:
+        head_params = cfg.d_model * cfg.vocab_size
+        c = head_params * scale
+        out.append(LayerCost(c, c * grad_ratio, weight_bytes=2 * head_params))
+    return out
+
+
+def plan_from_config(cfg, n_workers: int, *,
+                     n_microbatches: int | None = None,
+                     partition: Partition | None = None,
+                     head_stage: bool | None = None,
+                     mem_cap_bytes: float = float("inf")) -> ExecutionPlan:
+    """The default plan for ``StepConfig(strategy="roundpipe")``: build the
+    architecture's cost model, auto-partition it (paper §4.4) unless an
+    explicit :class:`Partition` is given, and compile.
+
+    ``head_stage=None`` (default) models the LM-head pseudo-layer when
+    auto-partitioning, and infers its presence from the deepest covered id
+    when a hand ``partition`` is supplied; pass an explicit bool to
+    override (compile_plan raises if it contradicts the partition).
+    """
+    if head_stage is None:
+        head_stage = True if partition is None else \
+            partition.bwd_stages[0][-1] == cfg.n_layers
+    costs = default_layer_costs(cfg, head_stage=head_stage)
+    if partition is None:
+        partition = auto_partition(
+            costs, n_devices=n_workers,
+            n_microbatches=n_microbatches or n_workers,
+            mem_cap_bytes=mem_cap_bytes)
+    return compile_plan(partition, costs, n_workers=n_workers,
+                        n_body_layers=cfg.n_layers)

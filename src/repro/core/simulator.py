@@ -5,6 +5,11 @@ dependencies between tasks and (b) per-device dispatch order, and reports
 makespan, per-device busy time and bubble ratio.  The same engine measures
 steady-state bubbles for the asynchronous-optimizer mode by windowing on
 iteration boundaries (paper §5.6.1 simulates 16 micro-batches on 8 GPUs).
+
+``simulate_plan`` is the plan-level entry point: it consumes the same
+:class:`~repro.core.plan.ExecutionPlan` object the SPMD dispatch runtime
+executes, so simulated and executed schedules are one and the same object
+(see DESIGN.md §1).
 """
 from __future__ import annotations
 
@@ -85,6 +90,24 @@ def simulate(schedule: Schedule) -> SimResult:
     res = SimResult(makespan, busy, finish, start, schedule.n_devices)
     res._dev = dev_of
     return res
+
+
+def simulate_plan(plan, n_microbatches: int | None = None, *,
+                  round_size: int | None = None,
+                  iterations: int = 1) -> SimResult:
+    """Validate and simulate an :class:`~repro.core.plan.ExecutionPlan`.
+
+    The schedule is generated from the *same* compiled plan the dispatch
+    runtime executes (one resident micro-batch group per worker per step
+    corresponds to ``n_microbatches == round_size == plan.n_workers``).
+    """
+    from .schedule import validate
+
+    plan.validate()
+    sched = plan.schedule(n_microbatches or plan.n_workers,
+                          round_size=round_size, iterations=iterations)
+    validate(sched)
+    return simulate(sched)
 
 
 def steady_state_bubble(schedule: Schedule, iteration: int = 1) -> float:

@@ -94,13 +94,26 @@ def run_cell(arch: str, shape: str, multi_pod: bool, strategy: str,
     t0 = time.time()
     with mesh:
         if spec.step == "train":
+            if strategy == "roundpipe":
+                # the dry run lowers the exact ExecutionPlan the runtime
+                # would execute; record its simulated schedule alongside
+                import dataclasses as _dc
+                from repro.core.dispatch import resolve_plan
+                from repro.launch.mesh import axis_size
+                from repro.core.simulator import simulate_plan
+                plan = resolve_plan(cfg, step_cfg, axis_size(mesh, "model"))
+                step_cfg = _dc.replace(step_cfg, partition=plan)
+                meta["plan"] = plan.describe()
+                meta["simulated_bubble"] = round(
+                    simulate_plan(plan).bubble_ratio, 4)
             step, state_sh, batch_sh = build_train_step(
                 cfg, mesh, step_cfg, spec.global_batch, spec.seq_len)
             if strategy == "roundpipe":
                 import functools
                 from repro.core.dispatch import init_roundpipe_state
                 state_abs = jax.eval_shape(functools.partial(
-                    init_roundpipe_state, cfg=cfg, step_cfg=step_cfg),
+                    init_roundpipe_state, cfg=cfg, step_cfg=step_cfg,
+                    n_workers=axis_size(mesh, "model")),
                     jax.random.PRNGKey(0))
             else:
                 state_abs = abstract_train_state(cfg, step_cfg)

@@ -35,6 +35,10 @@ class StepConfig:
                                      # params FSDP over data only (§Perf A)
     kv_chunk: int = 1024
     xent_chunk: int = 256
+    # roundpipe only: a repro.core.partition.Partition (or a precompiled
+    # repro.core.plan.ExecutionPlan) describing the uneven stage split.
+    # None -> auto-partition from the architecture's cost model (paper §4.4).
+    partition: Any = None
     opt: OptConfig = dataclasses.field(default_factory=OptConfig)
 
 
@@ -120,8 +124,9 @@ def build_train_step(cfg: ModelConfig, mesh, step_cfg: StepConfig,
     """
     if step_cfg.strategy == "roundpipe":
         from repro.core.dispatch import build_roundpipe_train_step
-        return build_roundpipe_train_step(cfg, mesh, step_cfg, global_batch,
-                                          seq_len)
+        step, state_sh, batch_sh, _plan = build_roundpipe_train_step(
+            cfg, mesh, step_cfg, global_batch, seq_len)
+        return step, state_sh, batch_sh
     accum = resolve_grad_accum(step_cfg, mesh, global_batch)
     micro = global_batch // accum
     if micro * accum != global_batch:

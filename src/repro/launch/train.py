@@ -24,6 +24,11 @@ def main() -> None:
     ap.add_argument("--mesh", default="1x1", help="DATAxMODEL, e.g. 16x16")
     ap.add_argument("--strategy", default="gspmd",
                     choices=["gspmd", "roundpipe"])
+    ap.add_argument("--partition", default="auto",
+                    choices=["auto", "uniform"],
+                    help="roundpipe stage split: cost-model auto-partition "
+                         "(paper §4.4, uneven stages + LM-head stage) or the "
+                         "degenerate 1-layer-per-stage split")
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
     ap.add_argument("--save-every", type=int, default=50)
@@ -54,11 +59,26 @@ def main() -> None:
     if args.smoke:
         cfg = smoke_config(cfg)
     mesh = make_mesh((n_data, n_model), ("data", "model"))
+    plan = None
+    if args.strategy == "roundpipe":
+        # compile the plan up front: the train step executes this exact
+        # object, and the simulator reports its bubble before we spend flops
+        from repro.core.plan import plan_from_config, uniform_partition
+        from repro.core.simulator import simulate_plan
+        if args.partition == "uniform":
+            plan = plan_from_config(
+                cfg, n_model, partition=uniform_partition(cfg.n_layers))
+        else:
+            plan = plan_from_config(cfg, n_model)
+        sim = simulate_plan(plan)
+        print(plan.describe())
+        print(f"simulated bubble ratio (one round): {sim.bubble_ratio:.4f}")
     step_cfg = StepConfig(strategy=args.strategy, grad_accum=1,
                           async_optimizer=args.async_opt and args.strategy == "gspmd",
                           sequence_parallel=n_model > 1,
                           kv_chunk=min(1024, args.seq),
                           xent_chunk=min(256, args.seq),
+                          partition=plan,
                           opt=OptConfig(lr=args.lr))
     data = SyntheticLMDataset(DataConfig(cfg.vocab_size, args.seq, args.batch))
 
@@ -68,7 +88,8 @@ def main() -> None:
         if args.strategy == "roundpipe":
             from repro.core.dispatch import init_roundpipe_state
             init = lambda: jax.device_put(
-                init_roundpipe_state(jax.random.PRNGKey(0), cfg, step_cfg),
+                init_roundpipe_state(jax.random.PRNGKey(0), cfg, step_cfg,
+                                     n_workers=n_model),
                 state_sh)
         else:
             init = lambda: jax.device_put(

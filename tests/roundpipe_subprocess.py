@@ -1,8 +1,16 @@
 """Subprocess body for RoundPipe dispatch correctness (needs 8 host devices
 set BEFORE jax init, so it cannot run in the main pytest process).
 
-Compares the shard_map ring pipeline's loss and gradients against the plain
-single-program reference on identical fp32 parameters.
+Compares the plan-driven shard_map ring pipeline's loss and gradients against
+the plain single-program reference on identical fp32 parameters.
+
+Usage:  python roundpipe_subprocess.py <arch> [mode] [n_layers]
+
+mode:
+  uniform  — 1-layer-per-stage plan (the seed runtime's only shape)
+  auto     — cost-model auto_partition (paper §4.4), incl. LM-head stage
+  uneven   — hand-built non-uniform partition with an LM-head pseudo-layer,
+             n_layers % n_workers != 0
 """
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
@@ -16,23 +24,52 @@ import numpy as np
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from repro.configs import smoke_config  # noqa: E402
-from repro.core.dispatch import (build_roundpipe_train_step,  # noqa: E402
-                                 init_roundpipe_state, roundpipe_param_specs)
-from repro.launch.steps import StepConfig  # noqa: E402
+from repro.core.dispatch import build_roundpipe_grads_fn  # noqa: E402
+from repro.core.partition import LayerCost, Partition  # noqa: E402
+from repro.core.plan import (compile_plan, plan_from_config,  # noqa: E402
+                             uniform_partition)
+from repro.core.simulator import simulate_plan  # noqa: E402
 from repro.models import transformer as T  # noqa: E402
 from repro.models.config import get_config  # noqa: E402
-from repro.optim import OptConfig  # noqa: E402
 import dataclasses  # noqa: E402
+
+
+def make_plan(mode: str, cfg, n_workers: int):
+    if mode == "uniform":
+        part = uniform_partition(cfg.n_layers)
+        costs = [LayerCost(1.0, 2.0) for _ in range(cfg.n_layers)]
+        return compile_plan(part, costs, n_workers=n_workers,
+                            n_body_layers=cfg.n_layers)
+    if mode == "auto":
+        return plan_from_config(cfg, n_workers)
+    if mode == "uneven":
+        # 6 body layers + head pseudo-layer on 4 workers (6 % 4 != 0):
+        # fwd blocks of 2, fused = layers 4,5 + head, uneven backward blocks.
+        assert cfg.n_layers == 6, "uneven mode expects n_layers=6"
+        part = Partition(fwd_stages=((0, 1), (2, 3)),
+                         bwd_stages=((4, 5, 6), (3,), (0, 1, 2)),
+                         t_max=9.0, objective=0.0, n_stages=5)
+        costs = [LayerCost(1.0, 2.0) for _ in range(6)] + [LayerCost(2.0, 4.0)]
+        return compile_plan(part, costs, n_workers=n_workers,
+                            n_body_layers=cfg.n_layers)
+    raise SystemExit(f"unknown mode {mode}")
 
 
 def main():
     arch = sys.argv[1] if len(sys.argv) > 1 else "qwen3-1.7b"
+    mode = sys.argv[2] if len(sys.argv) > 2 else "uniform"
+    n_layers = int(sys.argv[3]) if len(sys.argv) > 3 else \
+        (6 if mode == "uneven" else 8)
     cfg = smoke_config(get_config(arch))
-    cfg = dataclasses.replace(cfg, n_layers=8, name=cfg.name + "-rp")
+    cfg = dataclasses.replace(cfg, n_layers=n_layers, name=cfg.name + "-rp")
     n_model = 4
     mesh = jax.make_mesh((2, n_model), ("data", "model"))
-    step_cfg = StepConfig(strategy="roundpipe", async_optimizer=False,
-                          xent_chunk=8, kv_chunk=8, opt=OptConfig(lr=1e-3))
+
+    plan = make_plan(mode, cfg, n_model)
+    plan.validate()
+    sim = simulate_plan(plan)            # same object the runtime executes
+    print(plan.describe())
+    print(f"simulated bubble ratio: {sim.bubble_ratio:.4f}")
 
     key = jax.random.PRNGKey(0)
     # fp32 params for tight comparison
@@ -52,22 +89,10 @@ def main():
     ref_l, ref_g = jax.value_and_grad(ref_loss)(params)
 
     # ---- roundpipe ----------------------------------------------------------
-    from repro.core.dispatch import roundpipe_forward_backward
-    import functools
-    body = functools.partial(roundpipe_forward_backward, cfg=cfg,
-                             n_workers=n_model, xent_chunk=8, kv_chunk=8)
-    abstract = jax.tree.map(lambda x: x, params)
-    pspecs = roundpipe_param_specs(cfg, abstract)
-    from jax.sharding import PartitionSpec as P
-    bspecs = jax.tree.map(lambda leaf: P("model", *([None] * (leaf.ndim - 1))),
-                          batch)
-    mapped = jax.jit(jax.shard_map(
-        body, mesh=mesh, axis_names={"model"},
-        in_specs=(pspecs, bspecs),
-        out_specs=(jax.tree.map(lambda _: P() , pspecs) if False else _grad_specs(pspecs, params), P(), P()),
-        check_vma=False))
+    grads_fn = build_roundpipe_grads_fn(cfg, mesh, plan, xent_chunk=8,
+                                        kv_chunk=8)
     with mesh:
-        rp_g, rp_loss, rp_tokens = mapped(params, batch)
+        rp_g, rp_loss, rp_tokens = jax.jit(grads_fn)(params, batch)
 
     print("ref loss", float(ref_l), "rp loss", float(rp_loss))
     np.testing.assert_allclose(float(rp_loss), float(ref_l), rtol=1e-4)
@@ -90,12 +115,6 @@ def main():
     print("worst rel grad err:", worst)
     assert worst < 5e-3, worst
     print("ROUNDPIPE_DISPATCH_OK")
-
-
-def _grad_specs(pspecs, params):
-    if "lm_head" in params:
-        return pspecs
-    return {k: pspecs[k] for k in ("embed", "layers", "final_norm")}
 
 
 if __name__ == "__main__":

@@ -1,0 +1,168 @@
+"""ExecutionPlan compilation tests: partition -> plan -> schedule -> simulate.
+
+Property-style over random uneven LayerCost vectors (plain `random`, seeded —
+no hypothesis dependency): every auto-partitioned plan must validate, its
+per-stage layer sets must exactly cover range(L), and its schedule must
+simulate deadlock-free with the expected amount of total work.
+"""
+import random
+
+import pytest
+
+from repro.core.partition import LayerCost, Partition, auto_partition
+from repro.core.plan import compile_plan, uniform_partition
+from repro.core.schedule import validate
+from repro.core.simulator import simulate, simulate_plan
+from repro.core.transfer import WindowPlan
+
+
+def random_layers(rng, n):
+    return [LayerCost(rng.uniform(0.5, 3.0), rng.uniform(0.5, 5.0),
+                      weight_bytes=rng.randrange(1, 1 << 20))
+            for _ in range(n)]
+
+
+class TestCompileRandomUneven:
+    def test_auto_partition_plans_cover_and_simulate(self):
+        rng = random.Random(0)
+        for trial in range(25):
+            n_layers = rng.randrange(3, 15)
+            n_workers = rng.randrange(2, 6)
+            m = n_workers * rng.randrange(1, 4)
+            layers = random_layers(rng, n_layers)
+            part = auto_partition(layers, n_devices=n_workers,
+                                  n_microbatches=m)
+            plan = compile_plan(part, layers, n_workers=n_workers)
+            plan.validate()
+            # backward slots exactly cover range(L); forward is a prefix
+            bwd_ids = sorted(l for s in plan.stages[plan.n_fwd:]
+                             for l in s.layers)
+            assert bwd_ids == list(range(n_layers)), trial
+            fwd_ids = [l for s in plan.stages[:plan.n_fwd] for l in s.layers]
+            assert fwd_ids == list(range(len(fwd_ids))), trial
+            # the compiled schedule is well-formed and deadlock-free
+            sched = plan.schedule(m, round_size=n_workers)
+            validate(sched)
+            res = simulate(sched)
+            assert res.makespan > 0
+            total = sum(t.duration for t in sched.tasks)
+            assert res.makespan >= total / n_workers - 1e-9, trial
+
+    def test_simulate_plan_entrypoint(self):
+        rng = random.Random(1)
+        layers = random_layers(rng, 9)
+        part = auto_partition(layers, n_devices=4, n_microbatches=4)
+        plan = compile_plan(part, layers, n_workers=4)
+        res = simulate_plan(plan)
+        assert 0.0 <= res.bubble_ratio < 1.0
+
+
+class TestHeadPseudoLayer:
+    def test_head_lands_in_fused_stage(self):
+        layers = [LayerCost(1.0, 2.0) for _ in range(7)] + [LayerCost(3.0, 6.0)]
+        part = auto_partition(layers, n_devices=4, n_microbatches=8)
+        plan = compile_plan(part, layers, n_workers=4, n_body_layers=7)
+        plan.validate()
+        assert plan.has_head_stage
+        assert plan.fused.includes_head
+        assert all(not s.includes_head for s in plan.stages if s.kind != "FB")
+        # body layers still exactly covered despite the pseudo-layer
+        bwd_ids = sorted(l for s in plan.stages[plan.n_fwd:] for l in s.layers)
+        assert bwd_ids == list(range(7))
+
+    def test_bad_body_count_rejected(self):
+        layers = [LayerCost(1.0, 2.0) for _ in range(6)]
+        part = auto_partition(layers, n_devices=2, n_microbatches=2)
+        with pytest.raises(ValueError):
+            compile_plan(part, layers, n_workers=2, n_body_layers=4)
+
+
+class TestUniformPartition:
+    def test_matches_seed_runtime_shape(self):
+        plan = compile_plan(uniform_partition(8),
+                            [LayerCost(1.0, 2.0)] * 8, n_workers=4)
+        assert plan.n_fwd == 7
+        assert plan.n_slots == 15               # (L-1) F + FB + (L-1) B
+        assert plan.max_block == 1
+        assert plan.fused.layers == (7,)
+
+    def test_single_layer_model(self):
+        plan = compile_plan(uniform_partition(1),
+                            [LayerCost(1.0, 2.0)], n_workers=2)
+        plan.validate()
+        assert plan.n_fwd == 0 and plan.n_slots == 1
+        simulate_plan(plan)
+
+
+class TestPrefetchOrder:
+    def test_window_plans_cover_all_stage_bytes(self):
+        rng = random.Random(2)
+        layers = random_layers(rng, 10)
+        part = auto_partition(layers, n_devices=4, n_microbatches=4)
+        plan = compile_plan(part, layers, n_workers=4)
+        window_plans = plan.prefetch()
+        assert len(window_plans) == plan.n_slots
+        for stage, wp in zip(plan.stages, window_plans):
+            assert isinstance(wp, WindowPlan)
+            want = sum(layers[l].weight_bytes for l in stage.layers)
+            assert wp.total == want
+
+    def test_head_bytes_in_fused_window(self):
+        layers = [LayerCost(1.0, 2.0, weight_bytes=100) for _ in range(5)]
+        layers += [LayerCost(4.0, 8.0, weight_bytes=1000)]       # head
+        part = auto_partition(layers, n_devices=2, n_microbatches=2)
+        plan = compile_plan(part, layers, n_workers=2, n_body_layers=5)
+        wp = plan.prefetch()[plan.n_fwd]
+        assert wp.total == 100 * plan.fused.size + 1000
+
+
+class TestPlanFromConfig:
+    """Architecture-derived default plans (the StepConfig partition=None path)."""
+
+    def _cfg(self):
+        from repro.configs import smoke_config
+        from repro.models.config import get_config
+        return smoke_config(get_config("qwen3-1.7b"))
+
+    def test_auto_plan_has_head_stage(self):
+        from repro.core.plan import plan_from_config
+        cfg = self._cfg()
+        plan = plan_from_config(cfg, 4)
+        plan.validate()
+        assert plan.has_head_stage and plan.fused.includes_head
+        assert plan.n_layers == cfg.n_layers
+        simulate_plan(plan)
+
+    def test_explicit_headless_partition_inferred(self):
+        from repro.core.plan import plan_from_config
+        cfg = self._cfg()
+        plan = plan_from_config(cfg, 4,
+                                partition=uniform_partition(cfg.n_layers))
+        plan.validate()
+        assert not plan.has_head_stage
+        assert plan.max_block == 1
+
+
+class TestValidationRejects:
+    def test_noncontiguous_slot(self):
+        layers = [LayerCost(1.0, 2.0)] * 4
+        bad = Partition(fwd_stages=((0, 2),), bwd_stages=((3,), (1,), (0, 2)),
+                        t_max=3.0, objective=0.0, n_stages=4)
+        with pytest.raises(ValueError):
+            compile_plan(bad, layers, n_workers=2)
+
+    def test_forward_gap(self):
+        layers = [LayerCost(1.0, 2.0)] * 4
+        bad = Partition(fwd_stages=((1, 2),), bwd_stages=((3,), (1, 2), (0,)),
+                        t_max=3.0, objective=0.0, n_stages=4)
+        with pytest.raises(ValueError):
+            compile_plan(bad, layers, n_workers=2)
+
+    def test_empty_backward_stage(self):
+        """An empty B slot would double-deposit the embedding gradient at
+        runtime (StageSpec.start == 0 for empty tuples) — must not validate."""
+        layers = [LayerCost(1.0, 2.0)] * 4
+        bad = Partition(fwd_stages=((0, 1),), bwd_stages=((2, 3), (), (0, 1)),
+                        t_max=3.0, objective=0.0, n_stages=4)
+        with pytest.raises(ValueError, match="empty"):
+            compile_plan(bad, layers, n_workers=2)

@@ -127,7 +127,10 @@ class TestMoEProperties:
 
     def test_aux_loss_uniform_router_is_minimal(self):
         cfg = self._cfg()
-        x = jax.random.normal(KEY, (64, cfg.d_model))
+        # positive-mean features so the boosted column yields a positive
+        # logit for EVERY token (on zero-mean inputs a scaled column sends
+        # half the tokens away from expert 0 and the loss stays balanced)
+        x = jnp.abs(jax.random.normal(KEY, (64, cfg.d_model)))
         router_uniform = jnp.zeros((cfg.d_model, cfg.n_experts))
         biased = router_uniform.at[:, 0].set(10.0)
         lu = float(moe_mod.aux_load_balance_loss(x, router_uniform, cfg))

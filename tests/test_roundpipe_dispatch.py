@@ -1,6 +1,13 @@
 """RoundPipe computation-dispatch runtime: correctness vs single-program
 reference.  Runs in a subprocess because the 8 virtual devices must be set
-before jax initializes (the main pytest process holds 1 device)."""
+before jax initializes (the main pytest process holds 1 device).
+
+Covers the plan-driven runtime's three regimes:
+  * uniform   — 1-layer-per-stage (the seed runtime's only shape)
+  * auto      — cost-model auto-partition (paper §4.4): multi-layer uneven
+                blocks + LM-head pseudo-stage
+  * uneven    — hand-built non-uniform partition with n_layers % N != 0
+"""
 import os
 import subprocess
 import sys
@@ -10,10 +17,31 @@ import pytest
 SCRIPT = os.path.join(os.path.dirname(__file__), "roundpipe_subprocess.py")
 
 
+def _run(arch, mode, n_layers=None):
+    cmd = [sys.executable, SCRIPT, arch, mode]
+    if n_layers is not None:
+        cmd.append(str(n_layers))
+    r = subprocess.run(cmd, capture_output=True, text=True, timeout=1200)
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert "ROUNDPIPE_DISPATCH_OK" in r.stdout, r.stdout[-2000:]
+
+
 @pytest.mark.parametrize("arch", ["qwen3-1.7b", "mixtral-8x7b", "rwkv6-7b",
                                   "starcoder2-7b", "internvl2-76b"])
 def test_dispatch_matches_reference(arch):
-    r = subprocess.run([sys.executable, SCRIPT, arch],
-                       capture_output=True, text=True, timeout=1200)
-    assert r.returncode == 0, r.stderr[-3000:]
-    assert "ROUNDPIPE_DISPATCH_OK" in r.stdout, r.stdout[-2000:]
+    _run(arch, "uniform")
+
+
+def test_dispatch_auto_partition_matches_reference():
+    """Auto-partitioned uneven stages (incl. head-only fused slot)."""
+    _run("qwen3-1.7b", "auto")
+
+
+def test_dispatch_auto_partition_nondivisible_layers():
+    """n_layers % n_workers != 0: the ring staggers by stage, not layer."""
+    _run("qwen3-1.7b", "auto", n_layers=7)
+
+
+def test_dispatch_handmade_uneven_partition():
+    """Hand-built Partition with blocks of size 2/2/2+head/1/3 on L=6, N=4."""
+    _run("qwen3-1.7b", "uneven")
