@@ -4,6 +4,12 @@
 workload model.  Validates the paper's claims: RoundPipe-sync cuts bubbles
 23–55% vs the best looped baseline; RoundPipe-async drives the absolute
 bubble below ~4.5%.
+
+The two rightmost columns reproduce the paper's Fig. 6 vs Fig. 7 transfer
+study from the SAME ExecutionPlan: ``rp_sync_blocked`` charges each slot's
+weight bytes as a head-of-line burst on a per-device PCIe transfer lane;
+``rp_sync_hidden`` streams them into the preceding compute window (the
+PrefetchProgram order the dispatch runtime executes).
 """
 from __future__ import annotations
 
@@ -11,9 +17,9 @@ from repro.core.partition import auto_partition, symmetric_partition
 from repro.core.plan import compile_plan
 from repro.core.schedule import (gpipe_schedule, interleaved_1f1b_schedule,
                                  looped_bfs_schedule, one_f_one_b_schedule)
-from repro.core.simulator import simulate, steady_state_bubble
+from repro.core.simulator import simulate, simulate_plan, steady_state_bubble
 
-from .workloads import PAPER_WORKLOADS, layer_costs
+from .workloads import PAPER_WORKLOADS, PCIE_BW, layer_costs
 
 N_GPUS, MICROBATCHES = 8, 16
 
@@ -46,6 +52,14 @@ def bubble_ratios(arch: str) -> dict:
     plan = compile_plan(p, layers, n_workers=N_GPUS)
     out["roundpipe_sync"] = simulate(
         plan.schedule(MICROBATCHES, round_size=N_GPUS)).bubble_ratio
+    # Fig. 6 vs Fig. 7: the same plan with parameter traffic on the PCIe
+    # lane — whole-block head-of-line bursts vs window-hidden prefetch
+    out["rp_sync_blocked"] = simulate_plan(
+        plan, MICROBATCHES, round_size=N_GPUS, bandwidth=PCIE_BW,
+        transfer_mode="block").bubble_ratio
+    out["rp_sync_hidden"] = simulate_plan(
+        plan, MICROBATCHES, round_size=N_GPUS, bandwidth=PCIE_BW,
+        transfer_mode="prefetch").bubble_ratio
     out["roundpipe_async"] = steady_state_bubble(
         plan.schedule(MICROBATCHES, round_size=N_GPUS, iterations=3),
         iteration=1)
@@ -73,11 +87,14 @@ def rows():
 
 def main():
     print("arch,gpipe,1f1b,looped_bfs,interleaved_1f1b,roundpipe_sync,"
+          "rp_sync_blocked,rp_sync_hidden,"
           "roundpipe_async,roundpipe_async_vsplit,sync_reduction_vs_best")
     for r in rows():
         print(f"{r['arch']},{r['gpipe']:.4f},{r['1f1b']:.4f},"
               f"{r['looped_bfs']:.4f},{r['interleaved_1f1b']:.4f},"
-              f"{r['roundpipe_sync']:.4f},{r['roundpipe_async']:.4f},"
+              f"{r['roundpipe_sync']:.4f},"
+              f"{r['rp_sync_blocked']:.4f},{r['rp_sync_hidden']:.4f},"
+              f"{r['roundpipe_async']:.4f},"
               f"{r['roundpipe_async_vsplit']:.4f},"
               f"{r['sync_reduction_vs_best']:.1%}")
 

@@ -1,0 +1,89 @@
+"""Paper Fig. 6 vs Fig. 7: parameter traffic blocking vs hiding.
+
+For each paper workload (8x RTX 4090, PCIe 4.0 x16), auto-partition and
+compile the ExecutionPlan, then measure on the SAME plan object:
+
+* ``blocked``  — two-resource simulation where each slot's weight bytes land
+  as one head-of-line burst when the compute lane demands them (the whole-
+  block gather the seed runtime used, Fig. 6);
+* ``hidden``   — the same bytes streamed into the preceding slot's compute
+  window, the order the compiled PrefetchProgram gives the dispatch
+  runtime's double-buffered uploader (Fig. 7);
+
+plus the transfer planner's own feasibility verdict: the per-window LPT load
+against the window capacity ``t_max * PCIE_BW`` (bytes the link moves during
+one micro-batch compute), including the §4.2.2 chunk-limit halving when
+capacity-sized chunks alone cannot pack under the cap.
+
+Run: PYTHONPATH=src python -m benchmarks.transfer_overlap
+"""
+from __future__ import annotations
+
+from repro.core.partition import auto_partition
+from repro.core.plan import compile_plan
+from repro.core.simulator import simulate_plan
+
+from .workloads import PAPER_WORKLOADS, PCIE_BW, layer_costs
+
+N_GPUS, MICROBATCHES = 8, 16
+
+
+def overlap_row(arch: str) -> dict:
+    layers = layer_costs(arch)
+    p = auto_partition(layers, n_devices=N_GPUS, n_microbatches=MICROBATCHES)
+    plan = compile_plan(p, layers, n_workers=N_GPUS)
+
+    blocked = simulate_plan(plan, MICROBATCHES, round_size=N_GPUS,
+                            bandwidth=PCIE_BW, transfer_mode="block")
+    hidden = simulate_plan(plan, MICROBATCHES, round_size=N_GPUS,
+                           bandwidth=PCIE_BW, transfer_mode="prefetch")
+    free = simulate_plan(plan, MICROBATCHES, round_size=N_GPUS)
+
+    capacity = int(plan.partition.t_max * PCIE_BW)
+    try:
+        prog = plan.prefetch_program(window_capacity_bytes=capacity)
+        # finest per-stage limit = how far the §4.2.2 halving had to go
+        fits, limit = True, min(
+            (wp.chunk_limit or capacity for wp in prog.window_plans
+             if wp.total), default=capacity)
+    except OverflowError:
+        prog = plan.prefetch_program()      # budget report without the cap
+        fits, limit = False, 0
+    return dict(
+        arch=arch,
+        weight_gib=sum(plan.stage_bytes) / 2**30,
+        window_cap_mib=capacity / 2**20,
+        max_window_mib=prog.max_window_load / 2**20,
+        chunk_limit_mib=limit / 2**20,
+        n_chunks=sum(len(t) for t in prog.uploads),
+        hides=fits,
+        bubble_free=free.bubble_ratio,
+        bubble_hidden=hidden.bubble_ratio,
+        bubble_blocked=blocked.bubble_ratio,
+        stall_hidden=hidden.stall_total,
+        stall_blocked=blocked.stall_total,
+        slowdown_blocked=blocked.makespan / free.makespan,
+        slowdown_hidden=hidden.makespan / free.makespan,
+    )
+
+
+def rows():
+    return [overlap_row(a) for a in PAPER_WORKLOADS]
+
+
+def main():
+    cols = ["arch", "weight_gib", "window_cap_mib", "max_window_mib",
+            "chunk_limit_mib", "n_chunks", "hides", "bubble_free",
+            "bubble_hidden", "bubble_blocked", "slowdown_hidden",
+            "slowdown_blocked"]
+    print(",".join(cols))
+    for r in rows():
+        print(f"{r['arch']},{r['weight_gib']:.2f},{r['window_cap_mib']:.1f},"
+              f"{r['max_window_mib']:.1f},{r['chunk_limit_mib']:.1f},"
+              f"{r['n_chunks']},{int(r['hides'])},{r['bubble_free']:.4f},"
+              f"{r['bubble_hidden']:.4f},{r['bubble_blocked']:.4f},"
+              f"{r['slowdown_hidden']:.3f},{r['slowdown_blocked']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -5,7 +5,11 @@
 # The plan layer (partition -> schedule -> execution) is jax-free and safe
 # to import anywhere; `dispatch` pulls in jax and stays a lazy import.
 from .partition import LayerCost, Partition, auto_partition  # noqa: F401
-from .plan import (ExecutionPlan, StageSpec, compile_plan,  # noqa: F401
-                   plan_from_config, uniform_partition)
+from .plan import (ChunkUpload, ExecutionPlan, PrefetchProgram,  # noqa: F401
+                   StageSpec, compile_plan, plan_from_config, pool_layout,
+                   uniform_partition)
 from .schedule import Schedule, StageTask, roundpipe_schedule  # noqa: F401
-from .simulator import SimResult, simulate, simulate_plan  # noqa: F401
+from .simulator import (SimResult, simulate, simulate_plan,  # noqa: F401
+                        simulate_transfers)
+from .transfer import (TransferItem, WindowPlan, lpt_pack,  # noqa: F401
+                       plan_stage_transfers, split_oversized)

@@ -38,6 +38,19 @@ when a slot's weights exit the ring its gradient is already globally
 reduced — the dispatch traffic doubles as the gradient ring-all-reduce
 (recorded in EXPERIMENTS.md §Perf).
 
+Chunked double-buffered injection (paper §4.2, DESIGN.md §3)
+------------------------------------------------------------
+With a compiled :class:`~repro.core.plan.PrefetchProgram`, slot ``t``'s
+block is not gathered in one head-of-line burst at its injection tick.
+Instead a *standby* buffer is filled during tick ``t-1`` (slot 0 during the
+fill prologue): each :class:`~repro.core.plan.ChunkUpload` moves one
+byte-range of one layer row from its pool owner to worker 0, in the LPT
+window order the transfer planner assigned, and the finished standby block
+is promoted into the ring at tick ``t``.  The chunk writes partition each
+row exactly, so the path is bit-identical to the whole-block gather — it
+only restructures the transfers so XLA can overlap them with the previous
+slot's compute instead of serializing them at the tick boundary.
+
 Structural properties inherited from the paper: zero weight binding (§3.1);
 fill/drain bubble of N-1 ticks each ≙ N(N-1)·t (§3.3); full activation
 recomputation from per-worker stashed boundaries (§2.1.1).
@@ -45,6 +58,8 @@ recomputation from per-worker stashed boundaries (§2.1.1).
 from __future__ import annotations
 
 import functools
+import itertools
+import math
 
 import jax
 import jax.numpy as jnp
@@ -76,7 +91,8 @@ def _zeros_block(layers_local, depth):
 def roundpipe_forward_backward(params, batch, worker_id, cfg: ModelConfig, *,
                                plan, n_workers: int, l_pad: int,
                                xent_chunk: int = 256, kv_chunk: int = 1024,
-                               ring_grad_dtype=jnp.float32):
+                               ring_grad_dtype=jnp.float32,
+                               prefetch_program=None):
     """Inside-shard_map body: returns (grads pytree, loss_sum, token_count).
 
     ``params['layers']`` leaves arrive LOCAL: (l_pad/N, ...) — this worker's
@@ -85,6 +101,10 @@ def roundpipe_forward_backward(params, batch, worker_id, cfg: ModelConfig, *,
     (embed/head/norm) is replicated over `model`.  ``plan`` supplies the
     static slot structure; all ring plumbing below is static per tick, only
     *which* slot a worker computes is traced.
+
+    ``prefetch_program`` switches injection from the monolithic per-tick
+    block gather to the chunked double-buffered uploader (module docstring);
+    ``None`` is the whole-block fallback.
     """
     n = n_workers
     l_total = cfg.n_layers
@@ -170,6 +190,60 @@ def roundpipe_forward_backward(params, batch, worker_id, cfg: ModelConfig, *,
         rows += [rows[0]] * (kmax - len(rows))
         return jax.tree.map(lambda *xs: jnp.stack(xs), *rows)
 
+    # ---- chunked double-buffered uploader (prefetch_program path) -----------
+    pool_leaves, pool_def = jax.tree_util.tree_flatten(pool)
+    leaf_elems = [int(math.prod(l.shape[1:])) for l in pool_leaves]
+    leaf_offs = list(itertools.accumulate([0] + leaf_elems[:-1]))
+    row_elems = sum(leaf_elems)
+
+    def _chunk_elem_range(cu):
+        """Map the chunk's plan-byte range to an element range of the actual
+        row (the cost-model byte total need not match the array dtype)."""
+        if cu.parent_bytes <= 0:
+            return 0, row_elems
+        return (cu.lo * row_elems // cu.parent_bytes,
+                cu.hi * row_elems // cu.parent_bytes)
+
+    def upload_slot(stand, slot_idx):
+        """Stream slot ``slot_idx``'s chunks into the standby leaves, one
+        ppermute per (chunk x overlapped leaf), in LPT window order.  The
+        chunk byte-ranges partition each row, so the union of writes equals
+        the whole-block gather exactly."""
+        stand = list(stand)
+        for cu in prefetch_program.uploads[slot_idx]:
+            if cu.row < 0:          # replicated LM head: never ring-resident
+                continue
+            a, b = _chunk_elem_range(cu)
+            for i, (off, ne) in enumerate(zip(leaf_offs, leaf_elems)):
+                la, lb = max(a - off, 0), min(b - off, ne)
+                if la >= lb:
+                    continue
+                src = jax.lax.slice(
+                    pool_leaves[i][cu.pool_row].reshape(-1), (la,), (lb,))
+                src = jax.lax.ppermute(src, AXIS, [(cu.owner, 0)])
+                flat = stand[i].reshape(kmax, -1)
+                stand[i] = flat.at[cu.row, la:lb].set(src).reshape(
+                    stand[i].shape)
+        return stand
+
+    def promote_standby(stand, spec):
+        """Standby -> injection block: replicate row 0 into padding rows
+        (same real-weight padding as ``assemble_block``)."""
+        leaves = []
+        for l in stand:
+            if spec.size < kmax:
+                pad = jnp.broadcast_to(l[0], (kmax - spec.size,) + l.shape[1:])
+                l = l.at[spec.size:].set(pad)
+            leaves.append(l)
+        return jax.tree_util.tree_unflatten(pool_def, leaves)
+
+    def zeros_standby():
+        return [jnp.zeros((kmax,) + l.shape[1:], l.dtype) for l in pool_leaves]
+
+    if prefetch_program is not None:
+        # fill prologue: slot 0 has no preceding compute window to hide in
+        standby = upload_slot(zeros_standby(), 0)
+
     n_ticks = s_total + n - 1
     for t in range(n_ticks):
         # ---- ring plumbing (static per tick) --------------------------------
@@ -178,8 +252,20 @@ def roundpipe_forward_backward(params, batch, worker_id, cfg: ModelConfig, *,
         gbuf = jax.tree.map(
             lambda a: jax.lax.ppermute(a, AXIS, _shift_perm(n)), gbuf)
         if t < s_total:
-            inj = assemble_block(slots[t])
-            ring = _ring_add(shifted, inj) if inj is not None else shifted
+            if prefetch_program is not None:
+                spec = slots[t]
+                if spec.size:
+                    ring = _ring_add(shifted, promote_standby(standby, spec))
+                else:
+                    ring = shifted
+                # double-buffer swap: slot t+1 streams into the fresh standby
+                # across THIS tick's compute windows (XLA overlaps the copies
+                # with the compute below — no tick-boundary burst)
+                if t + 1 < s_total:
+                    standby = upload_slot(zeros_standby(), t + 1)
+            else:
+                inj = assemble_block(slots[t])
+                ring = _ring_add(shifted, inj) if inj is not None else shifted
         else:
             ring = shifted
 
@@ -324,8 +410,11 @@ def resolve_plan(cfg: ModelConfig, step_cfg, n_workers: int):
 
 def pool_rows(cfg: ModelConfig, n_workers: int) -> int:
     """Pool depth after padding the stacked layer dim to a multiple of N
-    (`n_layers % N != 0` support — the ring staggers by stage, not layer)."""
-    return -(-cfg.n_layers // n_workers) * n_workers
+    (`n_layers % N != 0` support — the ring staggers by stage, not layer).
+    Shares ``plan.pool_layout`` with ``prefetch_program`` so the chunk
+    tables' owner/pool_row always match the runtime shard layout."""
+    from repro.core.plan import pool_layout
+    return pool_layout(cfg.n_layers, n_workers)[0]
 
 
 def pad_pool(params, cfg: ModelConfig, n_workers: int):
@@ -345,7 +434,7 @@ def pad_pool(params, cfg: ModelConfig, n_workers: int):
 
 
 def _build_mapped(cfg: ModelConfig, mesh, plan, *, xent_chunk: int,
-                  kv_chunk: int, ring_grad_dtype):
+                  kv_chunk: int, ring_grad_dtype, prefetch_program=None):
     """The shard_map'ed plan executor over PADDED params.
 
     Returns ``(mapped, l_pad, pspecs, grads_specs)`` where
@@ -359,6 +448,12 @@ def _build_mapped(cfg: ModelConfig, mesh, plan, *, xent_chunk: int,
         raise ValueError(
             f"plan covers {plan.n_layers} layers, model has {cfg.n_layers}")
     plan.validate()
+    if prefetch_program is not None:
+        if prefetch_program.n_workers != n:
+            raise ValueError(
+                f"prefetch program compiled for {prefetch_program.n_workers} "
+                f"workers, mesh has {n}")
+        prefetch_program.validate(plan)
     l_pad = pool_rows(cfg, n)
 
     abstract = T.abstract_params(cfg)
@@ -366,7 +461,7 @@ def _build_mapped(cfg: ModelConfig, mesh, plan, *, xent_chunk: int,
     body = functools.partial(
         roundpipe_forward_backward, cfg=cfg, plan=plan, n_workers=n,
         l_pad=l_pad, xent_chunk=xent_chunk, kv_chunk=kv_chunk,
-        ring_grad_dtype=ring_grad_dtype)
+        ring_grad_dtype=ring_grad_dtype, prefetch_program=prefetch_program)
     grads_specs = dict(pspecs) if "lm_head" in abstract else \
         {k: pspecs[k] for k in ("embed", "layers", "final_norm")}
 
@@ -385,13 +480,15 @@ def _build_mapped(cfg: ModelConfig, mesh, plan, *, xent_chunk: int,
 
 def build_roundpipe_grads_fn(cfg: ModelConfig, mesh, plan, *,
                              xent_chunk: int = 256, kv_chunk: int = 1024,
-                             ring_grad_dtype=jnp.float32):
+                             ring_grad_dtype=jnp.float32,
+                             prefetch_program=None):
     """shard_map'ed ``f(params, batch) -> (grads, loss, tokens)`` executing
     ``plan`` on UNPADDED params (reference-comparison API): pads the pool on
-    the way in and slices the gradient rows back out."""
+    the way in and slices the gradient rows back out.  ``prefetch_program``
+    selects the chunked double-buffered injection path (None = whole-block)."""
     mapped, l_pad, _, _ = _build_mapped(
         cfg, mesh, plan, xent_chunk=xent_chunk, kv_chunk=kv_chunk,
-        ring_grad_dtype=ring_grad_dtype)
+        ring_grad_dtype=ring_grad_dtype, prefetch_program=prefetch_program)
     n = axis_size(mesh, AXIS)
 
     def grads_fn(params, batch):
@@ -415,6 +512,10 @@ def build_roundpipe_train_step(cfg: ModelConfig, mesh, step_cfg,
     see ``pad_pool``) so it shards evenly over the `model` axis even when
     ``n_layers % N != 0`` — use ``init_roundpipe_state(..., n_workers=N)``.
 
+    ``step_cfg.prefetch`` selects the chunked double-buffered weight
+    uploader (the plan's compiled PrefetchProgram, paper §4.2); False falls
+    back to the whole-block per-tick gather.
+
     Returns ``(step, state_shardings, batch_shardings, plan)`` — the returned
     plan is the exact object the step executes, so callers can simulate it
     (``simulate_plan``) and compare against the real run.
@@ -424,10 +525,15 @@ def build_roundpipe_train_step(cfg: ModelConfig, mesh, step_cfg,
         raise ValueError("global batch must divide the model axis")
     if plan is None:
         plan = resolve_plan(cfg, step_cfg, n)
+    program = None
+    if getattr(step_cfg, "prefetch", True):
+        program = plan.prefetch_program(
+            chunk_limit=getattr(step_cfg, "prefetch_chunk_limit", None))
 
     mapped, l_pad, pspecs, _ = _build_mapped(
         cfg, mesh, plan, xent_chunk=step_cfg.xent_chunk,
-        kv_chunk=step_cfg.kv_chunk, ring_grad_dtype=step_cfg.accum_dtype)
+        kv_chunk=step_cfg.kv_chunk, ring_grad_dtype=step_cfg.accum_dtype,
+        prefetch_program=program)
     ospecs = opt_state_specs(pspecs, step_cfg.opt)
     state_specs = {"params": pspecs, "opt": ospecs}
 

@@ -95,11 +95,16 @@ def auto_partition(
             for j in range(i, n_layers):
                 acc += arr[j]
                 cands.add(acc)
-    lower = max(max(f), max(b[-1:]))  # any feasible t_max >= largest single item it must hold
     best: Partition | None = None
     nn = n_devices * (n_devices - 1)
+    # Any feasible t_max must hold every single backward item — the backward
+    # partition covers ALL layers, so t < max(b) can never pack (the old
+    # and-guard wrongly kept such t alive when t >= max(f)).  This single
+    # test subsumes the forward bound: b = f + grad >= f elementwise, and
+    # the forward partition only packs the non-fused prefix anyway.
+    max_b = max(b)
     for t in sorted(cands):
-        if t < max(b) and t < max(f):
+        if t < max_b:
             continue
         # Backward partition: pack from the deepest layer down so the FIRST
         # backward stage (fused) is maximal.  Reverse arrays, pack, un-reverse.

@@ -42,6 +42,110 @@ from .schedule import Schedule, roundpipe_schedule
 from .transfer import WindowPlan, plan_stage_transfers
 
 
+def pool_layout(n_layers: int, n_workers: int) -> tuple[int, int]:
+    """The layer-pool shard layout: ``(padded_rows, rows_per_worker)``.
+
+    Single source of truth shared by the dispatch runtime (``pool_rows`` /
+    ``pad_pool`` / gradient deposit) and ``prefetch_program``'s
+    owner/pool_row tables — layer ``l`` lives in row ``l % rows_per_worker``
+    of worker ``l // rows_per_worker``'s shard.
+    """
+    per = -(-n_layers // n_workers)
+    return per * n_workers, per
+
+
+@dataclasses.dataclass(frozen=True)
+class ChunkUpload:
+    """One static upload: a byte-range of one layer's weights, streamed in
+    idle window ``window`` of the tick preceding ``slot``'s injection, into
+    ring-buffer row ``row`` of the standby block.
+
+    ``layer``/``row``/``owner``/``pool_row`` are -1 for the replicated
+    LM-head pseudo-layer: its bytes occupy a window in the transfer budget
+    (the simulator charges them) but the TPU runtime never moves it — head
+    weights are replicated, not ring-resident.
+    """
+    slot: int            # destination ring slot
+    window: int          # idle window (0..n_windows-1) carrying the chunk
+    name: str            # chunk name ("layer3#1", "lm_head", ...)
+    layer: int           # global layer id (-1: replicated head)
+    row: int             # row within the slot's ring block (-1: head)
+    owner: int           # pool shard (worker) owning the layer (-1: head)
+    pool_row: int        # row within the owner's local pool shard (-1: head)
+    lo: int              # chunk byte range within the parent tensor
+    hi: int
+    parent_bytes: int    # parent tensor's total planned bytes
+
+    @property
+    def bytes(self) -> int:
+        return self.hi - self.lo
+
+
+@dataclasses.dataclass(frozen=True)
+class PrefetchProgram:
+    """Compiled per-tick upload tables for the double-buffered weight
+    uploader (paper §4.2): slot ``s``'s table streams into the standby
+    buffer during tick ``s - 1`` (slot 0 during the fill prologue), so the
+    block lands row-by-row across the preceding slot's compute windows
+    instead of as one head-of-line burst.
+
+    ``uploads[s]`` is window-major: all of window 0's chunks, then window
+    1's, ... — the order the runtime issues the copies and the order the
+    simulator charges them against link bandwidth.
+    """
+    n_workers: int
+    n_windows: int
+    window_capacity_bytes: int | None
+    window_plans: tuple         # per-slot WindowPlan (the LPT packings)
+    uploads: tuple              # per-slot tuple[ChunkUpload], window-major
+
+    @property
+    def n_slots(self) -> int:
+        return len(self.uploads)
+
+    @property
+    def max_window_load(self) -> int:
+        return max((wp.max_load for wp in self.window_plans), default=0)
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(wp.total for wp in self.window_plans)
+
+    def validate(self, plan: "ExecutionPlan") -> None:
+        """Raise ValueError unless every ring row of every slot is covered
+        exactly (contiguous, gap-free byte ranges per parent tensor)."""
+        if self.n_slots != plan.n_slots:
+            raise ValueError(
+                f"{self.n_slots} upload tables for {plan.n_slots} slots")
+        for stage, table in zip(plan.stages, self.uploads):
+            spans: dict[int, list] = {l: [] for l in stage.layers}
+            for cu in table:
+                if cu.slot != stage.slot:
+                    raise ValueError(f"upload {cu.name} routed to slot "
+                                     f"{cu.slot}, table is slot {stage.slot}")
+                if cu.layer < 0:
+                    if not stage.includes_head:
+                        raise ValueError(f"head chunk in headless slot {stage.slot}")
+                    continue
+                if cu.layer not in spans:
+                    raise ValueError(
+                        f"upload {cu.name} targets layer {cu.layer}, not in "
+                        f"slot {stage.slot}'s block {stage.layers}")
+                spans[cu.layer].append((cu.lo, cu.hi))
+            for l, ranges in spans.items():
+                ranges.sort()
+                want = int(plan.layer_costs[l].weight_bytes)
+                pos = 0
+                for lo, hi in ranges:
+                    if lo != pos:
+                        raise ValueError(
+                            f"slot {stage.slot} layer {l}: gap at byte {pos}")
+                    pos = hi
+                if pos != want:
+                    raise ValueError(
+                        f"slot {stage.slot} layer {l}: covered {pos}B of {want}B")
+
+
 @dataclasses.dataclass(frozen=True)
 class StageSpec:
     """One ring slot: a contiguous block of body layers (possibly empty for a
@@ -97,6 +201,18 @@ class ExecutionPlan:
     def bwd_costs(self) -> tuple:
         return tuple(s.cost for s in self.stages if s.kind != "F")
 
+    @property
+    def stage_bytes(self) -> tuple:
+        """Per-slot weight bytes (body layers + head when fused carries it) —
+        what the two-resource simulator charges against link bandwidth."""
+        out = []
+        for s in self.stages:
+            b = sum(int(self.layer_costs[l].weight_bytes) for l in s.layers)
+            if s.includes_head:
+                b += int(self.layer_costs[-1].weight_bytes)
+            out.append(b)
+        return tuple(out)
+
     # ---- the two consumers -------------------------------------------------
     def schedule(self, n_microbatches: int, *, round_size: int | None = None,
                  iterations: int = 1, g0: int = 0) -> Schedule:
@@ -117,9 +233,8 @@ class ExecutionPlan:
         LPT-packed into its idle windows — the prefetch order a
         double-buffered weight uploader follows, and what the simulator
         checks to confirm parameter traffic hides inside activation
-        windows.  NOTE: the current dispatch runtime moves whole blocks on
-        the ring and does not consume this yet; wiring the prefetch overlap
-        into execution is a planned follow-up (ROADMAP)."""
+        windows.  ``prefetch_program`` compiles these into the static
+        upload tables the dispatch runtime executes."""
         m = n_windows or self.n_workers
         plans = []
         for stage in self.stages:
@@ -131,6 +246,45 @@ class ExecutionPlan:
                 names, m, window_capacity_bytes=window_capacity_bytes,
                 chunk_limit=chunk_limit))
         return tuple(plans)
+
+    def prefetch_program(self, n_windows: int | None = None,
+                         *, window_capacity_bytes: int | None = None,
+                         chunk_limit: int | None = None) -> PrefetchProgram:
+        """Compile the prefetch order into per-tick static upload tables
+        (see :class:`PrefetchProgram`): each WindowPlan chunk becomes a
+        :class:`ChunkUpload` naming its pool owner, standby ring row and
+        byte-range — everything the chunked double-buffered uploader in
+        ``core/dispatch.py`` needs, resolved at trace time."""
+        window_plans = self.prefetch(n_windows,
+                                     window_capacity_bytes=window_capacity_bytes,
+                                     chunk_limit=chunk_limit)
+        _, per = pool_layout(self.n_layers, self.n_workers)
+        uploads = []
+        for stage, wp in zip(self.stages, window_plans):
+            row_of = {f"layer{l}": (k, l) for k, l in enumerate(stage.layers)}
+            table = []
+            for w, window in enumerate(wp.windows):
+                for c in window:
+                    parent = c.chunk_of or c.name
+                    if parent in row_of:
+                        row, layer = row_of[parent]
+                        owner, pool_row = divmod(layer, per)
+                        pbytes = int(self.layer_costs[layer].weight_bytes)
+                    else:                     # replicated LM head: budget only
+                        row = layer = owner = pool_row = -1
+                        pbytes = int(self.layer_costs[-1].weight_bytes)
+                    table.append(ChunkUpload(
+                        slot=stage.slot, window=w, name=c.name, layer=layer,
+                        row=row, owner=owner, pool_row=pool_row,
+                        lo=c.offset, hi=c.offset + c.bytes,
+                        parent_bytes=pbytes))
+            uploads.append(tuple(table))
+        program = PrefetchProgram(
+            n_workers=self.n_workers, n_windows=n_windows or self.n_workers,
+            window_capacity_bytes=window_capacity_bytes,
+            window_plans=window_plans, uploads=tuple(uploads))
+        program.validate(self)
+        return program
 
     # ---- validation --------------------------------------------------------
     def validate(self) -> None:

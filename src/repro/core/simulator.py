@@ -10,6 +10,24 @@ iteration boundaries (paper §5.6.1 simulates 16 micro-batches on 8 GPUs).
 :class:`~repro.core.plan.ExecutionPlan` object the SPMD dispatch runtime
 executes, so simulated and executed schedules are one and the same object
 (see DESIGN.md §1).
+
+Two-resource model (paper §4.2, Fig. 6 vs Fig. 7)
+-------------------------------------------------
+Passing ``bandwidth`` models each device as TWO lanes: a compute lane (the
+classic list schedule) and a transfer lane that must move a slot's weight
+bytes to the device before the slot's first micro-batch may start there.
+
+* ``transfer_mode="block"`` — the transfer starts only when the compute
+  lane demands the slot (head-of-line burst, Fig. 6): compute stalls for
+  the whole block upload.
+* ``transfer_mode="prefetch"`` — the transfer may start as soon as the
+  lane is free AND the device has begun the *previous* slot (the
+  double-buffer window the PrefetchProgram uploads into, Fig. 7): the
+  upload hides inside the preceding compute window and only residual
+  bytes (window overload) stall the compute lane.
+
+The bubble gap between the two modes on the same plan is exactly the
+paper's blocking-vs-hidden comparison.
 """
 from __future__ import annotations
 
@@ -26,11 +44,19 @@ class SimResult:
     finish: dict                       # task key -> finish time
     start: dict                        # task key -> start time
     n_devices: int
+    dev_of: dict = dataclasses.field(default_factory=dict)  # task key -> device
+    transfer_busy: list = dataclasses.field(default_factory=list)
+    transfer_stall: list = dataclasses.field(default_factory=list)
 
     @property
     def bubble_ratio(self) -> float:
         total = self.n_devices * self.makespan
         return 0.0 if total == 0 else 1.0 - sum(self.busy) / total
+
+    @property
+    def stall_total(self) -> float:
+        """Compute time lost waiting on the transfer lane (two-resource runs)."""
+        return sum(self.transfer_stall)
 
     def window_bubble(self, keys: set) -> float:
         """Bubble ratio restricted to the time window spanned by ``keys``.
@@ -49,17 +75,30 @@ class SimResult:
             f = self.finish[k]
             lo, hi = max(s, t0), min(f, t1)
             if hi > lo:
-                busy[self._dev[k]] += hi - lo
+                busy[self.dev_of[k]] += hi - lo
         return 1.0 - sum(busy) / (self.n_devices * span)
 
 
-def simulate(schedule: Schedule) -> SimResult:
-    """List-schedule the tasks: fixed per-device order, dep-gated start times."""
+def _list_schedule(schedule: Schedule, stage_bytes=None, *,
+                   bandwidth: float = 0.0,
+                   transfer_mode: str = "prefetch") -> SimResult:
+    """List-schedule the tasks: fixed per-device order, dep-gated start times.
+
+    With ``stage_bytes`` and ``bandwidth``, the first task of every
+    contiguous same-stage run on a device additionally waits on that
+    device's transfer lane (see module docstring).  A contiguous run is one
+    slot visit — in RoundPipe each slot visits a device once per round, so
+    each visit re-streams the slot's weights.
+    """
     per_dev: dict[int, list[StageTask]] = defaultdict(list)
     for t in schedule.tasks:
         per_dev[t.device].append(t)
     ptr = {d: 0 for d in per_dev}
     dev_free = {d: 0.0 for d in per_dev}
+    lane_free = {d: 0.0 for d in per_dev}
+    group_open = {d: 0.0 for d in per_dev}   # start of the previous slot visit
+    transfer_busy = [0.0] * schedule.n_devices
+    transfer_stall = [0.0] * schedule.n_devices
     finish: dict = {}
     start: dict = {}
     dev_of: dict = {}
@@ -73,6 +112,23 @@ def simulate(schedule: Schedule) -> SimResult:
                 if any(dep not in finish for dep in t.deps):
                     break
                 begin = max(dev_free[d], max((finish[dep] for dep in t.deps), default=0.0))
+                new_group = ptr[d] == 0 or tasks[ptr[d] - 1].stage != t.stage
+                if stage_bytes is not None and bandwidth > 0 and new_group:
+                    dur = stage_bytes[t.stage] / bandwidth
+                    if transfer_mode == "block":
+                        # head-of-line: lane starts only on compute demand
+                        xfer0 = max(begin, lane_free[d])
+                    else:
+                        # hidden: lane may stream during the previous slot's
+                        # compute window (double-buffered standby upload)
+                        xfer0 = max(group_open[d], lane_free[d])
+                    lane_free[d] = xfer0 + dur
+                    transfer_busy[d] += dur
+                    stalled = max(0.0, lane_free[d] - begin)
+                    transfer_stall[d] += stalled
+                    begin += stalled
+                if new_group:
+                    group_open[d] = begin
                 start[t.key] = begin
                 finish[t.key] = begin + t.duration
                 dev_of[t.key] = d
@@ -87,19 +143,43 @@ def simulate(schedule: Schedule) -> SimResult:
     busy = [0.0] * schedule.n_devices
     for t in schedule.tasks:
         busy[t.device] += t.duration
-    res = SimResult(makespan, busy, finish, start, schedule.n_devices)
-    res._dev = dev_of
-    return res
+    return SimResult(makespan, busy, finish, start, schedule.n_devices,
+                     dev_of, transfer_busy, transfer_stall)
+
+
+def simulate(schedule: Schedule) -> SimResult:
+    """Compute-lane-only simulation (transfers assumed free)."""
+    return _list_schedule(schedule)
+
+
+def simulate_transfers(schedule: Schedule, stage_bytes, *, bandwidth: float,
+                       transfer_mode: str = "prefetch") -> SimResult:
+    """Two-resource simulation: ``stage_bytes[slot]`` weight bytes must cross
+    a per-device link of ``bandwidth`` bytes/time-unit before each slot visit
+    (see module docstring for the block/prefetch lane policies)."""
+    if transfer_mode not in ("block", "prefetch"):
+        raise ValueError(f"unknown transfer_mode {transfer_mode!r}")
+    if bandwidth <= 0:
+        raise ValueError("bandwidth must be positive")
+    return _list_schedule(schedule, stage_bytes, bandwidth=bandwidth,
+                          transfer_mode=transfer_mode)
 
 
 def simulate_plan(plan, n_microbatches: int | None = None, *,
                   round_size: int | None = None,
-                  iterations: int = 1) -> SimResult:
+                  iterations: int = 1,
+                  bandwidth: float | None = None,
+                  transfer_mode: str = "prefetch") -> SimResult:
     """Validate and simulate an :class:`~repro.core.plan.ExecutionPlan`.
 
     The schedule is generated from the *same* compiled plan the dispatch
     runtime executes (one resident micro-batch group per worker per step
     corresponds to ``n_microbatches == round_size == plan.n_workers``).
+
+    ``bandwidth`` (bytes per cost-model time-unit) switches on the
+    two-resource model: each slot's ``plan.stage_bytes`` is charged against
+    the device's transfer lane, either head-of-line (``transfer_mode=
+    "block"``) or hidden in the preceding compute window (``"prefetch"``).
     """
     from .schedule import validate
 
@@ -107,7 +187,10 @@ def simulate_plan(plan, n_microbatches: int | None = None, *,
     sched = plan.schedule(n_microbatches or plan.n_workers,
                           round_size=round_size, iterations=iterations)
     validate(sched)
-    return simulate(sched)
+    if bandwidth is None:
+        return simulate(sched)
+    return simulate_transfers(sched, plan.stage_bytes, bandwidth=bandwidth,
+                              transfer_mode=transfer_mode)
 
 
 def steady_state_bubble(schedule: Schedule, iteration: int = 1) -> float:

@@ -23,12 +23,18 @@ class TransferItem:
     name: str
     bytes: int
     chunk_of: str | None = None   # parent tensor if this is a split chunk
+    offset: int = 0               # byte offset within the parent tensor
+
+    @property
+    def end(self) -> int:
+        return self.offset + self.bytes
 
 
 @dataclasses.dataclass
 class WindowPlan:
     windows: list[list[TransferItem]]   # per-window chunk assignment
     loads: list[int]                    # per-window byte totals
+    chunk_limit: int | None = None      # effective limit the packer settled on
 
     @property
     def max_load(self) -> int:
@@ -52,8 +58,12 @@ def split_oversized(items: Sequence[TransferItem], chunk_limit: int) -> list[Tra
             continue
         n_chunks = -(-it.bytes // chunk_limit)
         base, rem = divmod(it.bytes, n_chunks)
+        off = it.offset
         for c in range(n_chunks):
-            out.append(TransferItem(f"{it.name}#{c}", base + (1 if c < rem else 0), it.name))
+            size = base + (1 if c < rem else 0)
+            out.append(TransferItem(f"{it.name}#{c}", size,
+                                    it.chunk_of or it.name, off))
+            off += size
     return out
 
 
@@ -77,7 +87,7 @@ def lpt_pack(items: Sequence[TransferItem], n_windows: int,
         windows[w].append(it)
         loads[w] = load + it.bytes
         heapq.heappush(heap, (loads[w], w))
-    return WindowPlan(windows, loads)
+    return WindowPlan(windows, loads, chunk_limit)
 
 
 def plan_stage_transfers(
@@ -86,22 +96,35 @@ def plan_stage_transfers(
     *,
     window_capacity_bytes: int | None = None,
     chunk_limit: int | None = None,
+    min_chunk_bytes: int | None = None,
 ) -> WindowPlan:
     """Plan one stage's parameter uploads across its M data-transfer windows.
 
     If ``window_capacity_bytes`` is given (bytes PCIe/ICI can move during one
-    micro-batch compute), raise if the plan cannot avoid blocking — the
-    caller should then grow M or shrink the stage (ties into the partitioner's
-    memory/time caps).
+    micro-batch compute), the chunk limit is progressively halved (paper
+    §4.2.2) until the LPT packing fits under the capacity: LPT only bounds
+    ``max_load <= total/M + max_item``, so capacity-sized chunks can still
+    overshoot even when finer chunks pack exactly (e.g. two 1.5x-capacity
+    tensors into 3 windows).  Only when the limit reaches ``min_chunk_bytes``
+    (default capacity/256) without fitting is the workload truly infeasible
+    and OverflowError raised — the caller should then grow M or shrink the
+    stage (ties into the partitioner's memory/time caps).
     """
     items = [TransferItem(k, v) for k, v in sorted(param_bytes.items())]
     if chunk_limit is None and window_capacity_bytes is not None:
         chunk_limit = window_capacity_bytes
     plan = lpt_pack(items, n_microbatches, chunk_limit=chunk_limit)
     if window_capacity_bytes is not None and plan.max_load > window_capacity_bytes:
-        total = plan.total
-        raise OverflowError(
-            f"parameter traffic {total}B cannot hide inside "
-            f"{n_microbatches} windows of {window_capacity_bytes}B"
-        )
+        floor = min_chunk_bytes or max(1, window_capacity_bytes // 256)
+        while (plan.max_load > window_capacity_bytes
+               and chunk_limit is not None and chunk_limit > floor):
+            chunk_limit = max(floor, chunk_limit // 2)
+            plan = lpt_pack(items, n_microbatches, chunk_limit=chunk_limit)
+        if plan.max_load > window_capacity_bytes:
+            raise OverflowError(
+                f"parameter traffic {plan.total}B cannot hide inside "
+                f"{n_microbatches} windows of {window_capacity_bytes}B "
+                f"(best max window load {plan.max_load}B at "
+                f"chunk_limit {chunk_limit})"
+            )
     return plan

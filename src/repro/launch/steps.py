@@ -39,6 +39,13 @@ class StepConfig:
     # repro.core.plan.ExecutionPlan) describing the uneven stage split.
     # None -> auto-partition from the architecture's cost model (paper §4.4).
     partition: Any = None
+    # roundpipe only: stream each slot's weights chunk-by-chunk into a
+    # standby buffer across the previous slot's compute windows (the plan's
+    # PrefetchProgram, paper §4.2).  False -> whole-block per-tick gather.
+    prefetch: bool = True
+    # optional chunk-split granularity (bytes) for the prefetch tables;
+    # None packs whole layer rows per window.
+    prefetch_chunk_limit: Optional[int] = None
     opt: OptConfig = dataclasses.field(default_factory=OptConfig)
 
 

@@ -11,6 +11,9 @@ mode:
   auto     — cost-model auto_partition (paper §4.4), incl. LM-head stage
   uneven   — hand-built non-uniform partition with an LM-head pseudo-layer,
              n_layers % n_workers != 0
+  prefetch — the uneven-auto plan executed twice: whole-block injection vs
+             the chunked double-buffered PrefetchProgram path (forced chunk
+             splits); gradients must match bit-tightly AND the reference
 """
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
@@ -35,6 +38,8 @@ import dataclasses  # noqa: E402
 
 
 def make_plan(mode: str, cfg, n_workers: int):
+    if mode == "prefetch":
+        return plan_from_config(cfg, n_workers)
     if mode == "uniform":
         part = uniform_partition(cfg.n_layers)
         costs = [LayerCost(1.0, 2.0) for _ in range(cfg.n_layers)]
@@ -93,6 +98,33 @@ def main():
                                         kv_chunk=8)
     with mesh:
         rp_g, rp_loss, rp_tokens = jax.jit(grads_fn)(params, batch)
+
+    if mode == "prefetch":
+        # chunk_limit = 1/3 of the largest BODY layer's planned bytes: every
+        # ring row is split into >= 3 partial-row uploads spread across LPT
+        # windows (head chunks are budget-only, row == -1, so they must not
+        # count toward the splitting guard)
+        biggest = max(int(c.weight_bytes)
+                      for c in plan.layer_costs[:plan.n_layers])
+        program = plan.prefetch_program(chunk_limit=max(1, biggest // 3))
+        n_chunks = sum(1 for t in program.uploads for cu in t if cu.row >= 0)
+        assert n_chunks > plan.n_layers, "row chunk splitting did not engage"
+        pf_fn = build_roundpipe_grads_fn(cfg, mesh, plan, xent_chunk=8,
+                                         kv_chunk=8,
+                                         prefetch_program=program)
+        with mesh:
+            pf_g, pf_loss, _ = jax.jit(pf_fn)(params, batch)
+        np.testing.assert_allclose(float(pf_loss), float(rp_loss), rtol=1e-6)
+        for (ka, va), (kb, vb) in zip(
+                jax.tree_util.tree_flatten_with_path(rp_g)[0],
+                jax.tree_util.tree_flatten_with_path(pf_g)[0]):
+            assert ka == kb
+            np.testing.assert_allclose(np.asarray(vb, np.float32),
+                                       np.asarray(va, np.float32),
+                                       rtol=1e-5, atol=1e-7,
+                                       err_msg=jax.tree_util.keystr(ka))
+        print(f"prefetch path matches whole-block "
+              f"({n_chunks} row chunk uploads)")
 
     print("ref loss", float(ref_l), "rp loss", float(rp_loss))
     np.testing.assert_allclose(float(rp_loss), float(ref_l), rtol=1e-4)

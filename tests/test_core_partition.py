@@ -9,6 +9,46 @@ from repro.core.schedule import roundpipe_schedule
 from repro.core.simulator import simulate
 
 
+def _unpruned_partition(layers, *, n_devices, n_microbatches):
+    """auto_partition's search with NO candidate pruning — the oracle the
+    or-based skip must agree with."""
+    from repro.core.partition import _greedy_pack
+    n_layers = len(layers)
+    f = [l.fwd for l in layers]
+    b = [l.fwd + l.grad for l in layers]
+    wmem = [l.weight_bytes + l.act_bytes for l in layers]
+    cands = set()
+    for arr in (f, b):
+        for i in range(n_layers):
+            acc = 0.0
+            for j in range(i, n_layers):
+                acc += arr[j]
+                cands.add(acc)
+    best = None
+    nn = n_devices * (n_devices - 1)
+    for t in sorted(cands):
+        bins_rev = _greedy_pack(b[::-1], wmem[::-1], t, float("inf"))
+        if bins_rev is None:
+            continue
+        bwd_stages = [tuple(range(n_layers - e, n_layers - s))
+                      for s, e in bins_rev]
+        n_fused = len(bwd_stages[0])
+        fcosts = f[: n_layers - n_fused]
+        if fcosts:
+            fbins = _greedy_pack(fcosts, wmem[: n_layers - n_fused], t,
+                                 float("inf"))
+            if fbins is None:
+                continue
+            fwd_stages = tuple(tuple(range(s, e)) for s, e in fbins)
+        else:
+            fwd_stages = ()
+        s_total = len(fwd_stages) + len(bwd_stages)
+        obj = (n_microbatches * s_total + nn) * t
+        if best is None or obj < best.objective - 1e-12:
+            best = Partition(fwd_stages, tuple(bwd_stages), t, obj, s_total)
+    return best
+
+
 def _check_valid(p: Partition, layers, mem_cap=float("inf")):
     n_layers = len(layers)
     fused = p.bwd_stages[0]
@@ -118,6 +158,24 @@ class TestAutoPartition:
             return j
 
         assert p.objective == pytest.approx(brute(), rel=1e-9)
+
+    def test_pruned_search_matches_unpruned(self):
+        """The or-based candidate skip (t below max backward-item cost can
+        never pack) is a pure speedup: the pruned search must return the
+        identical Partition an unpruned search finds."""
+        cases = [
+            [LayerCost(f, 2 * f) for f in (1.0, 3.0, 1.0, 0.5, 2.5, 1.0)],
+            [LayerCost(f, g) for f, g in
+             [(0.5, 2.0), (2.0, 1.0), (1.0, 4.0), (3.0, 1.5), (0.7, 0.9)]],
+            uniform_costs_from_config(11, head_fwd_ratio=2.5),
+            [LayerCost(1.0 + (i % 3), 2.0 + (i % 4)) for i in range(13)],
+        ]
+        for layers in cases:
+            for n, m in [(2, 4), (3, 6), (4, 8)]:
+                got = auto_partition(layers, n_devices=n, n_microbatches=m)
+                want = _unpruned_partition(layers, n_devices=n,
+                                           n_microbatches=m)
+                assert got == want, (n, m)
 
     def test_partition_feeds_schedule(self):
         """End-to-end: partition -> stage costs -> RoundPipe schedule simulates."""

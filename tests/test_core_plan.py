@@ -116,6 +116,85 @@ class TestPrefetchOrder:
         assert wp.total == 100 * plan.fused.size + 1000
 
 
+class TestPrefetchProgram:
+    def _plan(self, n_layers=10, n_workers=4, seed=3):
+        rng = random.Random(seed)
+        layers = random_layers(rng, n_layers)
+        part = auto_partition(layers, n_devices=n_workers,
+                              n_microbatches=n_workers)
+        return compile_plan(part, layers, n_workers=n_workers), layers
+
+    def test_upload_tables_cover_every_row(self):
+        plan, layers = self._plan()
+        prog = plan.prefetch_program()
+        prog.validate(plan)          # byte coverage per (slot, layer)
+        assert prog.n_slots == plan.n_slots
+        # a chunked program still covers exactly
+        big = max(int(c.weight_bytes) for c in plan.layer_costs)
+        chunked = plan.prefetch_program(chunk_limit=max(1, big // 4))
+        chunked.validate(plan)
+        assert sum(len(t) for t in chunked.uploads) > \
+            sum(len(t) for t in prog.uploads)
+
+    def test_owner_and_pool_row_match_padded_pool(self):
+        plan, _ = self._plan(n_layers=7, n_workers=4)   # 7 % 4 != 0
+        per = -(-plan.n_layers // plan.n_workers)
+        for table in plan.prefetch_program().uploads:
+            for cu in table:
+                if cu.layer < 0:
+                    continue
+                assert cu.owner == cu.layer // per
+                assert cu.pool_row == cu.layer % per
+                assert 0 <= cu.owner < plan.n_workers
+
+    def test_window_major_order_and_row_bounds(self):
+        plan, _ = self._plan()
+        prog = plan.prefetch_program()
+        for spec, table in zip(plan.stages, prog.uploads):
+            windows = [cu.window for cu in table]
+            assert windows == sorted(windows)            # window-major
+            for cu in table:
+                if cu.row >= 0:
+                    assert 0 <= cu.row < max(spec.size, 1)
+
+    def test_head_chunks_are_budget_only(self):
+        layers = [LayerCost(1.0, 2.0, weight_bytes=64) for _ in range(5)]
+        layers += [LayerCost(4.0, 8.0, weight_bytes=4096)]
+        part = auto_partition(layers, n_devices=2, n_microbatches=2)
+        plan = compile_plan(part, layers, n_workers=2, n_body_layers=5)
+        prog = plan.prefetch_program()
+        fused_table = prog.uploads[plan.n_fwd]
+        head = [cu for cu in fused_table if cu.layer < 0]
+        assert head and all(cu.row == -1 and cu.owner == -1 for cu in head)
+        assert sum(cu.bytes for cu in head) == 4096
+
+    def test_capacity_threads_through_to_halving(self):
+        """A slot of two 1.5x-capacity layers in 3 windows needs the §4.2.2
+        chunk-limit halving (capacity-sized chunks LPT-pack to 1.5x the
+        cap); the program must compile, fit, and still cover every row."""
+        layers = [LayerCost(1.0, 2.0, weight_bytes=150) for _ in range(4)]
+        part = Partition(fwd_stages=((0, 1),), bwd_stages=((2, 3), (0, 1)),
+                         t_max=6.0, objective=0.0, n_stages=3)
+        plan = compile_plan(part, layers, n_workers=2)
+        prog = plan.prefetch_program(n_windows=3, window_capacity_bytes=100)
+        prog.validate(plan)
+        assert prog.max_window_load <= 100
+        assert prog.window_capacity_bytes == 100
+        assert all(wp.chunk_limit == 50 for wp in prog.window_plans)
+
+    def test_stage_bytes_matches_prefetch_totals(self):
+        plan, _ = self._plan()
+        prog = plan.prefetch_program()
+        assert tuple(wp.total for wp in prog.window_plans) == plan.stage_bytes
+
+    def test_mismatched_plan_rejected(self):
+        plan_a, _ = self._plan(n_layers=10, seed=3)
+        plan_b, _ = self._plan(n_layers=9, seed=4)
+        prog = plan_a.prefetch_program()
+        with pytest.raises(ValueError):
+            prog.validate(plan_b)
+
+
 class TestPlanFromConfig:
     """Architecture-derived default plans (the StepConfig partition=None path)."""
 

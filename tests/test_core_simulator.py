@@ -1,0 +1,87 @@
+"""Simulator tests: SimResult as plain data + the two-resource model."""
+import pytest
+
+from repro.core.partition import LayerCost, auto_partition
+from repro.core.plan import compile_plan
+from repro.core.schedule import roundpipe_schedule
+from repro.core.simulator import (SimResult, simulate, simulate_plan,
+                                  simulate_transfers)
+
+
+def _plan(weight_bytes=1 << 20, n_layers=9, n=3):
+    layers = [LayerCost(1.0, 2.0, weight_bytes=weight_bytes)
+              for _ in range(n_layers)]
+    part = auto_partition(layers, n_devices=n, n_microbatches=2 * n)
+    return compile_plan(part, layers, n_workers=n)
+
+
+class TestSimResultIsPlainData:
+    def test_hand_built_window_bubble(self):
+        """Regression: window_bubble used to crash on a hand-built SimResult
+        because the task->device map lived in an out-of-band `_dev`
+        attribute only simulate() attached."""
+        res = SimResult(
+            makespan=4.0, busy=[3.0, 2.0],
+            finish={"a": 2.0, "b": 4.0}, start={"a": 0.0, "b": 1.0},
+            n_devices=2, dev_of={"a": 0, "b": 1})
+        bub = res.window_bubble({"a", "b"})
+        assert 0.0 <= bub < 1.0
+
+    def test_simulate_populates_dev_of(self):
+        sched = roundpipe_schedule(2, 2, [1.0], [3.0, 3.0])
+        res = simulate(sched)
+        assert set(res.dev_of) == {t.key for t in sched.tasks}
+        for t in sched.tasks:
+            assert res.dev_of[t.key] == t.device
+
+
+class TestTwoResourceModel:
+    def test_blocked_never_beats_hidden_never_beats_free(self):
+        plan = _plan()
+        free = simulate_plan(plan)
+        hid = simulate_plan(plan, bandwidth=1e6, transfer_mode="prefetch")
+        blk = simulate_plan(plan, bandwidth=1e6, transfer_mode="block")
+        assert blk.makespan >= hid.makespan - 1e-9
+        assert hid.makespan >= free.makespan - 1e-9
+        assert blk.bubble_ratio >= hid.bubble_ratio - 1e-9
+
+    def test_infinite_bandwidth_recovers_compute_only(self):
+        plan = _plan()
+        free = simulate_plan(plan)
+        fast = simulate_plan(plan, bandwidth=1e30, transfer_mode="block")
+        assert fast.makespan == pytest.approx(free.makespan)
+        assert fast.stall_total == pytest.approx(0.0, abs=1e-20)
+
+    def test_transfer_busy_accounts_all_bytes(self):
+        """Each slot is streamed once per round (to whichever device runs
+        it), so lane busy time totals rounds x sum(stage_bytes) / bw."""
+        plan = _plan(weight_bytes=3 << 20)
+        bw = 1e6
+        n = plan.n_workers
+        res = simulate_plan(plan, 2 * n, round_size=n, bandwidth=bw,
+                            transfer_mode="prefetch")
+        assert sum(res.transfer_busy) == pytest.approx(
+            2 * sum(plan.stage_bytes) / bw)
+
+    def test_blocked_stalls_at_least_burst_time(self):
+        """In block mode every slot visit stalls compute for >= bytes/bw."""
+        plan = _plan(weight_bytes=5 << 20)
+        bw = 1e6
+        res = simulate_plan(plan, bandwidth=bw, transfer_mode="block")
+        min_stall = sum(plan.stage_bytes) / bw      # one round
+        assert res.stall_total >= min_stall - 1e-9
+
+    def test_zero_weight_plan_is_free(self):
+        plan = _plan(weight_bytes=0)
+        free = simulate_plan(plan)
+        blk = simulate_plan(plan, bandwidth=1.0, transfer_mode="block")
+        assert blk.makespan == pytest.approx(free.makespan)
+
+    def test_bad_mode_and_bandwidth_raise(self):
+        plan = _plan()
+        sched = plan.schedule(plan.n_workers)
+        with pytest.raises(ValueError):
+            simulate_transfers(sched, plan.stage_bytes, bandwidth=1e6,
+                               transfer_mode="burst")
+        with pytest.raises(ValueError):
+            simulate_transfers(sched, plan.stage_bytes, bandwidth=0.0)

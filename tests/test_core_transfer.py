@@ -52,6 +52,50 @@ class TestPlanStageTransfers:
         with pytest.raises(OverflowError):
             plan_stage_transfers({"w": 1000}, n_microbatches=2, window_capacity_bytes=100)
 
+    def test_chunk_limit_halved_until_feasible(self):
+        """Regression (§4.2.2): two 1.5x-capacity tensors into 3 windows.
+
+        Capacity-sized chunks split each tensor into 75+75, which LPT can
+        only pack to a 150 max load (spurious OverflowError before the fix);
+        half-capacity chunks (50) pack to exactly 100/100/100.
+        """
+        plan = plan_stage_transfers({"a": 150, "b": 150}, n_microbatches=3,
+                                    window_capacity_bytes=100)
+        assert plan.max_load <= 100
+        assert plan.total == 300
+        assert sorted(plan.loads) == [100, 100, 100]
+        assert plan.chunk_limit == 50           # one halving was enough
+
+    def test_halving_stops_at_floor_and_raises(self):
+        """Truly infeasible traffic (total > M x capacity) still raises."""
+        with pytest.raises(OverflowError):
+            plan_stage_transfers({"a": 500, "b": 500}, n_microbatches=3,
+                                 window_capacity_bytes=100)
+
+    def test_explicit_chunk_limit_is_halving_start(self):
+        plan = plan_stage_transfers({"a": 150, "b": 150}, n_microbatches=3,
+                                    window_capacity_bytes=100, chunk_limit=50)
+        assert plan.max_load == 100 and plan.chunk_limit == 50
+
+
+class TestChunkOffsets:
+    def test_chunks_tile_the_parent(self):
+        out = split_oversized([TransferItem("w", 100)], 30)
+        assert [c.offset for c in out] == [0, 25, 50, 75]
+        assert all(c.end == c.offset + c.bytes for c in out)
+        assert out[-1].end == 100
+
+    def test_resplit_keeps_parent_offsets(self):
+        once = split_oversized([TransferItem("w", 100)], 50)
+        twice = split_oversized(once, 25)
+        assert all(c.chunk_of == "w" for c in twice)
+        spans = sorted((c.offset, c.end) for c in twice)
+        pos = 0
+        for lo, hi in spans:
+            assert lo == pos
+            pos = hi
+        assert pos == 100
+
 
 @settings(max_examples=40, deadline=None)
 @given(
@@ -80,3 +124,47 @@ def test_split_conserves_bytes(sizes, limit):
     out = split_oversized(items, limit)
     assert sum(c.bytes for c in out) == sum(sizes)
     assert all(c.bytes <= limit for c in out)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    sizes=st.lists(st.integers(1, 10_000), min_size=1, max_size=20),
+    limit=st.integers(100, 5_000),
+)
+def test_chunk_reassembly_preserves_parents(sizes, limit):
+    """Grouping chunks by parent and sorting by offset reassembles each
+    parent tensor exactly: contiguous, gap-free, byte-conserving."""
+    items = [TransferItem(f"t{i}", s) for i, s in enumerate(sizes)]
+    out = split_oversized(items, limit)
+    by_parent = {}
+    for c in out:
+        by_parent.setdefault(c.chunk_of or c.name, []).append(c)
+    assert set(by_parent) == {it.name for it in items}
+    for it in items:
+        pos = 0
+        for c in sorted(by_parent[it.name], key=lambda c: c.offset):
+            assert c.offset == pos
+            pos = c.end
+        assert pos == it.bytes
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    sizes=st.lists(st.integers(1, 10_000), min_size=1, max_size=20),
+    n_windows=st.integers(1, 12),
+    cap_scale=st.floats(0.3, 3.0),
+)
+def test_plan_stage_transfers_fits_or_raises(sizes, n_windows, cap_scale):
+    """Whenever the planner returns, its packing respects the capacity; and
+    a capacity below total/M (pigeonhole-infeasible) always raises."""
+    params = {f"t{i}": s for i, s in enumerate(sizes)}
+    total = sum(sizes)
+    capacity = max(1, int(cap_scale * total / n_windows))
+    try:
+        plan = plan_stage_transfers(params, n_windows,
+                                    window_capacity_bytes=capacity)
+    except OverflowError:
+        return
+    assert plan.max_load <= capacity
+    assert plan.total == total
+    assert capacity * n_windows >= total     # pigeonhole sanity

@@ -45,3 +45,10 @@ def test_dispatch_auto_partition_nondivisible_layers():
 def test_dispatch_handmade_uneven_partition():
     """Hand-built Partition with blocks of size 2/2/2+head/1/3 on L=6, N=4."""
     _run("qwen3-1.7b", "uneven")
+
+
+def test_dispatch_prefetch_matches_whole_block():
+    """Chunked double-buffered PrefetchProgram injection vs the monolithic
+    whole-block gather on an uneven plan (n_layers % N != 0): gradients and
+    loss must agree (and both must match the single-program reference)."""
+    _run("qwen3-1.7b", "prefetch", n_layers=7)
