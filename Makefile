@@ -4,13 +4,10 @@
 test:
 	PYTHONPATH=src python -m pytest -x -q
 
-# skip the slow subprocess-compile suites (quick signal while iterating)
+# skip the @pytest.mark.slow subprocess-compile suites (quick signal while
+# iterating); includes the LoRA unit suites (test_models_lora, test_lora_plan)
 test-fast:
-	PYTHONPATH=src python -m pytest -x -q \
-		--ignore=tests/test_roundpipe_dispatch.py \
-		--ignore=tests/test_launch_steps.py \
-		--ignore=tests/test_end_to_end.py \
-		--ignore=tests/test_models_smoke.py
+	PYTHONPATH=src python -m pytest -x -q -m "not slow"
 
 bench-bubble:
 	PYTHONPATH=src python -m benchmarks.bubble_ratio

@@ -15,6 +15,13 @@ against the window capacity ``t_max * PCIE_BW`` (bytes the link moves during
 one micro-batch compute), including the §4.2.2 chunk-limit halving when
 capacity-sized chunks alone cannot pack under the cap.
 
+The two directions of the link report SEPARATELY: ``up_busy`` is weight
+upload time, ``down_busy`` the §4.3 gradient/optimizer download time — one
+lane charge used to hide that only the DOWN direction shrinks under
+frozen-base LoRA.  The ``lora_*`` columns rerun the same plan with rank-16
+adapter byte accounting: uploads identical, downloads collapse, and the
+bubble recovers whatever the download backlog was costing.
+
 Run: PYTHONPATH=src python -m benchmarks.transfer_overlap
 """
 from __future__ import annotations
@@ -49,21 +56,46 @@ def overlap_row(arch: str) -> dict:
     except OverflowError:
         prog = plan.prefetch_program()      # budget report without the cap
         fits, limit = False, 0
+    # frozen-base LoRA on the same partition: same uploads, adapter downloads
+    layers_l = layer_costs(arch, lora_rank=16)
+    plan_l = compile_plan(p, layers_l, n_workers=N_GPUS)
+    lora_hidden = simulate_plan(plan_l, MICROBATCHES, round_size=N_GPUS,
+                                bandwidth=PCIE_BW, transfer_mode="prefetch")
+
+    def duplex_fits(pl):
+        """Half-duplex feasibility: uploads AND gradient downloads packed
+        into the same window budget (plan.prefetch include_downloads)."""
+        try:
+            pl.prefetch(window_capacity_bytes=capacity,
+                        include_downloads=True)
+            return True
+        except OverflowError:
+            return False
+
     return dict(
         arch=arch,
         weight_gib=sum(plan.stage_bytes) / 2**30,
+        download_gib=sum(plan.stage_download_bytes) / 2**30,
+        lora_download_mib=sum(plan_l.stage_download_bytes) / 2**20,
         window_cap_mib=capacity / 2**20,
         max_window_mib=prog.max_window_load / 2**20,
         chunk_limit_mib=limit / 2**20,
         n_chunks=sum(len(t) for t in prog.uploads),
         hides=fits,
+        hides_with_down=duplex_fits(plan),
+        hides_lora_down=duplex_fits(plan_l),
         bubble_free=free.bubble_ratio,
         bubble_hidden=hidden.bubble_ratio,
         bubble_blocked=blocked.bubble_ratio,
+        bubble_lora=lora_hidden.bubble_ratio,
         stall_hidden=hidden.stall_total,
         stall_blocked=blocked.stall_total,
+        up_busy_hidden=hidden.upload_total,
+        down_busy_hidden=hidden.download_total,
+        down_busy_lora=lora_hidden.download_total,
         slowdown_blocked=blocked.makespan / free.makespan,
         slowdown_hidden=hidden.makespan / free.makespan,
+        slowdown_lora=lora_hidden.makespan / free.makespan,
     )
 
 
@@ -72,17 +104,27 @@ def rows():
 
 
 def main():
-    cols = ["arch", "weight_gib", "window_cap_mib", "max_window_mib",
-            "chunk_limit_mib", "n_chunks", "hides", "bubble_free",
-            "bubble_hidden", "bubble_blocked", "slowdown_hidden",
-            "slowdown_blocked"]
+    cols = ["arch", "weight_gib", "download_gib", "lora_download_mib",
+            "window_cap_mib", "max_window_mib",
+            "chunk_limit_mib", "n_chunks", "hides", "hides_with_down",
+            "hides_lora_down", "bubble_free",
+            "bubble_hidden", "bubble_blocked", "bubble_lora",
+            "up_busy_hidden", "down_busy_hidden", "down_busy_lora",
+            "slowdown_hidden", "slowdown_blocked", "slowdown_lora"]
     print(",".join(cols))
     for r in rows():
-        print(f"{r['arch']},{r['weight_gib']:.2f},{r['window_cap_mib']:.1f},"
+        print(f"{r['arch']},{r['weight_gib']:.2f},{r['download_gib']:.2f},"
+              f"{r['lora_download_mib']:.2f},{r['window_cap_mib']:.1f},"
               f"{r['max_window_mib']:.1f},{r['chunk_limit_mib']:.1f},"
-              f"{r['n_chunks']},{int(r['hides'])},{r['bubble_free']:.4f},"
+              f"{r['n_chunks']},{int(r['hides'])},"
+              f"{int(r['hides_with_down'])},{int(r['hides_lora_down'])},"
+              f"{r['bubble_free']:.4f},"
               f"{r['bubble_hidden']:.4f},{r['bubble_blocked']:.4f},"
-              f"{r['slowdown_hidden']:.3f},{r['slowdown_blocked']:.3f}")
+              f"{r['bubble_lora']:.4f},"
+              f"{r['up_busy_hidden']:.3g},{r['down_busy_hidden']:.3g},"
+              f"{r['down_busy_lora']:.3g},"
+              f"{r['slowdown_hidden']:.3f},{r['slowdown_blocked']:.3f},"
+              f"{r['slowdown_lora']:.3f}")
 
 
 if __name__ == "__main__":

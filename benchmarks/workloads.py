@@ -41,25 +41,39 @@ def head_flops(cfg: ModelConfig, b: int = MICRO_B, s: int = SEQ) -> float:
 
 def layer_costs(arch: str, *, grad_ratio: float = 2.0,
                 b: int = MICRO_B, s: int = SEQ,
-                head_chunks: int = 1) -> list[LayerCost]:
+                head_chunks: int = 1,
+                lora_rank: int | None = None) -> list[LayerCost]:
     """LayerCost list (body layers + LM-head pseudo-layer, paper Fig. 1).
 
     ``head_chunks > 1`` splits the LM head into vocab-chunk pseudo-layers —
     legal under the vocab-chunked cross-entropy and a beyond-paper lever for
-    the partitioner when the head dominates t_max (EXPERIMENTS.md §Perf)."""
+    the partitioner when the head dominates t_max (EXPERIMENTS.md §Perf).
+
+    ``lora_rank`` switches on the frozen-base split byte accounting: the
+    same dense uploads, but ``trainable_bytes`` (the §4.3 gradient/optimizer
+    download traffic) shrinks to the rank-r adapter factors and the frozen
+    head downloads nothing — the fine-tuning regime of the paper's
+    Qwen3-235B claim."""
     cfg = get_config(arch)
     unit = GPU_FP16_FLOPS
     lf = layer_flops(cfg, b, s) / unit
     hf = head_flops(cfg, b, s) / unit
     layer_bytes = _layer_param_bytes(cfg)
+    trainable = None
+    if lora_rank is not None:
+        from repro.models.lora import LoraConfig, adapter_params_per_layer
+        trainable = 2 * adapter_params_per_layer(cfg, LoraConfig(rank=lora_rank))
     costs = [LayerCost(lf, grad_ratio * lf, weight_bytes=layer_bytes,
-                       act_bytes=2 * s * b * cfg.d_model)
+                       act_bytes=2 * s * b * cfg.d_model,
+                       trainable_bytes=trainable)
              for _ in range(cfg.n_layers)]
     for _ in range(head_chunks):
         costs.append(LayerCost(hf / head_chunks, grad_ratio * hf / head_chunks,
                                weight_bytes=2 * cfg.vocab_size * cfg.d_model
                                // head_chunks,
-                               act_bytes=2 * s * b * cfg.d_model))
+                               act_bytes=2 * s * b * cfg.d_model,
+                               trainable_bytes=0 if lora_rank is not None
+                               else None))
     return costs
 
 

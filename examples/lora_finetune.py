@@ -1,0 +1,86 @@
+"""Frozen-base LoRA fine-tuning through the RoundPipe ring (DESIGN.md §4).
+
+The paper's fine-tuning claim — LoRA on Qwen3-235B at 31K tokens on a single
+server — rests on the base model being frozen: only the rank-r adapter
+factors ``{A, B}`` train, so the traveling gradient buffer, the end-of-ring
+deposit, and the host-resident optimizer copies all shrink from parameter
+size to adapter size while the dense weight ring keeps streaming read-only
+blocks.
+
+This example runs that regime end-to-end on a 2x4 virtual mesh: a 7-layer
+model on a 4-worker ring (7 % 4 != 0, uneven auto-partitioned stages + an
+LM-head pseudo-stage), ``StepConfig.lora`` enabling the adapter ring.  It
+prints the compiled plan's split byte accounting (dense uploads vs
+adapter-only downloads), then takes a few optimizer steps and shows the
+loss falling while the frozen base stays bit-identical.
+
+Run: python examples/lora_finetune.py      (sets its own XLA_FLAGS)
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import sys
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro.configs import smoke_config
+from repro.core.dispatch import build_roundpipe_train_step, init_roundpipe_state
+from repro.core.plan import plan_from_config
+from repro.core.simulator import simulate_plan
+from repro.launch.mesh import make_mesh
+from repro.launch.steps import StepConfig
+from repro.models.config import get_config
+from repro.models.lora import LoraConfig
+from repro.optim import OptConfig
+
+cfg = smoke_config(get_config("qwen3-1.7b"))
+cfg = dataclasses.replace(cfg, n_layers=7, name=cfg.name + "-lora-ft")
+mesh = make_mesh((2, 4), ("data", "model"))
+B, S = 8, 32
+
+lora_cfg = LoraConfig(rank=4, alpha=8.0, target_modules=("attn", "mlp"))
+step_cfg = StepConfig(strategy="roundpipe", async_optimizer=False,
+                      kv_chunk=S, xent_chunk=S, lora=lora_cfg,
+                      opt=OptConfig(lr=1e-2))
+
+# -- split byte accounting: same dense uploads, adapter-only downloads -------
+plan = plan_from_config(cfg, 4, lora=lora_cfg)
+full = plan_from_config(cfg, 4, partition=plan.partition)
+print(plan.describe())
+print(f"simulated bubble (one round): {simulate_plan(plan).bubble_ratio:.4f}")
+up, down, full_down = (sum(plan.stage_bytes), sum(plan.stage_download_bytes),
+                       sum(full.stage_download_bytes))
+print(f"weight uploads   : {up:>9d} B/step (dense, unchanged)")
+print(f"grad downloads   : {down:>9d} B/step (adapters only; "
+      f"full fine-tune would ship {full_down} B, {full_down / down:.0f}x more)")
+
+# -- train: only the adapters move ------------------------------------------
+rng = np.random.default_rng(0)
+step, state_sh, _, _ = build_roundpipe_train_step(cfg, mesh, step_cfg, B, S,
+                                                  plan=plan)
+with mesh:
+    state = jax.device_put(
+        init_roundpipe_state(jax.random.PRNGKey(0), cfg, step_cfg,
+                             n_workers=4), state_sh)
+    base_before = jax.tree.map(np.asarray, state["params"]["layers"])
+    for i in range(5):
+        batch = {
+            "tokens": rng.integers(0, cfg.vocab_size, (B, S)).astype(np.int32),
+            "labels": rng.integers(0, cfg.vocab_size, (B, S)).astype(np.int32),
+        }
+        state, metrics = step(state, batch)
+        print(f"step {i}: loss {float(metrics['loss']):.4f} "
+              f"gnorm {float(metrics['grad_norm']):.4f}")
+
+    for a, b in zip(jax.tree.leaves(base_before),
+                    jax.tree.leaves(jax.tree.map(np.asarray,
+                                                 state["params"]["layers"]))):
+        assert np.array_equal(a, b), "frozen base moved!"
+    n_opt = sum(x.size for x in jax.tree.leaves(state["opt"]["master"]))
+    n_base = sum(x.size for x in jax.tree.leaves(state["params"]["layers"]))
+    print(f"frozen base bit-identical after 5 steps; optimizer master covers "
+          f"{n_opt} adapter params vs {n_base} frozen base params")

@@ -38,6 +38,20 @@ when a slot's weights exit the ring its gradient is already globally
 reduced — the dispatch traffic doubles as the gradient ring-all-reduce
 (recorded in EXPERIMENTS.md §Perf).
 
+Frozen-base adapters (LoRA)
+---------------------------
+With a :class:`repro.models.lora.LoraConfig` the runtime switches to the
+paper's fine-tuning regime (the Qwen3-235B-on-one-server claim): the dense
+weight ring is READ-ONLY and a second, adapter-shaped ring travels beside
+it carrying each slot's ``{"A", "B"}`` factors (the adapter pool shards,
+pads and ships exactly like the layer pool — it is just ~100-1000x
+smaller).  Every stage computes with the merged weights
+``W + (alpha/r)·B@A`` but differentiates ONLY through the adapter operand:
+the traveling gradient buffer, the hop-by-hop reduction and the
+end-of-ring deposit all shrink from parameter size to adapter size, and
+base/embed/head/norm gradients are never materialized — the deposited
+pytree contains exactly the adapter leaves.
+
 Chunked double-buffered injection (paper §4.2, DESIGN.md §3)
 ------------------------------------------------------------
 With a compiled :class:`~repro.core.plan.PrefetchProgram`, slot ``t``'s
@@ -66,10 +80,12 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.compat import shard_map
+from repro.models import lora as lora_mod
 from repro.models import transformer as T
 from repro.models.config import ModelConfig
 from repro.models.layers import apply_norm
-from repro.optim import apply_updates, init_opt_state, opt_state_specs
+from repro.optim import (apply_updates, init_opt_state, merge_trainable,
+                         opt_state_specs, trainable_leaves)
 from repro.launch.mesh import axis_size
 
 AXIS = "model"
@@ -92,7 +108,7 @@ def roundpipe_forward_backward(params, batch, worker_id, cfg: ModelConfig, *,
                                plan, n_workers: int, l_pad: int,
                                xent_chunk: int = 256, kv_chunk: int = 1024,
                                ring_grad_dtype=jnp.float32,
-                               prefetch_program=None):
+                               prefetch_program=None, lora=None):
     """Inside-shard_map body: returns (grads pytree, loss_sum, token_count).
 
     ``params['layers']`` leaves arrive LOCAL: (l_pad/N, ...) — this worker's
@@ -105,8 +121,15 @@ def roundpipe_forward_backward(params, batch, worker_id, cfg: ModelConfig, *,
     ``prefetch_program`` switches injection from the monolithic per-tick
     block gather to the chunked double-buffered uploader (module docstring);
     ``None`` is the whole-block fallback.
+
+    ``lora`` (a :class:`repro.models.lora.LoraConfig`) selects the
+    frozen-base mode: ``params['lora']`` (adapter pool, sharded/padded like
+    the layer pool) rides a second ring, stages compute with merged weights
+    but differentiate adapters only, and the returned grads pytree is
+    ``{"lora": ...}`` — no base gradient is ever materialized.
     """
     n = n_workers
+    frozen = lora is not None
     l_total = cfg.n_layers
     per = l_pad // n
     # worker id from a P(AXIS)-sharded iota input rather than axis_index —
@@ -133,19 +156,26 @@ def roundpipe_forward_backward(params, batch, worker_id, cfg: ModelConfig, *,
     # ---- tick-state ---------------------------------------------------------
     ring = _zeros_block(pool, kmax)                        # traveling weights
     # traveling gradients: fp32 for exactness; bf16 (§Perf C1b) halves the
-    # dominant dispatch traffic (hop count <= N keeps the error ~2^-8)
+    # dominant dispatch traffic (hop count <= N keeps the error ~2^-8).
+    # Frozen-base mode: the buffer is ADAPTER-shaped — the ring traffic and
+    # the deposit shrink to trainable size, base grads never exist.
+    grad_pool = params["lora"] if frozen else pool
+    if frozen:
+        a_ring = _zeros_block(grad_pool, kmax)             # traveling adapters
     gbuf = jax.tree.map(lambda a: a.astype(ring_grad_dtype),
-                        _zeros_block(pool, kmax))
-    pool_grads = jax.tree.map(lambda a: jnp.zeros(a.shape, jnp.float32), pool)
+                        _zeros_block(grad_pool, kmax))
+    pool_grads = jax.tree.map(lambda a: jnp.zeros(a.shape, jnp.float32),
+                              grad_pool)
     stash = jnp.zeros((l_total + 1,) + bshape, x_emb.dtype)  # row L = scratch
     act = jnp.zeros(bshape, x_emb.dtype)
     grad_carry = jnp.zeros(bshape, jnp.float32)
     loss_sum = jnp.float32(0.0)
     tok_count = jnp.int32(0)
-    embed_grad = jnp.zeros(params["embed"].shape, jnp.float32)
-    head_grad = jnp.zeros(head_w.shape, jnp.float32)
-    fnorm_grad = jax.tree.map(lambda a: jnp.zeros(a.shape, jnp.float32),
-                              params["final_norm"])
+    if not frozen:
+        embed_grad = jnp.zeros(params["embed"].shape, jnp.float32)
+        head_grad = jnp.zeros(head_w.shape, jnp.float32)
+        fnorm_grad = jax.tree.map(lambda a: jnp.zeros(a.shape, jnp.float32),
+                                  params["final_norm"])
 
     def block_row(block, k):
         return jax.tree.map(lambda a: a[k], block)
@@ -176,14 +206,16 @@ def roundpipe_forward_backward(params, batch, worker_id, cfg: ModelConfig, *,
                                           chunk=xent_chunk)
         return tot, cnt                        # cnt rides as vjp aux
 
-    def assemble_block(spec):
+    def assemble_block(spec, src_pool=pool):
         """Gather slot ``spec``'s layers from their pool owners to worker 0
         (static plumbing).  Padding rows repeat the first layer so every ring
-        row holds real weights (finite jacobians for the masked lanes)."""
+        row holds real weights (finite jacobians for the masked lanes).
+        ``src_pool`` defaults to the dense layer pool; the frozen-base mode
+        reuses the same plumbing for the adapter pool."""
         rows = []
         for lid in spec.layers:
             owner, idx = divmod(lid, per)
-            inj = jax.tree.map(lambda a: a[idx], pool)
+            inj = jax.tree.map(lambda a: a[idx], src_pool)
             rows.append(jax.lax.ppermute(inj, AXIS, [(owner, 0)]))
         if not rows:
             return None
@@ -251,6 +283,9 @@ def roundpipe_forward_backward(params, batch, worker_id, cfg: ModelConfig, *,
             lambda a: jax.lax.ppermute(a, AXIS, _shift_perm(n)), ring)
         gbuf = jax.tree.map(
             lambda a: jax.lax.ppermute(a, AXIS, _shift_perm(n)), gbuf)
+        if frozen:
+            a_shifted = jax.tree.map(
+                lambda a: jax.lax.ppermute(a, AXIS, _shift_perm(n)), a_ring)
         if t < s_total:
             if prefetch_program is not None:
                 spec = slots[t]
@@ -266,8 +301,17 @@ def roundpipe_forward_backward(params, batch, worker_id, cfg: ModelConfig, *,
             else:
                 inj = assemble_block(slots[t])
                 ring = _ring_add(shifted, inj) if inj is not None else shifted
+            if frozen:
+                # adapters are ~100-1000x smaller than the dense block: the
+                # whole-block gather is already far below one chunk upload,
+                # so they skip the standby machinery even under prefetch
+                inj_a = assemble_block(slots[t], params["lora"])
+                a_ring = _ring_add(a_shifted, inj_a) \
+                    if inj_a is not None else a_shifted
         else:
             ring = shifted
+            if frozen:
+                a_ring = a_shifted
 
         # ---- compute: worker w holds slot (t - w) ---------------------------
         fb = t - w                                          # traced
@@ -280,6 +324,11 @@ def roundpipe_forward_backward(params, batch, worker_id, cfg: ModelConfig, *,
 
         def do_plain(op):
             act_, stash_ = op
+            # frozen-base: forward compute runs on the merged weights; merged
+            # INSIDE the cond branch so fused/backward ticks (which re-merge
+            # within their own vjp closures) never pay for a dead dense block
+            eff_ring = lora_mod.merge_layers(ring, a_ring, lora) \
+                if frozen else ring
             x_in = jnp.where(fb == 0, x_emb, act_)
 
             def step_one(xc, st_, k, lw):
@@ -293,7 +342,7 @@ def roundpipe_forward_backward(params, batch, worker_id, cfg: ModelConfig, *,
                 return jnp.where(active, y, xc), st_
 
             if kmax == 1:
-                return step_one(x_in, stash_, 0, block_row(ring, 0))
+                return step_one(x_in, stash_, 0, block_row(eff_ring, 0))
 
             def body(carry, inp):
                 xc, st_ = carry
@@ -301,54 +350,93 @@ def roundpipe_forward_backward(params, batch, worker_id, cfg: ModelConfig, *,
                 return step_one(xc, st_, k, lw), None
 
             (y, stash_), _ = jax.lax.scan(body, (x_in, stash_),
-                                          (jnp.arange(kmax), ring))
+                                          (jnp.arange(kmax), eff_ring))
             return y, stash_
 
         act, stash = jax.lax.cond(plain_on, do_plain,
                                   lambda op: op, (act, stash))
 
-        def do_fused(op):
-            act_, ls, tc, gcarry, hg, fg, gb_, eg = op
-            x_in = jnp.where(fb == 0, x_emb, act_)          # Sf == 0 edge
-            tot, vjp, cnt = jax.vjp(
-                fused_loss, ring, params["final_norm"], head_w, x_in,
-                has_aux=True)
-            gb, gf, gh, gx = vjp(jnp.float32(1.0))
-            gb_ = jax.tree.map(lambda a, d: a + d.astype(a.dtype), gb_, gb)
-            if sf == 0 and fused_spec.layers and tokens is not None:
-                eg = eg.at[tokens].add(gx.astype(jnp.float32))
-            return (act_, ls + tot, tc + cnt, gx.astype(jnp.float32),
-                    hg + gh.astype(jnp.float32),
-                    jax.tree.map(lambda a, d: a + d.astype(jnp.float32),
-                                 fg, gf),
-                    gb_, eg)
+        if frozen:
+            # frozen base: differentiate through the adapter operand only —
+            # the vjp emits ADAPTER-shaped block grads; dense/head/norm/embed
+            # cotangents are never formed
+            def do_fused(op):
+                act_, ls, tc, gcarry, gb_ = op
+                x_in = jnp.where(fb == 0, x_emb, act_)      # Sf == 0 edge
 
-        (act, loss_sum, tok_count, grad_carry, head_grad, fnorm_grad, gbuf,
-         embed_grad) = jax.lax.cond(
-            fused_on, do_fused, lambda op: op,
+                def floss(ablk, xx):
+                    return fused_loss(lora_mod.merge_layers(ring, ablk, lora),
+                                      params["final_norm"], head_w, xx)
+
+                tot, vjp, cnt = jax.vjp(floss, a_ring, x_in, has_aux=True)
+                ga, gx = vjp(jnp.float32(1.0))
+                gb_ = jax.tree.map(lambda a, d: a + d.astype(a.dtype),
+                                   gb_, ga)
+                return (act_, ls + tot, tc + cnt,
+                        gx.astype(jnp.float32), gb_)
+
+            act, loss_sum, tok_count, grad_carry, gbuf = jax.lax.cond(
+                fused_on, do_fused, lambda op: op,
+                (act, loss_sum, tok_count, grad_carry, gbuf))
+
+            def do_bwd(op):
+                gcarry, gb_ = op
+                x_in = jax.lax.dynamic_index_in_dim(
+                    stash, jnp.minimum(start, l_total), 0, keepdims=False)
+                y, vjp = jax.vjp(
+                    lambda ablk, xx: stage_fwd(
+                        lora_mod.merge_layers(ring, ablk, lora), n_act, xx),
+                    a_ring, x_in)
+                ga, gx = vjp(gcarry.astype(y.dtype))
+                gb_ = jax.tree.map(lambda a, d: a + d.astype(a.dtype),
+                                   gb_, ga)
+                return gx.astype(jnp.float32), gb_
+
+            grad_carry, gbuf = jax.lax.cond(
+                bwd_on, do_bwd, lambda op: op, (grad_carry, gbuf))
+        else:
+            def do_fused(op):
+                act_, ls, tc, gcarry, hg, fg, gb_, eg = op
+                x_in = jnp.where(fb == 0, x_emb, act_)      # Sf == 0 edge
+                tot, vjp, cnt = jax.vjp(
+                    fused_loss, ring, params["final_norm"], head_w, x_in,
+                    has_aux=True)
+                gb, gf, gh, gx = vjp(jnp.float32(1.0))
+                gb_ = jax.tree.map(lambda a, d: a + d.astype(a.dtype), gb_, gb)
+                if sf == 0 and fused_spec.layers and tokens is not None:
+                    eg = eg.at[tokens].add(gx.astype(jnp.float32))
+                return (act_, ls + tot, tc + cnt, gx.astype(jnp.float32),
+                        hg + gh.astype(jnp.float32),
+                        jax.tree.map(lambda a, d: a + d.astype(jnp.float32),
+                                     fg, gf),
+                        gb_, eg)
+
             (act, loss_sum, tok_count, grad_carry, head_grad, fnorm_grad,
-             gbuf, embed_grad))
+             gbuf, embed_grad) = jax.lax.cond(
+                fused_on, do_fused, lambda op: op,
+                (act, loss_sum, tok_count, grad_carry, head_grad, fnorm_grad,
+                 gbuf, embed_grad))
 
-        def do_bwd(op):
-            gcarry, gb_, eg = op
-            x_in = jax.lax.dynamic_index_in_dim(
-                stash, jnp.minimum(start, l_total), 0, keepdims=False)
-            y, vjp = jax.vjp(lambda blk, xx: stage_fwd(blk, n_act, xx),
-                             ring, x_in)
-            gb, gx = vjp(gcarry.astype(y.dtype))
-            gb_ = jax.tree.map(lambda a, d: a + d.astype(a.dtype), gb_, gb)
+            def do_bwd(op):
+                gcarry, gb_, eg = op
+                x_in = jax.lax.dynamic_index_in_dim(
+                    stash, jnp.minimum(start, l_total), 0, keepdims=False)
+                y, vjp = jax.vjp(lambda blk, xx: stage_fwd(blk, n_act, xx),
+                                 ring, x_in)
+                gb, gx = vjp(gcarry.astype(y.dtype))
+                gb_ = jax.tree.map(lambda a, d: a + d.astype(a.dtype), gb_, gb)
 
-            def embed_bwd(e):
-                if tokens is None:
-                    return e                                  # frontend stub
-                return e.at[tokens].add(gx.astype(jnp.float32))
+                def embed_bwd(e):
+                    if tokens is None:
+                        return e                              # frontend stub
+                    return e.at[tokens].add(gx.astype(jnp.float32))
 
-            eg = jax.lax.cond(jnp.logical_and(start == 0, n_act > 0),
-                              embed_bwd, lambda e: e, eg)
-            return gx.astype(jnp.float32), gb_, eg
+                eg = jax.lax.cond(jnp.logical_and(start == 0, n_act > 0),
+                                  embed_bwd, lambda e: e, eg)
+                return gx.astype(jnp.float32), gb_, eg
 
-        grad_carry, gbuf, embed_grad = jax.lax.cond(
-            bwd_on, do_bwd, lambda op: op, (grad_carry, gbuf, embed_grad))
+            grad_carry, gbuf, embed_grad = jax.lax.cond(
+                bwd_on, do_bwd, lambda op: op, (grad_carry, gbuf, embed_grad))
 
         # ---- gradient deposit: slot exits the ring at worker N-1 -------------
         e_slot = t - (n - 1)
@@ -363,11 +451,18 @@ def roundpipe_forward_backward(params, batch, worker_id, cfg: ModelConfig, *,
                     pool_grads, arriving)
 
     # ---- finalize: reduce replicated-param grads ------------------------------
+    loss_sum = jax.lax.psum(loss_sum, AXIS)
+    tok_count = jax.lax.psum(tok_count, AXIS)
+    scale = 1.0 / jnp.maximum(tok_count.astype(jnp.float32), 1.0)
+    if frozen:
+        # the deposited pytree holds EXACTLY the adapter leaves: the ring
+        # all-reduce already summed them, so no psum and no base entries
+        grads = jax.tree.map(lambda g: g * scale, {"lora": pool_grads})
+        return grads, loss_sum * scale, tok_count
+
     embed_grad = jax.lax.psum(embed_grad, AXIS)
     head_grad = jax.lax.psum(head_grad, AXIS)
     fnorm_grad = jax.tree.map(lambda g: jax.lax.psum(g, AXIS), fnorm_grad)
-    loss_sum = jax.lax.psum(loss_sum, AXIS)
-    tok_count = jax.lax.psum(tok_count, AXIS)
 
     grads = {"embed": embed_grad, "layers": pool_grads,
              "final_norm": fnorm_grad}
@@ -375,7 +470,6 @@ def roundpipe_forward_backward(params, batch, worker_id, cfg: ModelConfig, *,
         grads["lm_head"] = head_grad
     else:                                                   # tied embeddings
         grads["embed"] = grads["embed"] + head_grad.T
-    scale = 1.0 / jnp.maximum(tok_count.astype(jnp.float32), 1.0)
     grads = jax.tree.map(lambda g: g * scale, grads)
     return grads, loss_sum * scale, tok_count
 
@@ -386,10 +480,12 @@ def roundpipe_forward_backward(params, batch, worker_id, cfg: ModelConfig, *,
 
 def roundpipe_param_specs(cfg: ModelConfig, abstract) -> dict:
     """Pool layout: layer dim sharded over `model`; the rest replicated on the
-    manual axis (auto axes may still shard them)."""
+    manual axis (auto axes may still shard them).  The adapter pool
+    (``"lora"``) shards over its leading layer dim exactly like the dense
+    pool it decorates."""
     def rule(path, leaf):
         names = [p.key for p in path if hasattr(p, "key")]
-        if names and names[0] == "layers":
+        if names and names[0] in ("layers", "lora"):
             return P(AXIS, *([None] * (leaf.ndim - 1)))
         return P(*([None] * leaf.ndim))
 
@@ -405,7 +501,8 @@ def resolve_plan(cfg: ModelConfig, step_cfg, n_workers: int):
     partition = getattr(step_cfg, "partition", None)
     if isinstance(partition, ExecutionPlan):
         return partition
-    return plan_from_config(cfg, n_workers, partition=partition)
+    return plan_from_config(cfg, n_workers, partition=partition,
+                            lora=getattr(step_cfg, "lora", None))
 
 
 def pool_rows(cfg: ModelConfig, n_workers: int) -> int:
@@ -418,27 +515,35 @@ def pool_rows(cfg: ModelConfig, n_workers: int) -> int:
 
 
 def pad_pool(params, cfg: ModelConfig, n_workers: int):
-    """Zero-pad ``params['layers']`` to ``pool_rows`` rows.  Padding rows are
-    never referenced by any plan slot, receive exactly-zero gradients, and
-    therefore stay zero under the optimizer — they exist only so the pool
-    shards evenly over the `model` axis."""
+    """Zero-pad ``params['layers']`` (and the adapter pool ``params['lora']``
+    when present) to ``pool_rows`` rows.  Padding rows are never referenced
+    by any plan slot, receive exactly-zero gradients, and therefore stay
+    zero under the optimizer — they exist only so the pools shard evenly
+    over the `model` axis."""
     l_pad = pool_rows(cfg, n_workers)
     if l_pad == cfg.n_layers:
         return params
     out = dict(params)
-    out["layers"] = jax.tree.map(
-        lambda a: jnp.pad(
-            a, [(0, l_pad - cfg.n_layers)] + [(0, 0)] * (a.ndim - 1)),
-        params["layers"])
+
+    def pad(a):
+        return jnp.pad(
+            a, [(0, l_pad - cfg.n_layers)] + [(0, 0)] * (a.ndim - 1))
+
+    out["layers"] = jax.tree.map(pad, params["layers"])
+    if "lora" in params:
+        out["lora"] = jax.tree.map(pad, params["lora"])
     return out
 
 
 def _build_mapped(cfg: ModelConfig, mesh, plan, *, xent_chunk: int,
-                  kv_chunk: int, ring_grad_dtype, prefetch_program=None):
+                  kv_chunk: int, ring_grad_dtype, prefetch_program=None,
+                  lora=None):
     """The shard_map'ed plan executor over PADDED params.
 
     Returns ``(mapped, l_pad, pspecs, grads_specs)`` where
     ``mapped(padded_params, batch) -> (padded_grads, loss, tokens)``.
+    With ``lora`` the params carry a ``"lora"`` adapter pool and the grads
+    pytree holds exactly ``{"lora": ...}`` (frozen-base mode).
     """
     n = axis_size(mesh, AXIS)
     if plan.n_workers != n:
@@ -457,13 +562,20 @@ def _build_mapped(cfg: ModelConfig, mesh, plan, *, xent_chunk: int,
     l_pad = pool_rows(cfg, n)
 
     abstract = T.abstract_params(cfg)
+    if lora is not None:
+        abstract = dict(abstract, lora=lora_mod.adapter_abstract(cfg, lora))
     pspecs = roundpipe_param_specs(cfg, abstract)
     body = functools.partial(
         roundpipe_forward_backward, cfg=cfg, plan=plan, n_workers=n,
         l_pad=l_pad, xent_chunk=xent_chunk, kv_chunk=kv_chunk,
-        ring_grad_dtype=ring_grad_dtype, prefetch_program=prefetch_program)
-    grads_specs = dict(pspecs) if "lm_head" in abstract else \
-        {k: pspecs[k] for k in ("embed", "layers", "final_norm")}
+        ring_grad_dtype=ring_grad_dtype, prefetch_program=prefetch_program,
+        lora=lora)
+    if lora is not None:
+        grads_specs = {"lora": pspecs["lora"]}
+    elif "lm_head" in abstract:
+        grads_specs = dict(pspecs)
+    else:
+        grads_specs = {k: pspecs[k] for k in ("embed", "layers", "final_norm")}
 
     def mapped(padded_params, batch):
         bspecs = jax.tree.map(
@@ -481,22 +593,25 @@ def _build_mapped(cfg: ModelConfig, mesh, plan, *, xent_chunk: int,
 def build_roundpipe_grads_fn(cfg: ModelConfig, mesh, plan, *,
                              xent_chunk: int = 256, kv_chunk: int = 1024,
                              ring_grad_dtype=jnp.float32,
-                             prefetch_program=None):
+                             prefetch_program=None, lora=None):
     """shard_map'ed ``f(params, batch) -> (grads, loss, tokens)`` executing
     ``plan`` on UNPADDED params (reference-comparison API): pads the pool on
     the way in and slices the gradient rows back out.  ``prefetch_program``
-    selects the chunked double-buffered injection path (None = whole-block)."""
+    selects the chunked double-buffered injection path (None = whole-block);
+    ``lora`` selects the frozen-base mode (params must carry ``"lora"``,
+    grads come back as ``{"lora": ...}``)."""
     mapped, l_pad, _, _ = _build_mapped(
         cfg, mesh, plan, xent_chunk=xent_chunk, kv_chunk=kv_chunk,
-        ring_grad_dtype=ring_grad_dtype, prefetch_program=prefetch_program)
+        ring_grad_dtype=ring_grad_dtype, prefetch_program=prefetch_program,
+        lora=lora)
     n = axis_size(mesh, AXIS)
 
     def grads_fn(params, batch):
         grads, loss, tokens = mapped(pad_pool(params, cfg, n), batch)
         if l_pad != cfg.n_layers:
-            grads = dict(grads)
-            grads["layers"] = jax.tree.map(
-                lambda a: a[:cfg.n_layers], grads["layers"])
+            grads = {k: jax.tree.map(lambda a: a[:cfg.n_layers], v)
+                     if k in ("layers", "lora") else v
+                     for k, v in grads.items()}
         return grads, loss, tokens
 
     return grads_fn
@@ -529,12 +644,20 @@ def build_roundpipe_train_step(cfg: ModelConfig, mesh, step_cfg,
     if getattr(step_cfg, "prefetch", True):
         program = plan.prefetch_program(
             chunk_limit=getattr(step_cfg, "prefetch_chunk_limit", None))
+    lora = getattr(step_cfg, "lora", None)
 
     mapped, l_pad, pspecs, _ = _build_mapped(
         cfg, mesh, plan, xent_chunk=step_cfg.xent_chunk,
         kv_chunk=step_cfg.kv_chunk, ring_grad_dtype=step_cfg.accum_dtype,
-        prefetch_program=program)
-    ospecs = opt_state_specs(pspecs, step_cfg.opt)
+        prefetch_program=program, lora=lora)
+    if lora is None:
+        ospecs = opt_state_specs(pspecs, step_cfg.opt)
+    else:
+        # frozen base: optimizer state (fp32 master + moments — the §4.3
+        # host-resident copies) exists for the adapter leaves ONLY
+        ospecs = opt_state_specs(
+            trainable_leaves(pspecs, lora_mod.param_mask(pspecs)),
+            step_cfg.opt)
     state_specs = {"params": pspecs, "opt": ospecs}
 
     batch_abs = {}
@@ -550,8 +673,17 @@ def build_roundpipe_train_step(cfg: ModelConfig, mesh, step_cfg,
 
     def train_step(state, batch):
         grads, loss, tokens = mapped(state["params"], batch)
-        new_params, new_opt, metrics = apply_updates(
-            state["opt"], grads, step_cfg.opt, param_like=state["params"])
+        if lora is None:
+            new_params, new_opt, metrics = apply_updates(
+                state["opt"], grads, step_cfg.opt, param_like=state["params"])
+        else:
+            # update the adapter leaves only; the frozen base passes through
+            # bit-identical (no master copy, no moments, no decay)
+            mask = lora_mod.param_mask(state["params"])
+            trainable = trainable_leaves(state["params"], mask)
+            new_tr, new_opt, metrics = apply_updates(
+                state["opt"], grads, step_cfg.opt, param_like=trainable)
+            new_params = merge_trainable(state["params"], new_tr, mask)
         metrics = dict(metrics, loss=loss, tokens=tokens)
         return {"params": new_params, "opt": new_opt}, metrics
 
@@ -570,8 +702,22 @@ def build_roundpipe_train_step(cfg: ModelConfig, mesh, step_cfg,
 def init_roundpipe_state(key, cfg: ModelConfig, step_cfg,
                          n_workers: int | None = None):
     """Fresh roundpipe train state; pass ``n_workers`` (the `model` axis
-    size) so the layer pool is padded to shard evenly (``pad_pool``)."""
+    size) so the layer pool is padded to shard evenly (``pad_pool``).
+
+    With ``step_cfg.lora`` the params gain a fresh adapter pool (zero-``B``,
+    so step 0 computes exactly the base model) and the optimizer state
+    covers the adapter leaves only."""
     params = T.init_params(key, cfg)
+    lora = getattr(step_cfg, "lora", None)
+    if lora is not None:
+        params["lora"] = lora_mod.init_adapters(
+            jax.random.fold_in(key, 0x10A), params["layers"], lora)
     if n_workers is not None:
         params = pad_pool(params, cfg, n_workers)
-    return {"params": params, "opt": init_opt_state(params, step_cfg.opt)}
+    if lora is None:
+        opt = init_opt_state(params, step_cfg.opt)
+    else:
+        opt = init_opt_state(
+            trainable_leaves(params, lora_mod.param_mask(params)),
+            step_cfg.opt)
+    return {"params": params, "opt": opt}

@@ -31,6 +31,18 @@ class LayerCost:
     grad: float           # dgrad+wgrad time (backward-with-recompute = fwd+grad)
     weight_bytes: int = 0
     act_bytes: int = 0    # per-micro-batch boundary activation
+    # Split byte accounting (frozen-base / LoRA): ``weight_bytes`` is what the
+    # host must UPLOAD to run the layer (the full dense block either way);
+    # ``trainable_bytes`` is what travels back DOWN per step — the gradient
+    # deposit and the §4.3 optimizer-copy traffic.  None = every parameter
+    # trains (downloads equal uploads, the full-fine-tune default).
+    trainable_bytes: int | None = None
+
+    @property
+    def download_bytes(self) -> int:
+        """Per-step gradient/optimizer download traffic for this layer."""
+        return self.weight_bytes if self.trainable_bytes is None \
+            else self.trainable_bytes
 
 
 @dataclasses.dataclass(frozen=True)

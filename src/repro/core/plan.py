@@ -203,13 +203,34 @@ class ExecutionPlan:
 
     @property
     def stage_bytes(self) -> tuple:
-        """Per-slot weight bytes (body layers + head when fused carries it) —
-        what the two-resource simulator charges against link bandwidth."""
+        """Per-slot weight UPLOAD bytes (body layers + head when fused
+        carries it) — what the two-resource simulator charges against the
+        host->GPU direction of the link.  Frozen-base (LoRA) plans upload
+        the same dense blocks; only downloads shrink."""
         out = []
         for s in self.stages:
             b = sum(int(self.layer_costs[l].weight_bytes) for l in s.layers)
             if s.includes_head:
                 b += int(self.layer_costs[-1].weight_bytes)
+            out.append(b)
+        return tuple(out)
+
+    @property
+    def stage_download_bytes(self) -> tuple:
+        """Per-slot gradient/optimizer DOWNLOAD bytes (§4.3 consistency
+        traffic): each backward/FB slot ships its layers'
+        ``LayerCost.download_bytes`` (= ``trainable_bytes`` when set, else
+        the full weight bytes) back to the host after its visit; forward
+        slots deposit nothing.  This is the lane a frozen-base LoRA plan
+        shrinks by orders of magnitude."""
+        out = []
+        for s in self.stages:
+            if s.kind == "F":
+                out.append(0)
+                continue
+            b = sum(int(self.layer_costs[l].download_bytes) for l in s.layers)
+            if s.includes_head:
+                b += int(self.layer_costs[-1].download_bytes)
             out.append(b)
         return tuple(out)
 
@@ -228,22 +249,35 @@ class ExecutionPlan:
 
     def prefetch(self, n_windows: int | None = None,
                  *, window_capacity_bytes: int | None = None,
-                 chunk_limit: int | None = None) -> tuple:
+                 chunk_limit: int | None = None,
+                 include_downloads: bool = False) -> tuple:
         """Per-slot transfer plans (paper §4.2): each slot's weight bytes
         LPT-packed into its idle windows — the prefetch order a
         double-buffered weight uploader follows, and what the simulator
         checks to confirm parameter traffic hides inside activation
         windows.  ``prefetch_program`` compiles these into the static
-        upload tables the dispatch runtime executes."""
+        upload tables the dispatch runtime executes.
+
+        ``include_downloads`` additionally packs each backward slot's
+        gradient-deposit bytes (``LayerCost.download_bytes``) into the same
+        window budget — the half-duplex feasibility view used by the
+        transfer-overlap study; leave False when compiling upload tables."""
         m = n_windows or self.n_workers
         plans = []
         for stage in self.stages:
             names = {f"layer{l}": int(self.layer_costs[l].weight_bytes)
                      for l in stage.layers}
+            down = None
+            if include_downloads and stage.kind != "F":
+                down = {f"layer{l}": int(self.layer_costs[l].download_bytes)
+                        for l in stage.layers}
             if stage.includes_head:
                 names["lm_head"] = int(self.layer_costs[-1].weight_bytes)
+                if down is not None:
+                    down["lm_head"] = int(self.layer_costs[-1].download_bytes)
             plans.append(plan_stage_transfers(
-                names, m, window_capacity_bytes=window_capacity_bytes,
+                names, m, download_bytes=down,
+                window_capacity_bytes=window_capacity_bytes,
                 chunk_limit=chunk_limit))
         return tuple(plans)
 
@@ -265,6 +299,8 @@ class ExecutionPlan:
             table = []
             for w, window in enumerate(wp.windows):
                 for c in window:
+                    if c.lane != "up":        # downloads are never ring uploads
+                        continue
                     parent = c.chunk_of or c.name
                     if parent in row_of:
                         row, layer = row_of[parent]
@@ -402,10 +438,17 @@ def uniform_partition(n_layers: int, *, fwd_cost: float = 1.0,
 
 
 def default_layer_costs(cfg, *, head_stage: bool = True,
-                        grad_ratio: float = 2.0) -> list[LayerCost]:
+                        grad_ratio: float = 2.0,
+                        lora=None) -> list[LayerCost]:
     """Cost model derived from the architecture: per-layer cost proportional
     to its parameter count (flops proxy at fixed batch), head pseudo-layer
-    proportional to ``d_model * vocab_size``.  Weight bytes assume bf16."""
+    proportional to ``d_model * vocab_size``.  Weight bytes assume bf16.
+
+    ``lora`` (a :class:`repro.models.lora.LoraConfig`) switches on the
+    frozen-base split byte accounting: uploads stay dense (the ring still
+    carries full blocks) but ``trainable_bytes`` — the gradient-deposit and
+    optimizer-copy download traffic — shrinks to the adapter factors, and
+    the frozen LM head downloads nothing."""
     import numpy as np
 
     from repro.models import transformer as T
@@ -415,13 +458,18 @@ def default_layer_costs(cfg, *, head_stage: bool = True,
     layer_params = sum(int(np.prod(leaf.shape[1:]))
                        for leaf in jax.tree_util.tree_leaves(abstract["layers"]))
     scale = 1.0 / max(layer_params, 1)
-    out = [LayerCost(1.0, grad_ratio,
-                     weight_bytes=2 * layer_params)
+    trainable = None
+    if lora is not None:
+        from repro.models.lora import adapter_params_per_layer
+        trainable = 2 * adapter_params_per_layer(cfg, lora)
+    out = [LayerCost(1.0, grad_ratio, weight_bytes=2 * layer_params,
+                     trainable_bytes=trainable)
            for _ in range(cfg.n_layers)]
     if head_stage:
         head_params = cfg.d_model * cfg.vocab_size
         c = head_params * scale
-        out.append(LayerCost(c, c * grad_ratio, weight_bytes=2 * head_params))
+        out.append(LayerCost(c, c * grad_ratio, weight_bytes=2 * head_params,
+                             trainable_bytes=0 if lora is not None else None))
     return out
 
 
@@ -429,7 +477,8 @@ def plan_from_config(cfg, n_workers: int, *,
                      n_microbatches: int | None = None,
                      partition: Partition | None = None,
                      head_stage: bool | None = None,
-                     mem_cap_bytes: float = float("inf")) -> ExecutionPlan:
+                     mem_cap_bytes: float = float("inf"),
+                     lora=None) -> ExecutionPlan:
     """The default plan for ``StepConfig(strategy="roundpipe")``: build the
     architecture's cost model, auto-partition it (paper §4.4) unless an
     explicit :class:`Partition` is given, and compile.
@@ -438,11 +487,16 @@ def plan_from_config(cfg, n_workers: int, *,
     auto-partitioning, and infers its presence from the deepest covered id
     when a hand ``partition`` is supplied; pass an explicit bool to
     override (compile_plan raises if it contradicts the partition).
+
+    ``lora`` threads a :class:`repro.models.lora.LoraConfig` into the cost
+    model so ``stage_download_bytes`` (and the two-resource simulation)
+    reflect adapter-only gradient traffic; the partition itself is
+    unchanged — compute costs and uploads are identical either way.
     """
     if head_stage is None:
         head_stage = True if partition is None else \
             partition.bwd_stages[0][-1] == cfg.n_layers
-    costs = default_layer_costs(cfg, head_stage=head_stage)
+    costs = default_layer_costs(cfg, head_stage=head_stage, lora=lora)
     if partition is None:
         partition = auto_partition(
             costs, n_devices=n_workers,

@@ -28,6 +28,18 @@ bytes to the device before the slot's first micro-batch may start there.
 
 The bubble gap between the two modes on the same plan is exactly the
 paper's blocking-vs-hidden comparison.
+
+Download lane (§4.3 consistency traffic)
+----------------------------------------
+``download_bytes[slot]`` models the return direction: when a backward/FB
+slot's visit finishes on a device, its gradient bytes (full weights for
+dense fine-tuning, adapter factors for a frozen-base LoRA plan — see
+``ExecutionPlan.stage_download_bytes``) must cross the same link before
+the lane can serve the *next* visit's upload.  Busy time is accounted per
+direction (``SimResult.transfer_busy`` for uploads, ``download_busy`` for
+downloads) so the two lanes report separately, but they contend for one
+half-duplex link: large downloads back the lane up and stall subsequent
+uploads — which is precisely the traffic a LoRA plan removes.
 """
 from __future__ import annotations
 
@@ -45,8 +57,9 @@ class SimResult:
     start: dict                        # task key -> start time
     n_devices: int
     dev_of: dict = dataclasses.field(default_factory=dict)  # task key -> device
-    transfer_busy: list = dataclasses.field(default_factory=list)
+    transfer_busy: list = dataclasses.field(default_factory=list)  # upload lane
     transfer_stall: list = dataclasses.field(default_factory=list)
+    download_busy: list = dataclasses.field(default_factory=list)  # grad lane
 
     @property
     def bubble_ratio(self) -> float:
@@ -57,6 +70,22 @@ class SimResult:
     def stall_total(self) -> float:
         """Compute time lost waiting on the transfer lane (two-resource runs)."""
         return sum(self.transfer_stall)
+
+    @property
+    def upload_busy(self) -> list:
+        """Per-device host->GPU (weight upload) lane busy time — an explicit
+        alias of ``transfer_busy`` now that the link carries two directions."""
+        return self.transfer_busy
+
+    @property
+    def upload_total(self) -> float:
+        return sum(self.transfer_busy)
+
+    @property
+    def download_total(self) -> float:
+        """GPU->host gradient/optimizer traffic time — the direction a
+        frozen-base (LoRA) plan shrinks to adapter size."""
+        return sum(self.download_busy)
 
     def window_bubble(self, keys: set) -> float:
         """Bubble ratio restricted to the time window spanned by ``keys``.
@@ -81,7 +110,8 @@ class SimResult:
 
 def _list_schedule(schedule: Schedule, stage_bytes=None, *,
                    bandwidth: float = 0.0,
-                   transfer_mode: str = "prefetch") -> SimResult:
+                   transfer_mode: str = "prefetch",
+                   download_bytes=None) -> SimResult:
     """List-schedule the tasks: fixed per-device order, dep-gated start times.
 
     With ``stage_bytes`` and ``bandwidth``, the first task of every
@@ -89,6 +119,14 @@ def _list_schedule(schedule: Schedule, stage_bytes=None, *,
     device's transfer lane (see module docstring).  A contiguous run is one
     slot visit — in RoundPipe each slot visits a device once per round, so
     each visit re-streams the slot's weights.
+
+    ``download_bytes[slot]`` adds the return direction on the same link:
+    a slot visit's gradient bytes occupy the lane after the visit produces
+    them.  In block mode the pending download is settled before the next
+    visit's upload (everything queues at the boundary); in prefetch mode
+    the next upload streams during the finishing visit's compute window —
+    before its gradients exist — so the upload keeps lane priority and the
+    download fills in behind it.
     """
     per_dev: dict[int, list[StageTask]] = defaultdict(list)
     for t in schedule.tasks:
@@ -99,9 +137,24 @@ def _list_schedule(schedule: Schedule, stage_bytes=None, *,
     group_open = {d: 0.0 for d in per_dev}   # start of the previous slot visit
     transfer_busy = [0.0] * schedule.n_devices
     transfer_stall = [0.0] * schedule.n_devices
+    download_busy = [0.0] * schedule.n_devices
     finish: dict = {}
     start: dict = {}
     dev_of: dict = {}
+
+    def settle_download(d, stage):
+        """Queue ``stage``'s gradient deposit on device ``d``'s lane; the
+        bytes become available when the visit's last task finished
+        (``dev_free[d]`` at call time)."""
+        if download_bytes is None or bandwidth <= 0:
+            return
+        dur = download_bytes[stage] / bandwidth
+        if dur <= 0:
+            return
+        dl0 = max(lane_free[d], dev_free[d])
+        lane_free[d] = dl0 + dur
+        download_busy[d] += dur
+
     remaining = len(schedule.tasks)
     while remaining:
         progressed = False
@@ -113,6 +166,8 @@ def _list_schedule(schedule: Schedule, stage_bytes=None, *,
                     break
                 begin = max(dev_free[d], max((finish[dep] for dep in t.deps), default=0.0))
                 new_group = ptr[d] == 0 or tasks[ptr[d] - 1].stage != t.stage
+                if new_group and ptr[d] > 0 and transfer_mode == "block":
+                    settle_download(d, tasks[ptr[d] - 1].stage)
                 if stage_bytes is not None and bandwidth > 0 and new_group:
                     dur = stage_bytes[t.stage] / bandwidth
                     if transfer_mode == "block":
@@ -127,6 +182,8 @@ def _list_schedule(schedule: Schedule, stage_bytes=None, *,
                     stalled = max(0.0, lane_free[d] - begin)
                     transfer_stall[d] += stalled
                     begin += stalled
+                if new_group and ptr[d] > 0 and transfer_mode != "block":
+                    settle_download(d, tasks[ptr[d] - 1].stage)
                 if new_group:
                     group_open[d] = begin
                 start[t.key] = begin
@@ -139,12 +196,15 @@ def _list_schedule(schedule: Schedule, stage_bytes=None, *,
         if not progressed:
             stuck = [tasks[ptr[d]].key for d, tasks in per_dev.items() if ptr[d] < len(tasks)]
             raise RuntimeError(f"schedule deadlock; blocked heads: {stuck[:4]}")
+    for d, tasks in per_dev.items():          # trailing deposit of the last visit
+        if tasks:
+            settle_download(d, tasks[-1].stage)
     makespan = max(finish.values(), default=0.0)
     busy = [0.0] * schedule.n_devices
     for t in schedule.tasks:
         busy[t.device] += t.duration
     return SimResult(makespan, busy, finish, start, schedule.n_devices,
-                     dev_of, transfer_busy, transfer_stall)
+                     dev_of, transfer_busy, transfer_stall, download_busy)
 
 
 def simulate(schedule: Schedule) -> SimResult:
@@ -153,16 +213,20 @@ def simulate(schedule: Schedule) -> SimResult:
 
 
 def simulate_transfers(schedule: Schedule, stage_bytes, *, bandwidth: float,
-                       transfer_mode: str = "prefetch") -> SimResult:
+                       transfer_mode: str = "prefetch",
+                       download_bytes=None) -> SimResult:
     """Two-resource simulation: ``stage_bytes[slot]`` weight bytes must cross
     a per-device link of ``bandwidth`` bytes/time-unit before each slot visit
-    (see module docstring for the block/prefetch lane policies)."""
+    (see module docstring for the block/prefetch lane policies).
+    ``download_bytes[slot]`` (optional) charges each visit's gradient
+    deposit on the same lane after the visit completes."""
     if transfer_mode not in ("block", "prefetch"):
         raise ValueError(f"unknown transfer_mode {transfer_mode!r}")
     if bandwidth <= 0:
         raise ValueError("bandwidth must be positive")
     return _list_schedule(schedule, stage_bytes, bandwidth=bandwidth,
-                          transfer_mode=transfer_mode)
+                          transfer_mode=transfer_mode,
+                          download_bytes=download_bytes)
 
 
 def simulate_plan(plan, n_microbatches: int | None = None, *,
@@ -179,7 +243,10 @@ def simulate_plan(plan, n_microbatches: int | None = None, *,
     ``bandwidth`` (bytes per cost-model time-unit) switches on the
     two-resource model: each slot's ``plan.stage_bytes`` is charged against
     the device's transfer lane, either head-of-line (``transfer_mode=
-    "block"``) or hidden in the preceding compute window (``"prefetch"``).
+    "block"``) or hidden in the preceding compute window (``"prefetch"``),
+    and each backward slot's ``plan.stage_download_bytes`` fills the return
+    direction of the lane after the visit — adapter-sized under a
+    frozen-base LoRA plan, weight-sized under full fine-tuning.
     """
     from .schedule import validate
 
@@ -190,7 +257,8 @@ def simulate_plan(plan, n_microbatches: int | None = None, *,
     if bandwidth is None:
         return simulate(sched)
     return simulate_transfers(sched, plan.stage_bytes, bandwidth=bandwidth,
-                              transfer_mode=transfer_mode)
+                              transfer_mode=transfer_mode,
+                              download_bytes=plan.stage_download_bytes)
 
 
 def steady_state_bubble(schedule: Schedule, iteration: int = 1) -> float:

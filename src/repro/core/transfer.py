@@ -24,6 +24,7 @@ class TransferItem:
     bytes: int
     chunk_of: str | None = None   # parent tensor if this is a split chunk
     offset: int = 0               # byte offset within the parent tensor
+    lane: str = "up"              # "up" (host->GPU weights) | "down" (grads)
 
     @property
     def end(self) -> int:
@@ -44,6 +45,19 @@ class WindowPlan:
     def total(self) -> int:
         return sum(self.loads)
 
+    def lane_total(self, lane: str) -> int:
+        """Bytes assigned to one direction ("up" weight uploads, "down"
+        gradient/optimizer downloads) across every window."""
+        return sum(c.bytes for w in self.windows for c in w if c.lane == lane)
+
+    @property
+    def upload_total(self) -> int:
+        return self.lane_total("up")
+
+    @property
+    def download_total(self) -> int:
+        return self.lane_total("down")
+
 
 def split_oversized(items: Sequence[TransferItem], chunk_limit: int) -> list[TransferItem]:
     """Split tensors larger than ``chunk_limit`` into near-equal chunks
@@ -62,7 +76,7 @@ def split_oversized(items: Sequence[TransferItem], chunk_limit: int) -> list[Tra
         for c in range(n_chunks):
             size = base + (1 if c < rem else 0)
             out.append(TransferItem(f"{it.name}#{c}", size,
-                                    it.chunk_of or it.name, off))
+                                    it.chunk_of or it.name, off, it.lane))
             off += size
     return out
 
@@ -94,11 +108,21 @@ def plan_stage_transfers(
     param_bytes: dict[str, int],
     n_microbatches: int,
     *,
+    download_bytes: dict[str, int] | None = None,
     window_capacity_bytes: int | None = None,
     chunk_limit: int | None = None,
     min_chunk_bytes: int | None = None,
 ) -> WindowPlan:
     """Plan one stage's parameter uploads across its M data-transfer windows.
+
+    ``download_bytes`` optionally adds the stage's return traffic — the
+    gradient/optimizer-copy downloads of the §4.3 consistency protocol — as
+    ``lane="down"`` items packed into the same window budget (the
+    conservative half-duplex model: one link moves both directions inside a
+    micro-batch window).  Under full fine-tuning downloads equal uploads and
+    can push a stage over capacity; a frozen-base (LoRA) stage downloads
+    only adapter bytes, which is why adapter runs stay feasible where
+    full-rank overflows (see ``LayerCost.trainable_bytes``).
 
     If ``window_capacity_bytes`` is given (bytes PCIe/ICI can move during one
     micro-batch compute), the chunk limit is progressively halved (paper
@@ -111,6 +135,9 @@ def plan_stage_transfers(
     stage (ties into the partitioner's memory/time caps).
     """
     items = [TransferItem(k, v) for k, v in sorted(param_bytes.items())]
+    if download_bytes:
+        items += [TransferItem(f"down:{k}", v, lane="down")
+                  for k, v in sorted(download_bytes.items()) if v > 0]
     if chunk_limit is None and window_capacity_bytes is not None:
         chunk_limit = window_capacity_bytes
     plan = lpt_pack(items, n_microbatches, chunk_limit=chunk_limit)

@@ -46,6 +46,12 @@ class StepConfig:
     # optional chunk-split granularity (bytes) for the prefetch tables;
     # None packs whole layer rows per window.
     prefetch_chunk_limit: Optional[int] = None
+    # roundpipe only: a repro.models.lora.LoraConfig (rank, alpha,
+    # target_modules) enabling frozen-base adapter fine-tuning — the dense
+    # weight ring becomes read-only, the traveling gradient buffer / deposit
+    # / optimizer state shrink to adapter size, and only adapter leaves
+    # train (the paper's Qwen3-235B LoRA regime).  None -> full fine-tune.
+    lora: Any = None
     opt: OptConfig = dataclasses.field(default_factory=OptConfig)
 
 
@@ -134,6 +140,10 @@ def build_train_step(cfg: ModelConfig, mesh, step_cfg: StepConfig,
         step, state_sh, batch_sh, _plan = build_roundpipe_train_step(
             cfg, mesh, step_cfg, global_batch, seq_len)
         return step, state_sh, batch_sh
+    if step_cfg.lora is not None:
+        raise ValueError(
+            "StepConfig.lora requires strategy='roundpipe' — the frozen-base "
+            "adapter ring is a dispatch-runtime feature")
     accum = resolve_grad_accum(step_cfg, mesh, global_batch)
     micro = global_batch // accum
     if micro * accum != global_batch:

@@ -29,6 +29,12 @@ def main() -> None:
                     help="roundpipe stage split: cost-model auto-partition "
                          "(paper §4.4, uneven stages + LM-head stage) or the "
                          "degenerate 1-layer-per-stage split")
+    ap.add_argument("--lora-rank", type=int, default=0,
+                    help="roundpipe only: >0 enables frozen-base LoRA "
+                         "fine-tuning at this adapter rank")
+    ap.add_argument("--lora-alpha", type=float, default=16.0)
+    ap.add_argument("--lora-targets", default="attn,mlp",
+                    help="comma-separated module paths the adapters decorate")
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
     ap.add_argument("--save-every", type=int, default=50)
@@ -59,6 +65,16 @@ def main() -> None:
     if args.smoke:
         cfg = smoke_config(cfg)
     mesh = make_mesh((n_data, n_model), ("data", "model"))
+    lora_cfg = None
+    if args.lora_rank > 0:
+        if args.strategy != "roundpipe":
+            raise SystemExit("--lora-rank requires --strategy roundpipe")
+        from repro.models.lora import LoraConfig
+        lora_cfg = LoraConfig(
+            rank=args.lora_rank, alpha=args.lora_alpha,
+            target_modules=tuple(t.strip()
+                                 for t in args.lora_targets.split(",")
+                                 if t.strip()))
     plan = None
     if args.strategy == "roundpipe":
         # compile the plan up front: the train step executes this exact
@@ -67,18 +83,28 @@ def main() -> None:
         from repro.core.simulator import simulate_plan
         if args.partition == "uniform":
             plan = plan_from_config(
-                cfg, n_model, partition=uniform_partition(cfg.n_layers))
+                cfg, n_model, partition=uniform_partition(cfg.n_layers),
+                lora=lora_cfg)
         else:
-            plan = plan_from_config(cfg, n_model)
+            plan = plan_from_config(cfg, n_model, lora=lora_cfg)
         sim = simulate_plan(plan)
         print(plan.describe())
         print(f"simulated bubble ratio (one round): {sim.bubble_ratio:.4f}")
+        if lora_cfg is not None:
+            full = plan_from_config(cfg, n_model, partition=plan.partition)
+            up = sum(plan.stage_bytes)
+            down = sum(plan.stage_download_bytes)
+            full_down = sum(full.stage_download_bytes)
+            print(f"LoRA r={lora_cfg.rank}: upload {up / 2**20:.1f} MiB/step, "
+                  f"grad download {down / 2**20:.3f} MiB/step "
+                  f"(full fine-tune would download {full_down / 2**20:.1f} MiB)")
     step_cfg = StepConfig(strategy=args.strategy, grad_accum=1,
                           async_optimizer=args.async_opt and args.strategy == "gspmd",
                           sequence_parallel=n_model > 1,
                           kv_chunk=min(1024, args.seq),
                           xent_chunk=min(256, args.seq),
                           partition=plan,
+                          lora=lora_cfg,
                           opt=OptConfig(lr=args.lr))
     data = SyntheticLMDataset(DataConfig(cfg.vocab_size, args.seq, args.batch))
 

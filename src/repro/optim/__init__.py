@@ -1,4 +1,4 @@
 from .adam import (OptConfig, apply_updates, init_opt_state,  # noqa: F401
-                   opt_state_specs)
+                   merge_trainable, opt_state_specs, trainable_leaves)
 from .async_opt import AsyncOptState, async_apply, init_async  # noqa: F401
 from .compress import compress_int8, decompress_int8, psum_compressed  # noqa: F401

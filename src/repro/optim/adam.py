@@ -35,6 +35,50 @@ def _factored(shape) -> bool:
     return len(shape) >= 2 and shape[-1] > 1 and shape[-2] > 1
 
 
+# ---------------------------------------------------------------------------
+# Frozen-base masking (LoRA / adapter fine-tuning)
+# ---------------------------------------------------------------------------
+# The optimizer state (fp32 master + moments) is the paper's host-resident
+# copy — ~6 bytes/param that dominate host DRAM and the §4.3 download
+# traffic.  Under a frozen base only the mask-True leaves (the adapters)
+# need any of it, so the state is built over the *pruned* trainable subtree
+# rather than carrying dead full-size moments for frozen weights.
+
+def trainable_leaves(tree, mask):
+    """Prune ``tree`` to the ``mask``-True leaves.
+
+    ``mask`` is a boolean pytree with ``tree``'s structure (e.g.
+    ``repro.models.lora.param_mask``).  Dict nodes whose every leaf is
+    frozen are dropped entirely, so the result's pytree structure is
+    exactly the trainable substructure — the same structure the frozen-base
+    dispatch deposits gradients in.  Feed the result to
+    :func:`init_opt_state` / :func:`opt_state_specs`.
+    """
+    if isinstance(tree, dict):
+        out = {}
+        for k in tree:
+            sub = trainable_leaves(tree[k], mask[k])
+            if sub is not None:
+                out[k] = sub
+        return out or None
+    return tree if mask else None
+
+
+def merge_trainable(full, trainable, mask):
+    """Inverse of :func:`trainable_leaves`: graft updated trainable leaves
+    back into the full tree; mask-False leaves pass through untouched."""
+    if isinstance(full, dict):
+        sub = trainable or {}
+        return {k: merge_trainable(full[k], sub.get(k), mask[k])
+                for k in full}
+    if mask:
+        if trainable is None:
+            raise ValueError("mask marks a leaf trainable but the updated "
+                             "subtree does not provide it")
+        return trainable
+    return full
+
+
 def init_opt_state(params, cfg: OptConfig):
     """master (fp32) + first/second moments (+ step counter)."""
     # explicit copy: fp32 param leaves would otherwise ALIAS the master

@@ -8,6 +8,13 @@ Tests in those modules that do not use hypothesis still run normally.
 import sys
 import types
 
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "slow: subprocess/compile-heavy suites (multi-minute XLA compiles); "
+        "excluded from the fast tier via -m 'not slow'")
+
 try:  # pragma: no cover - trivial branch
     import hypothesis  # noqa: F401
 except ImportError:

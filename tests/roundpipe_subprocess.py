@@ -14,6 +14,11 @@ mode:
   prefetch — the uneven-auto plan executed twice: whole-block injection vs
              the chunked double-buffered PrefetchProgram path (forced chunk
              splits); gradients must match bit-tightly AND the reference
+  lora     — frozen-base adapter fine-tuning on the uneven auto plan
+             (n_layers % N != 0): one LoRA RoundPipe step vs a single-program
+             merged-dense reference (base weights with W + (alpha/r)·B@A
+             folded in); per-leaf allclose on loss and adapter grads, and the
+             deposited pytree must hold ONLY adapter leaves (no base grads)
 """
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
@@ -37,9 +42,14 @@ from repro.models.config import get_config  # noqa: E402
 import dataclasses  # noqa: E402
 
 
+LORA_CFG = None  # set in main() for mode == "lora"
+
+
 def make_plan(mode: str, cfg, n_workers: int):
     if mode == "prefetch":
         return plan_from_config(cfg, n_workers)
+    if mode == "lora":
+        return plan_from_config(cfg, n_workers, lora=LORA_CFG)
     if mode == "uniform":
         part = uniform_partition(cfg.n_layers)
         costs = [LayerCost(1.0, 2.0) for _ in range(cfg.n_layers)]
@@ -61,6 +71,7 @@ def make_plan(mode: str, cfg, n_workers: int):
 
 
 def main():
+    global LORA_CFG
     arch = sys.argv[1] if len(sys.argv) > 1 else "qwen3-1.7b"
     mode = sys.argv[2] if len(sys.argv) > 2 else "uniform"
     n_layers = int(sys.argv[3]) if len(sys.argv) > 3 else \
@@ -69,6 +80,9 @@ def main():
     cfg = dataclasses.replace(cfg, n_layers=n_layers, name=cfg.name + "-rp")
     n_model = 4
     mesh = jax.make_mesh((2, n_model), ("data", "model"))
+    if mode == "lora":
+        from repro.models.lora import LoraConfig
+        LORA_CFG = LoraConfig(rank=4, alpha=8.0)
 
     plan = make_plan(mode, cfg, n_model)
     plan.validate()
@@ -86,6 +100,10 @@ def main():
         batch = {"tokens": jax.random.randint(key, (b, s), 0, cfg.vocab_size)}
     batch["labels"] = jax.random.randint(jax.random.fold_in(key, 1), (b, s),
                                          0, cfg.vocab_size)
+
+    if mode == "lora":
+        run_lora(cfg, mesh, plan, params, batch, b, s)
+        return
 
     # ---- reference loss & grads (single program, no pipeline) ---------------
     def ref_loss(p):
@@ -145,6 +163,71 @@ def main():
         if err > 5e-3:
             print("MISMATCH", k, err)
     print("worst rel grad err:", worst)
+    assert worst < 5e-3, worst
+    print("ROUNDPIPE_DISPATCH_OK")
+
+
+def run_lora(cfg, mesh, plan, params, batch, b, s):
+    """Frozen-base equivalence: one LoRA RoundPipe step vs the merged-dense
+    single-program reference differentiated through the adapters only."""
+    from repro.models import lora
+
+    lcfg = LORA_CFG
+    adapters = lora.init_adapters(jax.random.PRNGKey(3), params["layers"],
+                                  lcfg, dtype=jnp.float32)
+    # randomize B away from its zero init so BOTH factors carry nonzero
+    # gradients (zero B would make every A-grad trivially zero)
+    adapters = jax.tree.map(
+        lambda a: jax.random.normal(jax.random.PRNGKey(4), a.shape, a.dtype)
+        * 0.05, adapters)
+
+    # split byte accounting: the LoRA plan downloads strictly less than the
+    # full-fine-tune plan built from the same architecture
+    full_plan = plan_from_config(cfg, plan.n_workers)
+    lora_down = sum(plan.stage_download_bytes)
+    full_down = sum(full_plan.stage_download_bytes)
+    assert 0 < lora_down < full_down, (lora_down, full_down)
+    assert plan.stage_bytes == full_plan.stage_bytes  # uploads stay dense
+    print(f"download bytes/step: lora {lora_down} < full {full_down}")
+
+    # ---- merged-dense reference: W + (alpha/r) B@A folded in ---------------
+    def ref_loss(ad):
+        merged = lora.merge_params(params, ad, lcfg)
+        return T.loss_fn(merged, batch, cfg, remat=False, xent_chunk=8,
+                         kv_chunk=8)
+
+    ref_l, ref_g = jax.value_and_grad(ref_loss)(adapters)
+
+    # ---- frozen-base ring ---------------------------------------------------
+    grads_fn = build_roundpipe_grads_fn(cfg, mesh, plan, xent_chunk=8,
+                                        kv_chunk=8, lora=lcfg)
+    with mesh:
+        rp_g, rp_loss, rp_tokens = jax.jit(grads_fn)(
+            dict(params, lora=adapters), batch)
+
+    # base grads are ABSENT from the deposited pytree: adapter leaves only
+    assert set(rp_g) == {"lora"}, set(rp_g)
+    assert jax.tree_util.tree_structure(rp_g["lora"]) == \
+        jax.tree_util.tree_structure(adapters)
+
+    print("ref loss", float(ref_l), "rp loss", float(rp_loss))
+    np.testing.assert_allclose(float(rp_loss), float(ref_l), rtol=1e-4)
+    assert int(rp_tokens) == b * s
+
+    worst = 0.0
+    for (ka, va), (kb, vb) in zip(
+            jax.tree_util.tree_flatten_with_path(ref_g)[0],
+            jax.tree_util.tree_flatten_with_path(rp_g["lora"])[0]):
+        assert ka == kb
+        rv = np.asarray(va, np.float32)
+        gv = np.asarray(vb, np.float32)
+        assert np.abs(rv).max() > 0, ("degenerate zero reference grad",
+                                      jax.tree_util.keystr(ka))
+        err = np.abs(gv - rv).max() / (np.abs(rv).max() + 1e-6)
+        worst = max(worst, err)
+        if err > 5e-3:
+            print("MISMATCH", jax.tree_util.keystr(ka), err)
+    print("worst rel adapter grad err:", worst)
     assert worst < 5e-3, worst
     print("ROUNDPIPE_DISPATCH_OK")
 

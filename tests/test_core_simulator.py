@@ -85,3 +85,46 @@ class TestTwoResourceModel:
                                transfer_mode="burst")
         with pytest.raises(ValueError):
             simulate_transfers(sched, plan.stage_bytes, bandwidth=0.0)
+
+
+class TestSplitLanes:
+    """Regression (LoRA PR): a single lane charge hid that only DOWNLOADS
+    shrink under frozen-base fine-tuning — upload and download must report
+    separately."""
+
+    def _lora_plan(self, weight_bytes=1 << 20, ratio=128):
+        layers = [LayerCost(1.0, 2.0, weight_bytes=weight_bytes,
+                            trainable_bytes=weight_bytes // ratio)
+                  for _ in range(9)]
+        part = auto_partition(layers, n_devices=3, n_microbatches=6)
+        return compile_plan(part, layers, n_workers=3)
+
+    def test_lanes_report_separately(self):
+        full, adapted = _plan(), self._lora_plan()
+        bw = 1e6
+        fr = simulate_plan(full, 6, round_size=3, bandwidth=bw)
+        lr = simulate_plan(adapted, 6, round_size=3, bandwidth=bw)
+        # uploads identical (same dense weights stream either way)...
+        assert sum(fr.upload_busy) == pytest.approx(sum(lr.upload_busy))
+        assert fr.upload_total == pytest.approx(sum(fr.transfer_busy))
+        # ...while the download lane shrinks by exactly the trainable ratio
+        assert fr.download_total > 0
+        assert lr.download_total == pytest.approx(
+            fr.download_total / 128, rel=1e-6)
+
+    def test_download_busy_accounts_backward_visits(self):
+        """Every backward-slot visit deposits once: download busy totals
+        rounds x sum(stage_download_bytes) / bw."""
+        plan = _plan(weight_bytes=3 << 20)
+        bw = 1e6
+        res = simulate_plan(plan, 2 * plan.n_workers,
+                            round_size=plan.n_workers, bandwidth=bw)
+        assert res.download_total == pytest.approx(
+            2 * sum(plan.stage_download_bytes) / bw)
+
+    def test_no_download_bytes_means_empty_lane(self):
+        plan = _plan()
+        sched = plan.schedule(plan.n_workers)
+        res = simulate_transfers(sched, plan.stage_bytes, bandwidth=1e6)
+        assert res.download_total == 0.0
+        assert all(d == 0.0 for d in res.download_busy)

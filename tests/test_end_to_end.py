@@ -8,6 +8,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow     # subprocess XLA compiles, minutes per case
+
 from repro.checkpoint import CheckpointManager
 from repro.configs import smoke_config
 from repro.data import DataConfig, SyntheticLMDataset

@@ -7,6 +7,8 @@ import textwrap
 
 import pytest
 
+pytestmark = pytest.mark.slow     # subprocess XLA compiles, minutes per case
+
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
 

@@ -1,0 +1,167 @@
+"""Split byte accounting for frozen-base (LoRA) plans.
+
+Uploads (host->GPU dense weight streaming) are identical between full
+fine-tuning and LoRA; what changes is the DOWN direction — gradient deposits
+and §4.3 optimizer-copy traffic — which shrinks from ``weight_bytes`` to
+``trainable_bytes``.  These tests pin that split through plan_from_config,
+the LPT window packer, and the two-resource simulator.
+"""
+import pytest
+
+from repro.configs import smoke_config
+from repro.core.partition import LayerCost, Partition
+from repro.core.plan import compile_plan, plan_from_config
+from repro.core.simulator import simulate_plan
+from repro.core.transfer import plan_stage_transfers
+from repro.models.config import get_config
+from repro.models.lora import LoraConfig
+
+
+def _cfg():
+    return smoke_config(get_config("qwen3-1.7b"))
+
+
+class TestPlanFromConfigLora:
+    def test_lora_downloads_strictly_smaller(self):
+        cfg = _cfg()
+        full = plan_from_config(cfg, 2)
+        adapted = plan_from_config(cfg, 2, lora=LoraConfig(rank=4))
+        assert adapted.stage_bytes == full.stage_bytes      # uploads: dense
+        lora_down = sum(adapted.stage_download_bytes)
+        full_down = sum(full.stage_download_bytes)
+        assert 0 < lora_down < full_down
+
+    def test_forward_slots_download_nothing(self):
+        cfg = _cfg()
+        plan = plan_from_config(cfg, 2, lora=LoraConfig(rank=4))
+        for spec, down in zip(plan.stages, plan.stage_download_bytes):
+            if spec.kind == "F":
+                assert down == 0
+            else:
+                assert down > 0 or spec.size == 0
+
+    def test_frozen_head_downloads_zero(self):
+        """The fused slot's download under LoRA counts adapters only — the
+        replicated LM head is frozen and ships no gradient."""
+        cfg = _cfg()
+        full = plan_from_config(cfg, 2)
+        adapted = plan_from_config(cfg, 2, lora=LoraConfig(rank=4))
+        assert adapted.has_head_stage and full.has_head_stage
+        i = adapted.n_fwd
+        per_layer = adapted.layer_costs[0].download_bytes
+        expected = per_layer * adapted.fused.size          # no head term
+        assert adapted.stage_download_bytes[i] == expected
+        assert full.stage_download_bytes[i] > \
+            adapted.stage_download_bytes[i]
+
+    def test_full_fine_tune_downloads_equal_uploads_on_backward(self):
+        cfg = _cfg()
+        plan = plan_from_config(cfg, 2)
+        for spec, up, down in zip(plan.stages, plan.stage_bytes,
+                                  plan.stage_download_bytes):
+            if spec.kind != "F":
+                assert down == up
+
+
+class TestWindowPackerDownloads:
+    def test_lora_feasible_where_full_rank_overflows(self):
+        """Windows that carry uploads + full-rank downloads overflow; the
+        same stage with adapter-sized downloads packs under capacity."""
+        ups = {"layer0": 90, "layer1": 90, "layer2": 90}
+        full_down = dict(ups)                       # grads == weights
+        lora_down = {k: 4 for k in ups}             # adapter factors
+        with pytest.raises(OverflowError):
+            plan_stage_transfers(ups, 3, download_bytes=full_down,
+                                 window_capacity_bytes=100)
+        plan = plan_stage_transfers(ups, 3, download_bytes=lora_down,
+                                    window_capacity_bytes=100)
+        assert plan.max_load <= 100
+        assert plan.upload_total == 270
+        assert plan.download_total == 12
+
+    def test_lane_totals_conserved(self):
+        plan = plan_stage_transfers({"a": 50, "b": 70}, 4,
+                                    download_bytes={"a": 5, "b": 7})
+        assert plan.upload_total == 120
+        assert plan.download_total == 12
+        assert plan.total == 132
+
+    def test_no_downloads_keeps_legacy_shape(self):
+        plan = plan_stage_transfers({"a": 50, "b": 70}, 4)
+        assert plan.download_total == 0
+        assert plan.upload_total == plan.total == 120
+
+    def test_oversized_download_chunks_keep_lane(self):
+        plan = plan_stage_transfers({"a": 10}, 4,
+                                    download_bytes={"a": 100},
+                                    window_capacity_bytes=30)
+        assert plan.max_load <= 30
+        down = [c for w in plan.windows for c in w if c.lane == "down"]
+        assert sum(c.bytes for c in down) == 100
+        assert all(c.name.startswith("down:") or
+                   (c.chunk_of or "").startswith("down:") for c in down)
+
+    def test_prefetch_include_downloads_flag(self):
+        cfg = _cfg()
+        plan = plan_from_config(cfg, 2, lora=LoraConfig(rank=4))
+        plain = plan.prefetch()
+        loaded = plan.prefetch(include_downloads=True)
+        assert all(wp.download_total == 0 for wp in plain)
+        backward_down = [wp.download_total
+                         for wp, s in zip(loaded, plan.stages)
+                         if s.kind != "F"]
+        assert sum(backward_down) == sum(plan.stage_download_bytes)
+        # the upload tables the runtime compiles never see download items
+        prog = plan.prefetch_program()
+        prog.validate(plan)
+
+
+def _sim_plans(trainable_ratio=0.01, weight_bytes=10 << 20):
+    """A 3-worker plan whose gradient downloads saturate the lane unless
+    they shrink: full (trainable=None) vs LoRA (trainable = ratio*weight)."""
+    def costs(trainable):
+        return [LayerCost(1.0, 2.0, weight_bytes=weight_bytes,
+                          trainable_bytes=trainable)
+                for _ in range(6)]
+
+    part = Partition(fwd_stages=((0, 1), (2, 3)),
+                     bwd_stages=((4, 5), (2, 3), (0, 1)),
+                     t_max=6.0, objective=0.0, n_stages=5)
+    full = compile_plan(part, costs(None), n_workers=3)
+    adapted = compile_plan(part, costs(int(weight_bytes * trainable_ratio)),
+                           n_workers=3)
+    return full, adapted
+
+
+class TestSimulatedDownloadLane:
+    # lane-saturating point: one 2-layer slot's weights take ~3.5 t_max to
+    # stream, so full-rank downloads genuinely back the link up
+    BW = 1e6
+    M = 12
+
+    def test_lora_bubble_strictly_lower_in_prefetch_mode(self):
+        full, adapted = _sim_plans()
+        fr = simulate_plan(full, self.M, round_size=3, bandwidth=self.BW,
+                           transfer_mode="prefetch")
+        lr = simulate_plan(adapted, self.M, round_size=3, bandwidth=self.BW,
+                           transfer_mode="prefetch")
+        assert lr.bubble_ratio < fr.bubble_ratio - 1e-3
+        assert lr.makespan < fr.makespan - 1e-9
+
+    def test_upload_lane_identical_download_lane_shrinks(self):
+        full, adapted = _sim_plans()
+        fr = simulate_plan(full, self.M, round_size=3, bandwidth=self.BW,
+                           transfer_mode="prefetch")
+        lr = simulate_plan(adapted, self.M, round_size=3, bandwidth=self.BW,
+                           transfer_mode="prefetch")
+        assert fr.upload_total == pytest.approx(lr.upload_total)
+        assert lr.download_total < 0.05 * fr.download_total
+
+    def test_block_mode_lora_also_wins(self):
+        full, adapted = _sim_plans()
+        fb = simulate_plan(full, self.M, round_size=3, bandwidth=self.BW,
+                           transfer_mode="block")
+        lb = simulate_plan(adapted, self.M, round_size=3, bandwidth=self.BW,
+                           transfer_mode="block")
+        assert lb.makespan < fb.makespan - 1e-9
+        assert lb.bubble_ratio < fb.bubble_ratio - 1e-3

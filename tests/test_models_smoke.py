@@ -5,6 +5,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow     # subprocess XLA compiles, minutes per case
+
 from repro.configs import ASSIGNED, PAPER_MODELS, smoke_config
 from repro.models import transformer as T
 from repro.models.config import get_config

@@ -14,6 +14,8 @@ import sys
 
 import pytest
 
+pytestmark = pytest.mark.slow     # each case is a multi-minute XLA compile
+
 SCRIPT = os.path.join(os.path.dirname(__file__), "roundpipe_subprocess.py")
 
 
@@ -52,3 +54,13 @@ def test_dispatch_prefetch_matches_whole_block():
     whole-block gather on an uneven plan (n_layers % N != 0): gradients and
     loss must agree (and both must match the single-program reference)."""
     _run("qwen3-1.7b", "prefetch", n_layers=7)
+
+
+def test_dispatch_lora_matches_merged_dense():
+    """Frozen-base LoRA equivalence (headline): one adapter fine-tuning step
+    through the ring on the uneven 7-layer/4-worker auto plan vs a
+    single-program merged-dense reference (W + (alpha/r)·B@A folded in).
+    Loss and every adapter-grad leaf must allclose, the deposited pytree
+    must hold ONLY adapter leaves, and the compiled LoRA plan's download
+    bytes must be strictly below the full-fine-tune plan's."""
+    _run("qwen3-1.7b", "lora", n_layers=7)
