@@ -61,8 +61,13 @@ def layer_costs(arch: str, *, grad_ratio: float = 2.0,
     layer_bytes = _layer_param_bytes(cfg)
     trainable = None
     if lora_rank is not None:
-        from repro.models.lora import LoraConfig, adapter_params_per_layer
-        trainable = 2 * adapter_params_per_layer(cfg, LoraConfig(rank=lora_rank))
+        from repro.models.lora import (LoraConfig, adapter_params_per_layer,
+                                       applicable_targets)
+        # restrict the default targets to what this arch's layer pool
+        # actually exposes (pure-MoE layers have no "mlp" leaf)
+        lcfg = LoraConfig(rank=lora_rank,
+                          target_modules=applicable_targets(cfg))
+        trainable = 2 * adapter_params_per_layer(cfg, lcfg)
     costs = [LayerCost(lf, grad_ratio * lf, weight_bytes=layer_bytes,
                        act_bytes=2 * s * b * cfg.d_model,
                        trainable_bytes=trainable)

@@ -65,6 +65,26 @@ row exactly, so the path is bit-identical to the whole-block gather — it
 only restructures the transfers so XLA can overlap them with the previous
 slot's compute instead of serializing them at the tick boundary.
 
+Multi-round steady state (paper §3.2, Fig. 15; DESIGN.md §5)
+------------------------------------------------------------
+The near-zero-bubble claim is a steady-state property: with ``M = R·N``
+micro-batches per iteration, consecutive rounds interlock so the
+``N-1``-tick fill/drain is paid once per STEP, not once per round —
+bubble ``(N-1)/(R·S+N-1) -> 0`` as R grows.  ``StepConfig.n_microbatches``
+(a multiple of N) runs ``R = M/N`` rounds back-to-back in ``R·S + N - 1``
+ticks, driven by ``plan.tick_table(R)`` — the same round-stitched order
+the schedule generator dispatches and the simulator times.  Batch leaves
+carry a leading round axis ``(R, B, ...)``; round ``r+1``'s injection
+(and its chunked standby prefetch, tables replayed modulo S) streams into
+the ring while round ``r`` drains; gradient WAVES from successive rounds
+deposit into the same pool rows (``.at[].add`` sums per-round
+contributions) and the replicated embed/head/norm grads accumulate
+locally across rounds before the single end-of-step ``psum`` — one
+optimizer update per step covering all M micro-batches, normalized by
+the step's total token count exactly like a single full-batch program.
+LoRA composes: the adapter ring re-injects per round and the
+adapter-shaped deposit accumulates across rounds identically.
+
 Structural properties inherited from the paper: zero weight binding (§3.1);
 fill/drain bubble of N-1 ticks each ≙ N(N-1)·t (§3.3); full activation
 recomputation from per-worker stashed boundaries (§2.1.1).
@@ -108,7 +128,8 @@ def roundpipe_forward_backward(params, batch, worker_id, cfg: ModelConfig, *,
                                plan, n_workers: int, l_pad: int,
                                xent_chunk: int = 256, kv_chunk: int = 1024,
                                ring_grad_dtype=jnp.float32,
-                               prefetch_program=None, lora=None):
+                               prefetch_program=None, lora=None,
+                               rounds=None):
     """Inside-shard_map body: returns (grads pytree, loss_sum, token_count).
 
     ``params['layers']`` leaves arrive LOCAL: (l_pad/N, ...) — this worker's
@@ -127,9 +148,21 @@ def roundpipe_forward_backward(params, batch, worker_id, cfg: ModelConfig, *,
     the layer pool) rides a second ring, stages compute with merged weights
     but differentiate adapters only, and the returned grads pytree is
     ``{"lora": ...}`` — no base gradient is ever materialized.
+
+    ``rounds`` selects the multi-round steady-state regime (paper §3.2,
+    module docstring): batch leaves carry a leading round axis
+    ``(R, B_w, ...)``, the loop runs ``plan.tick_table(R)`` — ``R``
+    stitched rounds in ``R*S + N - 1`` ticks, one fill/drain per STEP —
+    and gradients accumulate across rounds (pool deposits sum per-round
+    waves; replicated embed/head/norm grads add locally before the single
+    end-of-step psum).  ``None`` is the legacy single-round path with flat
+    ``(B_w, ...)`` batch leaves (bit-identical to ``rounds=1`` up to the
+    round axis).
     """
     n = n_workers
     frozen = lora is not None
+    multi = rounds is not None
+    r_total = rounds if multi else 1
     l_total = cfg.n_layers
     per = l_pad // n
     # worker id from a P(AXIS)-sharded iota input rather than axis_index —
@@ -142,12 +175,21 @@ def roundpipe_forward_backward(params, batch, worker_id, cfg: ModelConfig, *,
     s_total = plan.n_slots
     kmax = plan.max_block
     fused_spec = plan.fused
+    live = r_total * s_total               # ticks with a slot on the ring
 
     pool = params["layers"]
     head_w = T.lm_head_weights(params, cfg)
     tokens = batch.get("tokens")
+    labels = batch["labels"]
     x_emb = T.embed_inputs(params, batch, cfg)
-    bshape = x_emb.shape                                   # (B_w, S, D)
+    bshape = x_emb.shape[1:] if multi else x_emb.shape     # (B_w, S, D)
+
+    def round_leaf(leaf, ri):
+        """Round ``ri``'s resident slice of a batch-derived leaf (identity
+        on the legacy flat path)."""
+        if not multi:
+            return leaf
+        return jax.lax.dynamic_index_in_dim(leaf, ri, 0, keepdims=False)
 
     # static per-slot lookup tables (indexed by the traced slot id)
     starts_arr = jnp.array([s.start for s in slots] + [0], jnp.int32)
@@ -198,11 +240,11 @@ def roundpipe_forward_backward(params, batch, worker_id, cfg: ModelConfig, *,
             out, _ = jax.lax.scan(body, x, (jnp.arange(kmax), block))
             return out
 
-    def fused_loss(block, fnorm, hw, x):
+    def fused_loss(block, fnorm, hw, x, labels_cur):
         if fused_spec.size:                    # static: fused body block
             x = stage_fwd(block, fused_spec.size, x)
         h = apply_norm(x, fnorm, cfg.norm_kind, cfg.norm_eps)
-        tot, cnt = T.chunked_softmax_xent(h, hw, batch["labels"],
+        tot, cnt = T.chunked_softmax_xent(h, hw, labels_cur,
                                           chunk=xent_chunk)
         return tot, cnt                        # cnt rides as vjp aux
 
@@ -276,8 +318,12 @@ def roundpipe_forward_backward(params, batch, worker_id, cfg: ModelConfig, *,
         # fill prologue: slot 0 has no preceding compute window to hide in
         standby = upload_slot(zeros_standby(), 0)
 
-    n_ticks = s_total + n - 1
-    for t in range(n_ticks):
+    # The runtime consumes the SAME round-stitched injection order the
+    # schedule generator dispatches (plan.tick_table, asserted in tests):
+    # tick t injects slot t % S of round t // S; the N-1 drain ticks (None
+    # entries) are paid once per step, not once per round.
+    tick_entries = plan.tick_table(r_total)
+    for t, entry in enumerate(tick_entries):
         # ---- ring plumbing (static per tick) --------------------------------
         shifted = jax.tree.map(
             lambda a: jax.lax.ppermute(a, AXIS, _shift_perm(n)), ring)
@@ -286,26 +332,30 @@ def roundpipe_forward_backward(params, batch, worker_id, cfg: ModelConfig, *,
         if frozen:
             a_shifted = jax.tree.map(
                 lambda a: jax.lax.ppermute(a, AXIS, _shift_perm(n)), a_ring)
-        if t < s_total:
+        if entry is not None:
+            spec = slots[entry[1]]
             if prefetch_program is not None:
-                spec = slots[t]
                 if spec.size:
                     ring = _ring_add(shifted, promote_standby(standby, spec))
                 else:
                     ring = shifted
-                # double-buffer swap: slot t+1 streams into the fresh standby
-                # across THIS tick's compute windows (XLA overlaps the copies
-                # with the compute below — no tick-boundary burst)
-                if t + 1 < s_total:
-                    standby = upload_slot(zeros_standby(), t + 1)
+                # double-buffer swap: the next tick's slot streams into the
+                # fresh standby across THIS tick's compute windows (XLA
+                # overlaps the copies with the compute below — no
+                # tick-boundary burst).  Round r+1's slot-0 upload therefore
+                # streams while round r drains its deepest slots: the
+                # per-slot ChunkUpload tables are replayed modulo S.
+                if t + 1 < live:
+                    standby = upload_slot(zeros_standby(),
+                                          (t + 1) % s_total)
             else:
-                inj = assemble_block(slots[t])
+                inj = assemble_block(spec)
                 ring = _ring_add(shifted, inj) if inj is not None else shifted
             if frozen:
                 # adapters are ~100-1000x smaller than the dense block: the
                 # whole-block gather is already far below one chunk upload,
                 # so they skip the standby machinery even under prefetch
-                inj_a = assemble_block(slots[t], params["lora"])
+                inj_a = assemble_block(spec, params["lora"])
                 a_ring = _ring_add(a_shifted, inj_a) \
                     if inj_a is not None else a_shifted
         else:
@@ -313,14 +363,25 @@ def roundpipe_forward_backward(params, batch, worker_id, cfg: ModelConfig, *,
             if frozen:
                 a_ring = a_shifted
 
-        # ---- compute: worker w holds slot (t - w) ---------------------------
+        # ---- compute: worker w holds stitched slot (t - w) ------------------
         fb = t - w                                          # traced
-        slot_i = jnp.clip(fb, 0, s_total)
+        if multi:
+            on_ring = jnp.logical_and(fb >= 0, fb < live)
+            slot_i = jnp.where(on_ring, jnp.mod(fb, s_total), s_total)
+            ri = jnp.clip(jnp.floor_divide(fb, s_total), 0, r_total - 1)
+            round_start = slot_i == 0
+            plain_on = jnp.logical_and(on_ring, slot_i < sf)
+            fused_on = jnp.logical_and(on_ring, slot_i == sf)
+            bwd_on = jnp.logical_and(on_ring, slot_i > sf)
+        else:
+            slot_i = jnp.clip(fb, 0, s_total)
+            ri = None
+            round_start = fb == 0
+            plain_on = jnp.logical_and(fb >= 0, fb < sf)
+            fused_on = fb == sf
+            bwd_on = jnp.logical_and(fb > sf, fb < s_total)
         start = starts_arr[slot_i]
         n_act = sizes_arr[slot_i]
-        plain_on = jnp.logical_and(fb >= 0, fb < sf)
-        fused_on = fb == sf
-        bwd_on = jnp.logical_and(fb > sf, fb < s_total)
 
         def do_plain(op):
             act_, stash_ = op
@@ -329,7 +390,7 @@ def roundpipe_forward_backward(params, batch, worker_id, cfg: ModelConfig, *,
             # within their own vjp closures) never pay for a dead dense block
             eff_ring = lora_mod.merge_layers(ring, a_ring, lora) \
                 if frozen else ring
-            x_in = jnp.where(fb == 0, x_emb, act_)
+            x_in = jnp.where(round_start, round_leaf(x_emb, ri), act_)
 
             def step_one(xc, st_, k, lw):
                 active = k < n_act
@@ -362,11 +423,14 @@ def roundpipe_forward_backward(params, batch, worker_id, cfg: ModelConfig, *,
             # cotangents are never formed
             def do_fused(op):
                 act_, ls, tc, gcarry, gb_ = op
-                x_in = jnp.where(fb == 0, x_emb, act_)      # Sf == 0 edge
+                x_in = jnp.where(round_start, round_leaf(x_emb, ri),
+                                 act_)                      # Sf == 0 edge
+                labels_cur = round_leaf(labels, ri)
 
                 def floss(ablk, xx):
                     return fused_loss(lora_mod.merge_layers(ring, ablk, lora),
-                                      params["final_norm"], head_w, xx)
+                                      params["final_norm"], head_w, xx,
+                                      labels_cur)
 
                 tot, vjp, cnt = jax.vjp(floss, a_ring, x_in, has_aux=True)
                 ga, gx = vjp(jnp.float32(1.0))
@@ -397,14 +461,18 @@ def roundpipe_forward_backward(params, batch, worker_id, cfg: ModelConfig, *,
         else:
             def do_fused(op):
                 act_, ls, tc, gcarry, hg, fg, gb_, eg = op
-                x_in = jnp.where(fb == 0, x_emb, act_)      # Sf == 0 edge
+                x_in = jnp.where(round_start, round_leaf(x_emb, ri),
+                                 act_)                      # Sf == 0 edge
+                labels_cur = round_leaf(labels, ri)
                 tot, vjp, cnt = jax.vjp(
-                    fused_loss, ring, params["final_norm"], head_w, x_in,
-                    has_aux=True)
+                    lambda blk, fn, hw_, xx: fused_loss(blk, fn, hw_, xx,
+                                                        labels_cur),
+                    ring, params["final_norm"], head_w, x_in, has_aux=True)
                 gb, gf, gh, gx = vjp(jnp.float32(1.0))
                 gb_ = jax.tree.map(lambda a, d: a + d.astype(a.dtype), gb_, gb)
                 if sf == 0 and fused_spec.layers and tokens is not None:
-                    eg = eg.at[tokens].add(gx.astype(jnp.float32))
+                    eg = eg.at[round_leaf(tokens, ri)].add(
+                        gx.astype(jnp.float32))
                 return (act_, ls + tot, tc + cnt, gx.astype(jnp.float32),
                         hg + gh.astype(jnp.float32),
                         jax.tree.map(lambda a, d: a + d.astype(jnp.float32),
@@ -429,7 +497,8 @@ def roundpipe_forward_backward(params, batch, worker_id, cfg: ModelConfig, *,
                 def embed_bwd(e):
                     if tokens is None:
                         return e                              # frontend stub
-                    return e.at[tokens].add(gx.astype(jnp.float32))
+                    return e.at[round_leaf(tokens, ri)].add(
+                        gx.astype(jnp.float32))
 
                 eg = jax.lax.cond(jnp.logical_and(start == 0, n_act > 0),
                                   embed_bwd, lambda e: e, eg)
@@ -439,9 +508,12 @@ def roundpipe_forward_backward(params, batch, worker_id, cfg: ModelConfig, *,
                 bwd_on, do_bwd, lambda op: op, (grad_carry, gbuf, embed_grad))
 
         # ---- gradient deposit: slot exits the ring at worker N-1 -------------
+        # Round r's wave for slot j exits at tick r*S + j + N - 1; the
+        # .at[idx].add below SUMS successive rounds' contributions into the
+        # same pool row — the cross-round gradient accumulation.
         e_slot = t - (n - 1)
-        if 0 <= e_slot < s_total and slots[e_slot].kind != "F":
-            for k, lid in enumerate(slots[e_slot].layers):
+        if 0 <= e_slot < live and slots[e_slot % s_total].kind != "F":
+            for k, lid in enumerate(slots[e_slot % s_total].layers):
                 owner, idx = divmod(lid, per)
                 row = jax.tree.map(lambda a: a[k], gbuf)
                 arriving = jax.tree.map(
@@ -537,13 +609,16 @@ def pad_pool(params, cfg: ModelConfig, n_workers: int):
 
 def _build_mapped(cfg: ModelConfig, mesh, plan, *, xent_chunk: int,
                   kv_chunk: int, ring_grad_dtype, prefetch_program=None,
-                  lora=None):
+                  lora=None, rounds=None):
     """The shard_map'ed plan executor over PADDED params.
 
     Returns ``(mapped, l_pad, pspecs, grads_specs)`` where
     ``mapped(padded_params, batch) -> (padded_grads, loss, tokens)``.
     With ``lora`` the params carry a ``"lora"`` adapter pool and the grads
     pytree holds exactly ``{"lora": ...}`` (frozen-base mode).
+    With ``rounds`` the batch leaves must carry a leading round axis
+    ``(rounds, B, ...)``; dim 0 stays replicated (each worker sees every
+    round of its resident group) while dim 1 shards over `model`.
     """
     n = axis_size(mesh, AXIS)
     if plan.n_workers != n:
@@ -569,7 +644,7 @@ def _build_mapped(cfg: ModelConfig, mesh, plan, *, xent_chunk: int,
         roundpipe_forward_backward, cfg=cfg, plan=plan, n_workers=n,
         l_pad=l_pad, xent_chunk=xent_chunk, kv_chunk=kv_chunk,
         ring_grad_dtype=ring_grad_dtype, prefetch_program=prefetch_program,
-        lora=lora)
+        lora=lora, rounds=rounds)
     if lora is not None:
         grads_specs = {"lora": pspecs["lora"]}
     elif "lm_head" in abstract:
@@ -578,8 +653,13 @@ def _build_mapped(cfg: ModelConfig, mesh, plan, *, xent_chunk: int,
         grads_specs = {k: pspecs[k] for k in ("embed", "layers", "final_norm")}
 
     def mapped(padded_params, batch):
-        bspecs = jax.tree.map(
-            lambda leaf: P(AXIS, *([None] * (leaf.ndim - 1))), batch)
+        if rounds is None:
+            bspecs = jax.tree.map(
+                lambda leaf: P(AXIS, *([None] * (leaf.ndim - 1))), batch)
+        else:    # leading round axis replicated, per-round batch dim sharded
+            bspecs = jax.tree.map(
+                lambda leaf: P(None, AXIS, *([None] * (leaf.ndim - 2))),
+                batch)
         f = shard_map(
             body, mesh, axis_names={AXIS},
             in_specs=(pspecs, bspecs, P(AXIS)),
@@ -593,20 +673,34 @@ def _build_mapped(cfg: ModelConfig, mesh, plan, *, xent_chunk: int,
 def build_roundpipe_grads_fn(cfg: ModelConfig, mesh, plan, *,
                              xent_chunk: int = 256, kv_chunk: int = 1024,
                              ring_grad_dtype=jnp.float32,
-                             prefetch_program=None, lora=None):
+                             prefetch_program=None, lora=None,
+                             n_microbatches=None):
     """shard_map'ed ``f(params, batch) -> (grads, loss, tokens)`` executing
     ``plan`` on UNPADDED params (reference-comparison API): pads the pool on
     the way in and slices the gradient rows back out.  ``prefetch_program``
     selects the chunked double-buffered injection path (None = whole-block);
     ``lora`` selects the frozen-base mode (params must carry ``"lora"``,
-    grads come back as ``{"lora": ...}``)."""
+    grads come back as ``{"lora": ...}``); ``n_microbatches`` (a multiple
+    ``M = R*N`` of the worker count) selects the multi-round steady-state
+    path — the flat batch splits into ``R`` leading round groups and the
+    returned grads are accumulated over all ``M`` micro-batches (the
+    full-batch token-mean, same normalization as the single-round path)."""
+    rounds = None if n_microbatches is None else plan.rounds_for(n_microbatches)
     mapped, l_pad, _, _ = _build_mapped(
         cfg, mesh, plan, xent_chunk=xent_chunk, kv_chunk=kv_chunk,
         ring_grad_dtype=ring_grad_dtype, prefetch_program=prefetch_program,
-        lora=lora)
+        lora=lora, rounds=rounds)
     n = axis_size(mesh, AXIS)
 
     def grads_fn(params, batch):
+        if rounds is not None:
+            def split(x):
+                if x.shape[0] % n_microbatches:
+                    raise ValueError(
+                        f"global batch {x.shape[0]} not divisible by "
+                        f"n_microbatches {n_microbatches}")
+                return x.reshape(rounds, x.shape[0] // rounds, *x.shape[1:])
+            batch = jax.tree.map(split, batch)
         grads, loss, tokens = mapped(pad_pool(params, cfg, n), batch)
         if l_pad != cfg.n_layers:
             grads = {k: jax.tree.map(lambda a: a[:cfg.n_layers], v)
@@ -631,15 +725,31 @@ def build_roundpipe_train_step(cfg: ModelConfig, mesh, step_cfg,
     uploader (the plan's compiled PrefetchProgram, paper §4.2); False falls
     back to the whole-block per-tick gather.
 
+    ``step_cfg.n_microbatches`` (``M = R*N``) selects the multi-round
+    steady-state regime: the global batch splits into ``M`` micro-batches
+    executed as ``R`` stitched rounds per step (``plan.tick_table``),
+    gradients accumulated across rounds before the single optimizer
+    update.  ``None`` keeps the legacy one-round-per-step path.
+
     Returns ``(step, state_shardings, batch_shardings, plan)`` — the returned
     plan is the exact object the step executes, so callers can simulate it
-    (``simulate_plan``) and compare against the real run.
+    (``simulate_plan(plan, M, round_size=N)``) and compare against the
+    real run.
     """
     n = axis_size(mesh, AXIS)
     if global_batch % n:
         raise ValueError("global batch must divide the model axis")
     if plan is None:
         plan = resolve_plan(cfg, step_cfg, n)
+    m_micro = getattr(step_cfg, "n_microbatches", None)
+    rounds = None
+    if m_micro is not None:
+        rounds = plan.rounds_for(m_micro)
+        if global_batch % m_micro:
+            raise ValueError(
+                f"global batch {global_batch} must be divisible by "
+                f"n_microbatches {m_micro} (micro-batch size = "
+                f"global_batch / M)")
     program = None
     if getattr(step_cfg, "prefetch", True):
         program = plan.prefetch_program(
@@ -649,7 +759,7 @@ def build_roundpipe_train_step(cfg: ModelConfig, mesh, step_cfg,
     mapped, l_pad, pspecs, _ = _build_mapped(
         cfg, mesh, plan, xent_chunk=step_cfg.xent_chunk,
         kv_chunk=step_cfg.kv_chunk, ring_grad_dtype=step_cfg.accum_dtype,
-        prefetch_program=program, lora=lora)
+        prefetch_program=program, lora=lora, rounds=rounds)
     if lora is None:
         ospecs = opt_state_specs(pspecs, step_cfg.opt)
     else:
@@ -672,6 +782,12 @@ def build_roundpipe_train_step(cfg: ModelConfig, mesh, step_cfg,
         lambda leaf: P(AXIS, *([None] * (leaf.ndim - 1))), batch_abs)
 
     def train_step(state, batch):
+        if rounds is not None:
+            # flat (G, ...) -> (R, G/R, ...): round r owns micro-batch
+            # groups r*N..(r+1)*N-1 of the step (leading round axis)
+            batch = jax.tree.map(
+                lambda x: x.reshape(rounds, x.shape[0] // rounds,
+                                    *x.shape[1:]), batch)
         grads, loss, tokens = mapped(state["params"], batch)
         if lora is None:
             new_params, new_opt, metrics = apply_updates(

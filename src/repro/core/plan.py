@@ -92,6 +92,11 @@ class PrefetchProgram:
     ``uploads[s]`` is window-major: all of window 0's chunks, then window
     1's, ... — the order the runtime issues the copies and the order the
     simulator charges them against link bandwidth.
+
+    Tables are per-SLOT, not per-tick: a multi-round step (see
+    ``ExecutionPlan.tick_table``) replays table ``t % S`` at tick ``t``,
+    so the same compiled chunk order serves every round without
+    recompilation (the weights a slot streams are round-invariant).
     """
     n_workers: int
     n_windows: int
@@ -235,12 +240,53 @@ class ExecutionPlan:
         return tuple(out)
 
     # ---- the two consumers -------------------------------------------------
+    def rounds_for(self, n_microbatches: int) -> int:
+        """Number of back-to-back rounds ``R = M / N`` a step with
+        ``n_microbatches`` micro-batches executes (paper §3.2 steady state:
+        each round feeds one resident micro-batch group per worker)."""
+        if n_microbatches < self.n_workers:
+            raise ValueError(
+                f"n_microbatches {n_microbatches} < n_workers "
+                f"{self.n_workers}: each round needs one resident "
+                f"micro-batch group per worker — raise the micro-batch "
+                f"count to a multiple of {self.n_workers}")
+        if n_microbatches % self.n_workers:
+            raise ValueError(
+                f"n_microbatches {n_microbatches} is not a multiple of "
+                f"n_workers {self.n_workers}: the runtime executes whole "
+                f"rounds of {self.n_workers} resident groups — choose "
+                f"M = R*{self.n_workers}")
+        return n_microbatches // self.n_workers
+
+    def tick_table(self, rounds: int = 1) -> tuple:
+        """The round-stitched injection order BOTH consumers follow.
+
+        Entry ``t`` (one per ring tick, ``R*S + N - 1`` total) is the
+        ``(round, slot)`` injected at worker 0 at tick ``t`` — consecutive
+        rounds stitch back-to-back (``t -> divmod(t, S)``), so the
+        ``N - 1``-tick drain (the trailing ``None`` entries) is paid once
+        per iteration rather than once per round.  The dispatch runtime
+        iterates exactly this table, reusing slot ``t % S``'s compiled
+        :class:`ChunkUpload` tables every round; the round-robin schedule
+        generator dispatches slots in the same stitched order (asserted in
+        ``tests/test_multiround_plan.py``).
+        """
+        if rounds < 1:
+            raise ValueError(f"rounds must be >= 1, got {rounds}")
+        s = self.n_slots
+        live = rounds * s
+        return tuple(divmod(t, s) if t < live else None
+                     for t in range(live + self.n_workers - 1))
+
     def schedule(self, n_microbatches: int, *, round_size: int | None = None,
                  iterations: int = 1, g0: int = 0) -> Schedule:
         """The round-robin dispatch schedule for this plan (paper §3.2).
 
         The simulator executes exactly this; the dispatch runtime realizes
-        the ``round_size == n_workers`` single-round case per training step.
+        ``round_size == n_workers`` with ``M / N`` rounds stitched
+        back-to-back per training step (``tick_table``) — one resident
+        micro-batch group per worker per round, gradients accumulated
+        across rounds.
         """
         return roundpipe_schedule(
             self.n_workers, n_microbatches, list(self.fwd_costs),

@@ -83,9 +83,17 @@ def roundpipe_schedule(
     n = n_devices
     mr = round_size or n
     if mr < n:
-        raise ValueError(f"round_size {mr} must be >= n_devices {n}")
+        raise ValueError(
+            f"round_size {mr} must be >= n_devices {n}: every round must "
+            f"feed at least one micro-batch to each device — raise "
+            f"round_size to a multiple of {n}, or drop devices")
     if n_microbatches % mr:
-        raise ValueError(f"n_microbatches {n_microbatches} not divisible by round_size {mr}")
+        raise ValueError(
+            f"n_microbatches {n_microbatches} not divisible by round_size "
+            f"{mr}: the dispatcher stitches whole rounds — choose "
+            f"M = R*{mr} (e.g. {n_microbatches - n_microbatches % mr or mr} "
+            f"or {(n_microbatches // mr + 1) * mr}), or pick a round_size "
+            f"that divides {n_microbatches}")
     sf, sb = len(fwd_costs), len(bwd_costs)
     s = sf + sb
     tasks: list[StageTask] = []
@@ -270,6 +278,19 @@ def interleaved_1f1b_schedule(
 # ---------------------------------------------------------------------------
 # Schedule sanity checks (used by tests and the dispatch runtime)
 # ---------------------------------------------------------------------------
+
+def dispatch_slot_order(schedule: Schedule, round_size: int) -> list:
+    """The deduped ``(round, slot)`` sequence a roundpipe schedule
+    dispatches, in task order — the bridge for asserting that the schedule
+    generator, the simulator and the dispatch runtime all follow the SAME
+    round-stitched order (``ExecutionPlan.tick_table``'s live entries)."""
+    out: list = []
+    for t in schedule.tasks:
+        entry = (t.microbatch // round_size, t.stage)
+        if not out or out[-1] != entry:
+            out.append(entry)
+    return out
+
 
 def validate(schedule: Schedule) -> None:
     """Raise if the schedule is malformed (dangling dep, dup key, bad device)."""

@@ -237,8 +237,12 @@ def simulate_plan(plan, n_microbatches: int | None = None, *,
     """Validate and simulate an :class:`~repro.core.plan.ExecutionPlan`.
 
     The schedule is generated from the *same* compiled plan the dispatch
-    runtime executes (one resident micro-batch group per worker per step
-    corresponds to ``n_microbatches == round_size == plan.n_workers``).
+    runtime executes, in the same round-stitched order
+    (``plan.tick_table``): ``n_microbatches = R * plan.n_workers`` with
+    ``round_size=plan.n_workers`` times the ``R``-round steady-state step
+    the runtime runs under ``StepConfig.n_microbatches`` (one resident
+    micro-batch group per worker per round, fill/drain paid once per
+    step); the ``R = 1`` default is the legacy one-round step.
 
     ``bandwidth`` (bytes per cost-model time-unit) switches on the
     two-resource model: each slot's ``plan.stage_bytes`` is charged against

@@ -96,16 +96,24 @@ def run_cell(arch: str, shape: str, multi_pod: bool, strategy: str,
         if spec.step == "train":
             if strategy == "roundpipe":
                 # the dry run lowers the exact ExecutionPlan the runtime
-                # would execute; record its simulated schedule alongside
+                # would execute; record its simulated schedule alongside —
+                # at the step's micro-batch count M (R = M/N stitched
+                # rounds), so the recorded bubble is the one the lowered
+                # program realizes
                 import dataclasses as _dc
                 from repro.core.dispatch import resolve_plan
                 from repro.launch.mesh import axis_size
                 from repro.core.simulator import simulate_plan
-                plan = resolve_plan(cfg, step_cfg, axis_size(mesh, "model"))
+                n_model = axis_size(mesh, "model")
+                plan = resolve_plan(cfg, step_cfg, n_model)
                 step_cfg = _dc.replace(step_cfg, partition=plan)
+                m_micro = step_cfg.n_microbatches or n_model
                 meta["plan"] = plan.describe()
+                meta["n_microbatches"] = m_micro
+                meta["rounds"] = plan.rounds_for(m_micro)
                 meta["simulated_bubble"] = round(
-                    simulate_plan(plan).bubble_ratio, 4)
+                    simulate_plan(plan, m_micro,
+                                  round_size=n_model).bubble_ratio, 4)
             step, state_sh, batch_sh = build_train_step(
                 cfg, mesh, step_cfg, spec.global_batch, spec.seq_len)
             if strategy == "roundpipe":

@@ -52,6 +52,12 @@ class StepConfig:
     # / optimizer state shrink to adapter size, and only adapter leaves
     # train (the paper's Qwen3-235B LoRA regime).  None -> full fine-tune.
     lora: Any = None
+    # roundpipe only: micro-batches per step, M = R * n_workers.  R > 1
+    # stitches R rounds back-to-back per optimizer step (paper §3.2 steady
+    # state: the N-1-tick fill/drain is paid once per step, bubble
+    # (N-1)/(R*S+N-1) -> 0), accumulating gradients across rounds.  None ->
+    # the legacy one-round (M = N) path.
+    n_microbatches: Optional[int] = None
     opt: OptConfig = dataclasses.field(default_factory=OptConfig)
 
 

@@ -1,19 +1,28 @@
 """Training launcher: config-driven, fault-tolerant, checkpointed.
 
   PYTHONPATH=src python -m repro.launch.train --arch qwen3-1.7b \\
-      --steps 300 --batch 8 --seq 128 --mesh 1x1 [--strategy roundpipe]
+      --steps 300 --batch 16 --seq 128 --mesh 1x1 [--strategy roundpipe] \\
+      [--microbatches 16] [--ckpt-dir /tmp/ckpt --ckpt-every 50]
+
+(--microbatches M requires --batch divisible by M: each of the R = M/N
+rounds feeds micro-batches of global_batch/M samples.)
 
 On a real pod this runs under ``jax.distributed.initialize`` with the
 production mesh; on this host it runs any reduced config end-to-end.
+
+Checkpointing goes through the atomic writer in ``repro.checkpoint``
+(write-to-tmp + manifest-last rename): ``--ckpt-every`` steps the live
+state is saved under ``--ckpt-dir``, and on startup the newest manifest
+is restored — step counter included — so an interrupted run resumes
+bit-identically to an uninterrupted one (``tests/test_train_resume.py``).
 """
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import time
 
 
-def main() -> None:
+def build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--smoke", action="store_true",
@@ -29,6 +38,11 @@ def main() -> None:
                     help="roundpipe stage split: cost-model auto-partition "
                          "(paper §4.4, uneven stages + LM-head stage) or the "
                          "degenerate 1-layer-per-stage split")
+    ap.add_argument("--microbatches", type=int, default=0,
+                    help="roundpipe only: micro-batches per step M = R*N; "
+                         "R > 1 stitches R rounds back-to-back per optimizer "
+                         "step (paper §3.2 steady state), accumulating "
+                         "gradients across rounds.  0 -> one round (M = N)")
     ap.add_argument("--lora-rank", type=int, default=0,
                     help="roundpipe only: >0 enables frozen-base LoRA "
                          "fine-tuning at this adapter rank")
@@ -37,11 +51,22 @@ def main() -> None:
                     help="comma-separated module paths the adapters decorate")
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
-    ap.add_argument("--save-every", type=int, default=50)
+    ap.add_argument("--ckpt-every", "--save-every", type=int, default=50,
+                    dest="ckpt_every",
+                    help="save an atomic checkpoint every K steps; startup "
+                         "always resumes from the newest one in --ckpt-dir")
     ap.add_argument("--async-opt", action="store_true")
     ap.add_argument("--log-every", type=int, default=10)
-    args = ap.parse_args()
+    return ap
 
+
+def run_training(args) -> dict:
+    """The launcher body: build everything from ``args`` and train.
+
+    Returns ``{"state", "losses", "steps", "resumed_from"}`` so tests can
+    drive the exact production wiring (checkpoint resume included)
+    in-process.
+    """
     import os
     n_data, n_model = (int(x) for x in args.mesh.split("x"))
     if n_data * n_model > 1:
@@ -51,12 +76,12 @@ def main() -> None:
 
     import jax
 
-    from repro.checkpoint import CheckpointManager
+    from repro.checkpoint import CheckpointManager, latest_step
     from repro.configs import smoke_config
     from repro.data import DataConfig, SyntheticLMDataset
     from repro.launch.mesh import make_mesh
-    from repro.launch.steps import (StepConfig, abstract_train_state,
-                                    build_train_step, init_train_state)
+    from repro.launch.steps import (StepConfig, build_train_step,
+                                    init_train_state)
     from repro.models.config import get_config
     from repro.optim import OptConfig
     from repro.runtime import FaultTolerantLoop
@@ -75,6 +100,9 @@ def main() -> None:
             target_modules=tuple(t.strip()
                                  for t in args.lora_targets.split(",")
                                  if t.strip()))
+    microbatches = args.microbatches or None
+    if microbatches is not None and args.strategy != "roundpipe":
+        raise SystemExit("--microbatches requires --strategy roundpipe")
     plan = None
     if args.strategy == "roundpipe":
         # compile the plan up front: the train step executes this exact
@@ -87,14 +115,18 @@ def main() -> None:
                 lora=lora_cfg)
         else:
             plan = plan_from_config(cfg, n_model, lora=lora_cfg)
-        sim = simulate_plan(plan)
+        m_sim = microbatches or n_model
+        r_sim = plan.rounds_for(m_sim)
+        sim = simulate_plan(plan, m_sim, round_size=n_model)
         print(plan.describe())
-        print(f"simulated bubble ratio (one round): {sim.bubble_ratio:.4f}")
+        print(f"simulated bubble ratio ({r_sim} round"
+              f"{'s' if r_sim != 1 else ''}, M={m_sim}): "
+              f"{sim.bubble_ratio:.4f}")
         if lora_cfg is not None:
             full = plan_from_config(cfg, n_model, partition=plan.partition)
-            up = sum(plan.stage_bytes)
-            down = sum(plan.stage_download_bytes)
-            full_down = sum(full.stage_download_bytes)
+            up = sum(plan.stage_bytes) * r_sim
+            down = sum(plan.stage_download_bytes) * r_sim
+            full_down = sum(full.stage_download_bytes) * r_sim
             print(f"LoRA r={lora_cfg.rank}: upload {up / 2**20:.1f} MiB/step, "
                   f"grad download {down / 2**20:.3f} MiB/step "
                   f"(full fine-tune would download {full_down / 2**20:.1f} MiB)")
@@ -105,8 +137,14 @@ def main() -> None:
                           xent_chunk=min(256, args.seq),
                           partition=plan,
                           lora=lora_cfg,
+                          n_microbatches=microbatches,
                           opt=OptConfig(lr=args.lr))
     data = SyntheticLMDataset(DataConfig(cfg.vocab_size, args.seq, args.batch))
+
+    resumed_from = latest_step(args.ckpt_dir)
+    if resumed_from is not None:
+        print(f"resuming from checkpoint step {resumed_from} in "
+              f"{args.ckpt_dir}")
 
     with mesh:
         step, state_sh, _ = build_train_step(cfg, mesh, step_cfg, args.batch,
@@ -123,7 +161,7 @@ def main() -> None:
                 state_sh)
         like = jax.eval_shape(init)
 
-        mgr = CheckpointManager(args.ckpt_dir, save_every=args.save_every)
+        mgr = CheckpointManager(args.ckpt_dir, save_every=args.ckpt_every)
         losses = []
 
         def metrics_cb(s, m, dt):
@@ -139,9 +177,18 @@ def main() -> None:
         state, final = loop.run(init, like, args.steps, shardings=state_sh,
                                 metrics_cb=metrics_cb)
         dt = time.time() - t0
-    print(f"done: {final} steps in {dt:.1f}s; "
-          f"loss {losses[0]:.4f} -> {losses[-1]:.4f}; "
-          f"stragglers={len(loop.stragglers)} restarts={loop.restarts}")
+    if losses:
+        print(f"done: {final} steps in {dt:.1f}s; "
+              f"loss {losses[0]:.4f} -> {losses[-1]:.4f}; "
+              f"stragglers={len(loop.stragglers)} restarts={loop.restarts}")
+    else:
+        print(f"done: {final} steps (all restored from checkpoint)")
+    return {"state": state, "losses": losses, "steps": final,
+            "resumed_from": resumed_from}
+
+
+def main() -> None:
+    run_training(build_parser().parse_args())
 
 
 if __name__ == "__main__":

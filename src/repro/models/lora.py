@@ -92,6 +92,29 @@ def target_leaf_paths(layers, cfg: LoraConfig) -> list[str]:
     return out
 
 
+def applicable_targets(model_cfg, targets=("attn", "mlp")) -> tuple:
+    """The subset of ``targets`` that matches at least one adaptable
+    (stacked rank-3) leaf of ``model_cfg``'s layer pool — lets generic
+    tooling (benchmarks, sweeps) build a :class:`LoraConfig` that is valid
+    across architectures (a pure-MoE layer has no ``"mlp"`` leaf, an
+    attention-free one no ``"attn"``).  Raises if NOTHING matches, so a
+    fully inapplicable request still fails loudly like
+    ``target_leaf_paths``."""
+    from . import transformer as T
+
+    layers = T.abstract_params(model_cfg)["layers"]
+    adaptable = [_dotted(p) for p, leaf
+                 in jax.tree_util.tree_flatten_with_path(layers)[0]
+                 if leaf.ndim == 3]
+    out = tuple(t for t in targets
+                if any(d == t or d.startswith(t + ".") for d in adaptable))
+    if not out:
+        raise ValueError(
+            f"none of {list(targets)} matches an adaptable stacked rank-3 "
+            f"leaf of the layer pool (adaptable: {adaptable})")
+    return out
+
+
 def _is_pair(node) -> bool:
     return isinstance(node, dict) and set(node) == {"A", "B"}
 

@@ -19,6 +19,14 @@ mode:
              merged-dense reference (base weights with W + (alpha/r)·B@A
              folded in); per-leaf allclose on loss and adapter grads, and the
              deposited pytree must hold ONLY adapter leaves (no base grads)
+  rounds   — multi-round steady state on the uneven auto plan: for
+             R in {1, 2, 3}, an R-round gradient-accumulated step
+             (n_microbatches = R*N, rounds stitched back-to-back in
+             R*S + N - 1 ticks) must per-leaf allclose the single-program
+             full-batch reference over all M micro-batches; R = 1 must be
+             BIT-identical to the legacy single-round path
+  rounds-lora — the same R-sweep with a frozen base: R-round accumulated
+             adapter grads vs the merged-dense full-batch reference
 """
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
@@ -46,9 +54,9 @@ LORA_CFG = None  # set in main() for mode == "lora"
 
 
 def make_plan(mode: str, cfg, n_workers: int):
-    if mode == "prefetch":
+    if mode in ("prefetch", "rounds"):
         return plan_from_config(cfg, n_workers)
-    if mode == "lora":
+    if mode in ("lora", "rounds-lora"):
         return plan_from_config(cfg, n_workers, lora=LORA_CFG)
     if mode == "uniform":
         part = uniform_partition(cfg.n_layers)
@@ -80,7 +88,7 @@ def main():
     cfg = dataclasses.replace(cfg, n_layers=n_layers, name=cfg.name + "-rp")
     n_model = 4
     mesh = jax.make_mesh((2, n_model), ("data", "model"))
-    if mode == "lora":
+    if mode in ("lora", "rounds-lora"):
         from repro.models.lora import LoraConfig
         LORA_CFG = LoraConfig(rank=4, alpha=8.0)
 
@@ -94,6 +102,9 @@ def main():
     # fp32 params for tight comparison
     params = T.init_params(key, cfg, dtype=jnp.float32)
     b, s = 8, 16
+    if mode in ("rounds", "rounds-lora"):
+        run_rounds(cfg, mesh, plan, params, s, lora=mode == "rounds-lora")
+        return
     if cfg.frontend:
         batch = {"embeds": jax.random.normal(key, (b, s, cfg.d_model), jnp.float32)}
     else:
@@ -164,6 +175,141 @@ def main():
             print("MISMATCH", k, err)
     print("worst rel grad err:", worst)
     assert worst < 5e-3, worst
+    print("ROUNDPIPE_DISPATCH_OK")
+
+
+def run_rounds(cfg, mesh, plan, params, s, *, lora=False):
+    """Multi-round steady-state equivalence (ISSUE 4 tentpole): for each
+    R in {1, 2, 3} an R-round gradient-accumulated RoundPipe step over
+    M = R*N micro-batches must per-leaf allclose the single-program
+    full-batch reference on the SAME M-micro-batch batch; R = 1 must be
+    bit-identical to the legacy (no round axis) path.  ``lora`` runs the
+    frozen-base variant against the merged-dense reference."""
+    from repro.core.schedule import dispatch_slot_order
+    from repro.core.schedule import validate as validate_schedule
+
+    n = plan.n_workers
+    b_round = 8                          # samples per round (2 per worker)
+    key = jax.random.PRNGKey(0)
+
+    adapters = None
+    if lora:
+        from repro.models import lora as lora_mod
+        adapters = lora_mod.init_adapters(jax.random.PRNGKey(3),
+                                          params["layers"], LORA_CFG,
+                                          dtype=jnp.float32)
+        adapters = jax.tree.map(
+            lambda a: jax.random.normal(jax.random.PRNGKey(4), a.shape,
+                                        a.dtype) * 0.05, adapters)
+
+    legacy = None                        # R=1 legacy-path grads for bit check
+    for r in (1, 2, 3):
+        m = r * n
+        g = r * b_round
+        kb = jax.random.fold_in(key, r)
+        batch = {"tokens": jax.random.randint(kb, (g, s), 0, cfg.vocab_size),
+                 "labels": jax.random.randint(jax.random.fold_in(kb, 1),
+                                              (g, s), 0, cfg.vocab_size)}
+
+        # the runtime's injection order IS the round-stitched tick table,
+        # and the schedule generator dispatches slots in the same order
+        table = plan.tick_table(r)
+        assert len(table) == r * plan.n_slots + n - 1
+        sched = plan.schedule(m, round_size=n)
+        validate_schedule(sched)
+        assert dispatch_slot_order(sched, n) == \
+            [e for e in table if e is not None], r
+
+        if lora:
+            from repro.models import lora as lora_mod
+
+            def ref_loss(ad):
+                merged = lora_mod.merge_params(params, ad, LORA_CFG)
+                return T.loss_fn(merged, batch, cfg, remat=False,
+                                 xent_chunk=8, kv_chunk=8)
+
+            ref_l, ref_g = jax.value_and_grad(ref_loss)(adapters)
+            rp_params = dict(params, lora=adapters)
+        else:
+            def ref_loss(p):
+                return T.loss_fn(p, batch, cfg, remat=False, xent_chunk=8,
+                                 kv_chunk=8)
+
+            ref_l, ref_g = jax.value_and_grad(ref_loss)(params)
+            rp_params = params
+
+        fn = build_roundpipe_grads_fn(
+            cfg, mesh, plan, xent_chunk=8, kv_chunk=8,
+            lora=LORA_CFG if lora else None, n_microbatches=m)
+        with mesh:
+            rp_g, rp_loss, rp_tokens = jax.jit(fn)(rp_params, batch)
+        assert int(rp_tokens) == g * s, (int(rp_tokens), g * s)
+
+        if lora:
+            assert set(rp_g) == {"lora"}, set(rp_g)
+            rp_cmp, ref_cmp = rp_g["lora"], ref_g
+        else:
+            rp_cmp, ref_cmp = rp_g, ref_g
+
+        if r == 2 and not lora:
+            # multi-round prefetch: the per-slot ChunkUpload tables are
+            # replayed modulo S — round 2's standby uploads stream while
+            # round 1 drains — and must stay bit-equivalent to the
+            # whole-block gather (forced row chunk splitting, as in the
+            # single-round prefetch mode)
+            biggest = max(int(c.weight_bytes)
+                          for c in plan.layer_costs[:plan.n_layers])
+            program = plan.prefetch_program(chunk_limit=max(1, biggest // 3))
+            pf_fn = build_roundpipe_grads_fn(
+                cfg, mesh, plan, xent_chunk=8, kv_chunk=8,
+                prefetch_program=program, n_microbatches=m)
+            with mesh:
+                pf_g, pf_loss, _ = jax.jit(pf_fn)(rp_params, batch)
+            np.testing.assert_allclose(float(pf_loss), float(rp_loss),
+                                       rtol=1e-6)
+            for (ka, va), (kb_, vb) in zip(
+                    jax.tree_util.tree_flatten_with_path(rp_g)[0],
+                    jax.tree_util.tree_flatten_with_path(pf_g)[0]):
+                assert ka == kb_
+                np.testing.assert_allclose(
+                    np.asarray(vb, np.float32), np.asarray(va, np.float32),
+                    rtol=1e-5, atol=1e-7, err_msg=jax.tree_util.keystr(ka))
+            print("R=2 prefetch path matches whole-block injection")
+
+        if r == 1:
+            # legacy single-round path (no round axis): the generalized
+            # machinery at R=1 must be BIT-identical, not just close
+            legacy_fn = build_roundpipe_grads_fn(
+                cfg, mesh, plan, xent_chunk=8, kv_chunk=8,
+                lora=LORA_CFG if lora else None)
+            with mesh:
+                lg, ll, _ = jax.jit(legacy_fn)(rp_params, batch)
+            assert np.asarray(ll).tobytes() == np.asarray(rp_loss).tobytes()
+            for (ka, va), (kb_, vb) in zip(
+                    jax.tree_util.tree_flatten_with_path(lg)[0],
+                    jax.tree_util.tree_flatten_with_path(rp_g)[0]):
+                assert ka == kb_
+                np.testing.assert_array_equal(
+                    np.asarray(va), np.asarray(vb),
+                    err_msg=f"R=1 not bit-identical to legacy path at "
+                            f"{jax.tree_util.keystr(ka)}")
+            print("R=1 bit-identical to the legacy single-round path")
+
+        print(f"R={r}: ref loss {float(ref_l)} rp loss {float(rp_loss)}")
+        np.testing.assert_allclose(float(rp_loss), float(ref_l), rtol=1e-4)
+        worst = 0.0
+        for (ka, va), (kb_, vb) in zip(
+                jax.tree_util.tree_flatten_with_path(ref_cmp)[0],
+                jax.tree_util.tree_flatten_with_path(rp_cmp)[0]):
+            assert ka == kb_
+            rv = np.asarray(va, np.float32)
+            gv = np.asarray(vb, np.float32)
+            err = np.abs(gv - rv).max() / (np.abs(rv).max() + 1e-6)
+            worst = max(worst, err)
+            if err > 5e-3:
+                print("MISMATCH", f"R={r}", jax.tree_util.keystr(ka), err)
+        print(f"R={r}: worst rel grad err: {worst}")
+        assert worst < 5e-3, (r, worst)
     print("ROUNDPIPE_DISPATCH_OK")
 
 

@@ -67,9 +67,74 @@ class TestRoundPipeSchedule:
             span = max(finishes[d]) - min(starts[d])
             assert span == pytest.approx(res.busy[d], rel=1e-9)
 
-    def test_rejects_round_smaller_than_devices(self):
-        with pytest.raises(ValueError):
+    # round_size < n_devices rejection (incl. message content) is covered
+    # by TestRoundSizeHandling.test_round_size_below_devices_raises_...
+
+
+class TestRoundSizeHandling:
+    """Round-stitched schedules must be valid for EVERY admissible
+    round_size (each divisor of M that is >= N), and the non-divisible /
+    too-small error paths must raise with actionable messages (ISSUE 4
+    satellite).  Property-style over seeded random cases — plain `random`,
+    no hypothesis dependency, so these always execute."""
+
+    @staticmethod
+    def _divisors(m, lo):
+        return [d for d in range(lo, m + 1) if m % d == 0]
+
+    def test_every_divisor_round_size_is_valid(self):
+        import random
+        rng = random.Random(42)
+        for _ in range(20):
+            n = rng.randrange(2, 6)
+            m = n * rng.randrange(1, 7)
+            sf, sb = rng.randrange(1, 5), rng.randrange(1, 5)
+            s = sf + sb
+            for mr in self._divisors(m, n):
+                sched = roundpipe_schedule(n, m, uniform(sf), uniform(sb),
+                                           round_size=mr)
+                validate(sched)
+                # every micro-batch clears every slot exactly once
+                seen = {}
+                for t in sched.tasks:
+                    seen.setdefault(t.microbatch, []).append(t.stage)
+                assert all(sorted(v) == list(range(s))
+                           for v in seen.values()), (n, m, mr)
+                # round r's slot j runs on device (r*S + j) % N — the same
+                # stitched order ExecutionPlan.tick_table encodes
+                for t in sched.tasks:
+                    rnd = t.microbatch // mr
+                    assert t.device == (rnd * s + t.stage) % n, (n, m, mr)
+                res = simulate(sched)
+                assert sum(res.busy) == pytest.approx(sched.total_work)
+
+    def test_more_rounds_never_increases_bubble(self):
+        """Stitching amortizes the fill/drain: at fixed round_size=N the
+        bubble is strictly decreasing in the number of rounds."""
+        import random
+        rng = random.Random(43)
+        for _ in range(10):
+            n = rng.randrange(2, 6)
+            sf, sb = rng.randrange(1, 5), rng.randrange(1, 5)
+            bubbles = [simulate(roundpipe_schedule(
+                n, r * n, uniform(sf), uniform(sb),
+                round_size=n)).bubble_ratio for r in (1, 2, 4)]
+            assert bubbles[2] < bubbles[1] < bubbles[0], (n, sf, sb, bubbles)
+
+    def test_non_divisible_raises_actionable_message(self):
+        with pytest.raises(ValueError) as exc:
+            roundpipe_schedule(4, 10, uniform(3), uniform(3), round_size=4)
+        msg = str(exc.value)
+        assert "not divisible" in msg
+        # the message proposes concrete fixes (nearest valid M values)
+        assert "8" in msg and "12" in msg
+
+    def test_round_size_below_devices_raises_actionable_message(self):
+        with pytest.raises(ValueError) as exc:
             roundpipe_schedule(8, 8, uniform(4), uniform(4), round_size=4)
+        msg = str(exc.value)
+        assert "round_size 4" in msg and "n_devices 8" in msg
+        assert "at least one micro-batch" in msg
 
 
 class TestClassicSchedules:

@@ -56,6 +56,24 @@ def test_dispatch_prefetch_matches_whole_block():
     _run("qwen3-1.7b", "prefetch", n_layers=7)
 
 
+def test_dispatch_multiround_accumulation_matches_full_batch():
+    """Multi-round steady state (ISSUE 4 tentpole): for R in {1, 2, 3} an
+    R-round gradient-accumulated step (M = R*N micro-batches stitched
+    back-to-back in R*S + N - 1 ticks) on the uneven 7-layer/4-worker auto
+    plan must per-leaf allclose a single-program full-batch reference over
+    the same M micro-batches, R = 1 must be BIT-identical to the legacy
+    single-round path, and the schedule generator must dispatch the exact
+    round-stitched tick order the runtime executes."""
+    _run("qwen3-1.7b", "rounds", n_layers=7)
+
+
+def test_dispatch_multiround_lora_matches_merged_dense():
+    """The same R in {1, 2, 3} sweep with a frozen base: the adapter ring
+    re-injects per round and the adapter-shaped deposit accumulates across
+    rounds; grads must allclose the merged-dense full-batch reference."""
+    _run("qwen3-1.7b", "rounds-lora", n_layers=7)
+
+
 def test_dispatch_lora_matches_merged_dense():
     """Frozen-base LoRA equivalence (headline): one adapter fine-tuning step
     through the ring on the uneven 7-layer/4-worker auto plan vs a
