@@ -1,5 +1,5 @@
 # Tier-1 verify: `make test` wraps the canonical command from ROADMAP.md.
-.PHONY: test test-fast bench-bubble
+.PHONY: test test-fast bench-bubble docs-check
 
 test:
 	PYTHONPATH=src python -m pytest -x -q
@@ -11,3 +11,8 @@ test-fast:
 
 bench-bubble:
 	PYTHONPATH=src python -m benchmarks.bubble_ratio
+
+# what CI's docs job runs: relative-link checker + cli.md flag-sync tests
+docs-check:
+	python scripts/check_links.py
+	PYTHONPATH=src python -m pytest -q tests/test_docs_cli.py

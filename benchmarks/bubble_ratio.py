@@ -26,6 +26,7 @@ from .workloads import PAPER_WORKLOADS, PCIE_BW, layer_costs
 
 N_GPUS, MICROBATCHES = 8, 16
 ROUND_SWEEP = (1, 2, 3, 4)      # rounds per step for the rp_sync_r* columns
+ASYNC_STEPS = 4                 # chained steps for the rp_async_executed col
 
 
 def _stage_costs(layers, spans, grad_ratio=2.0):
@@ -82,6 +83,16 @@ def bubble_ratios(arch: str) -> dict:
     out["roundpipe_async"] = steady_state_bubble(
         plan.schedule(MICROBATCHES, round_size=N_GPUS, iterations=3),
         iteration=1)
+    # ISSUE 5: the EXECUTED cross-step regime — the staleness-1 chained
+    # program (dispatch.build_roundpipe_async_train_step) runs exactly the
+    # tick order simulate_plan(iterations=I) times, so this column is a
+    # prediction the runtime demonstrably meets (subprocess `async` mode):
+    # one fill/drain amortized over ASYNC_STEPS chained optimizer steps,
+    # strictly below the per-step synchronous bubble and converging to the
+    # roundpipe_async steady-state window from above
+    out["rp_async_executed"] = simulate_plan(
+        plan, MICROBATCHES, round_size=N_GPUS,
+        iterations=ASYNC_STEPS).bubble_ratio
     # beyond-paper: vocab-chunked LM head as 4 schedulable pseudo-layers,
     # plus a full-iteration round (M_R = M) to amortise per-round imbalance
     layers_v = layer_costs(arch, head_chunks=4)
@@ -109,7 +120,8 @@ def main():
     print("arch,gpipe,1f1b,looped_bfs,interleaved_1f1b,roundpipe_sync,"
           f"{sweep_cols},"
           "rp_sync_blocked,rp_sync_hidden,rp_lora_hidden,"
-          "roundpipe_async,roundpipe_async_vsplit,sync_reduction_vs_best")
+          "rp_async_executed,roundpipe_async,roundpipe_async_vsplit,"
+          "sync_reduction_vs_best")
     for r in rows():
         sweep = ",".join(f"{r[f'rp_sync_r{k}']:.4f}" for k in ROUND_SWEEP)
         print(f"{r['arch']},{r['gpipe']:.4f},{r['1f1b']:.4f},"
@@ -118,6 +130,7 @@ def main():
               f"{sweep},"
               f"{r['rp_sync_blocked']:.4f},{r['rp_sync_hidden']:.4f},"
               f"{r['rp_lora_hidden']:.4f},"
+              f"{r['rp_async_executed']:.4f},"
               f"{r['roundpipe_async']:.4f},"
               f"{r['roundpipe_async_vsplit']:.4f},"
               f"{r['sync_reduction_vs_best']:.1%}")
@@ -125,6 +138,15 @@ def main():
         assert all(b < a for a, b in zip(sweep_vals, sweep_vals[1:])), (
             f"{r['arch']}: bubble not strictly decreasing with rounds: "
             f"{sweep_vals}")
+        # the executed cross-step bubble undercuts the per-step synchronous
+        # bubble on every workload and is bounded below by the steady-state
+        # middle-iteration window (roundpipe_async) it converges to
+        assert r["rp_async_executed"] < r["roundpipe_sync"], (
+            f"{r['arch']}: chained bubble {r['rp_async_executed']} not "
+            f"below per-step sync {r['roundpipe_sync']}")
+        assert r["roundpipe_async"] <= r["rp_async_executed"] + 1e-9, (
+            f"{r['arch']}: steady-state window {r['roundpipe_async']} "
+            f"above the executed chain {r['rp_async_executed']}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,91 @@
+#!/usr/bin/env python3
+"""Relative-link checker for the user-facing docs (CI docs job).
+
+Scans README.md, DESIGN.md, PAPER.md, ROADMAP.md and docs/**/*.md for
+markdown links ``[text](target)``; every RELATIVE target must point at
+an existing file, and a ``#fragment`` into a checked markdown file must
+match one of that file's heading anchors (GitHub slug rules: lowercase,
+strip non-word/space/hyphen chars, spaces -> hyphens, no collapsing).
+External links (with a URL scheme) are ignored.
+
+Usage: python scripts/check_links.py [repo_root]   (exit 1 on problems)
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+DOC_GLOBS = ("README.md", "DESIGN.md", "PAPER.md", "ROADMAP.md",
+             "docs/**/*.md")
+# inline links, with optional <angle brackets> and optional "title"
+LINK_RE = re.compile(
+    r"(?<!\!)\[[^\]]*\]\(\s*<?([^)\s>]+?)>?(?:\s+\"[^\"]*\")?\s*\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.M)
+
+
+def slugify(heading: str) -> str:
+    """GitHub's anchor slug: lowercase, drop chars outside [\\w -],
+    spaces become hyphens (NOT collapsed)."""
+    s = heading.strip().lower()
+    s = re.sub(r"[^\w\- ]", "", s)
+    return s.replace(" ", "-")
+
+
+def anchors_of(md_path: Path) -> set:
+    text = md_path.read_text(encoding="utf-8")
+    seen: dict = {}
+    out = set()
+    for h in HEADING_RE.findall(text):
+        slug = slugify(h)
+        n = seen.get(slug, 0)
+        seen[slug] = n + 1
+        out.add(slug if n == 0 else f"{slug}-{n}")
+    return out
+
+
+def doc_files(root: Path) -> list:
+    files: list = []
+    for pattern in DOC_GLOBS:
+        files.extend(sorted(root.glob(pattern)))
+    return [f for f in files if f.is_file()]
+
+
+def check_repo(root: Path) -> list:
+    """Returns a list of human-readable problems (empty = all good)."""
+    problems = []
+    for md in doc_files(root):
+        for target in LINK_RE.findall(md.read_text(encoding="utf-8")):
+            if re.match(r"^[a-zA-Z][a-zA-Z0-9+.-]*:", target):
+                continue                       # external (http:, mailto:, …)
+            path_part, _, frag = target.partition("#")
+            dest = md if not path_part else \
+                (md.parent / path_part).resolve()
+            rel = f"{md.relative_to(root)} -> {target}"
+            if path_part and not dest.exists():
+                problems.append(f"broken link: {rel} (no such file)")
+                continue
+            if frag and dest.suffix == ".md":
+                if frag not in anchors_of(dest):
+                    problems.append(f"broken anchor: {rel} "
+                                    f"(#{frag} not a heading of "
+                                    f"{dest.name})")
+    return problems
+
+
+def main() -> int:
+    root = Path(sys.argv[1]) if len(sys.argv) > 1 else \
+        Path(__file__).resolve().parents[1]
+    problems = check_repo(root)
+    for p in problems:
+        print(p)
+    n = len(doc_files(root))
+    if problems:
+        print(f"{len(problems)} problem(s) across {n} doc file(s)")
+        return 1
+    print(f"all relative links OK across {n} doc file(s)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

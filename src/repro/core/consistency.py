@@ -96,6 +96,34 @@ class ConsistencyProtocol:
     def after_p_copy(self, layer: int, iteration: int) -> None:
         self.book.set("pcp", layer, iteration)
 
+    # ---- non-blocking counterparts -------------------------------------------
+    # Used by the static program verifier (``verify_async_ticks``): the same
+    # five constraints phrased as "may this event happen NOW?" predicates, so
+    # a deterministic replay can certify an execution order without threads.
+    def may_param_upload(self, layer: int, iteration: int) -> bool:
+        """(2): upload for iteration T may start once P-copy T-2 is done."""
+        return self.book.is_set("pcp", layer, iteration - 2)
+
+    def may_grad_download(self, layer: int, iteration: int) -> bool:
+        """(4): writing G_T may start once G-copy of G_{T-1} is done."""
+        return self.book.is_set("gcp", layer, iteration - 1)
+
+    def may_g_copy(self, layer: int, iteration: int) -> bool:
+        """(3): G-copy of G_T may start once the device wrote G_T."""
+        return self.book.is_set("down", layer, iteration)
+
+    def may_p_copy(self, layer: int, iteration: int, *,
+                   double_buffered: bool = False) -> bool:
+        """(1): P-copy of W^{(T)} may start once the master reads it would
+        overwrite are retired.  Single-buffer form (the paper's): wait for
+        iteration T+1's upload.  ``double_buffered``: the writer targets the
+        buffer LAST read by iteration T (two master versions live, as in the
+        in-program dispatch realization), so only iteration T's upload must
+        have finished — one iteration earlier, strictly safe with 2 buffers.
+        """
+        return self.book.is_set("up", layer,
+                                iteration if double_buffered else iteration + 1)
+
 
 class AsyncTrainer:
     """Reference driver wiring a device worker and an optimizer worker.
@@ -179,6 +207,78 @@ class AsyncTrainer:
         if self.errors:
             raise self.errors[0]
         return self.master
+
+
+def verify_async_ticks(plan, rounds: int = 1, iterations: int = 1) -> None:
+    """Certify that a cross-step tick table satisfies the five §4.3
+    constraints, by deterministic replay through a real
+    :class:`ConsistencyProtocol`.
+
+    The chained dispatch program (``core/dispatch.py`` async mode,
+    DESIGN.md §6) realizes the protocol's events in program order:
+
+    * ``up(l, T)``   — step T's LAST ring injection of layer ``l`` (the final
+      read of the staleness-1 master version ``v_{T-1}``);
+    * ``down(l, T)`` — step T's last gradient deposit of layer ``l``;
+    * ``gcp/pcp(l, T)`` — the in-program optimizer update at step T's
+      deposit-complete tick ``D_T = (T+1)·R·S + N - 2`` (grads consumed,
+      version ``v_{T+1}`` published).
+
+    Constraints (2), (3), (4) are checked in the paper's literal form;
+    (1) in the double-buffered form (two live master versions — see
+    :meth:`ConsistencyProtocol.may_p_copy`); (5) is structural (one update
+    site per step, replayed strictly in step order).  Raises ``ValueError``
+    naming the first violated constraint — e.g. when ``R·S < N - 1`` and
+    step T's injection would overtake step T-2's gradient drain.
+    """
+    n, s = plan.n_workers, plan.n_slots
+    rs = rounds * s
+    table = plan.tick_table(rounds, iterations)
+    proto = ConsistencyProtocol(plan.n_layers)
+    last_update = -1
+
+    def fail(constraint, what, layer, step, tick):
+        raise ValueError(
+            f"constraint ({constraint}) violated at tick {tick}: {what} of "
+            f"layer {layer} step {step} is not yet permitted "
+            f"(rounds={rounds}, iterations={iterations}, N={n}, S={s})")
+
+    for t, entry in enumerate(table):
+        if entry is not None:                      # injection (master upload)
+            g_round, slot = entry
+            step, r = divmod(g_round, rounds)
+            for lid in plan.stages[slot].layers:
+                if r == 0 and not proto.may_param_upload(lid, step):
+                    fail(2, "param upload", lid, step, t)
+                if r == rounds - 1:
+                    proto.after_param_upload(lid, step)
+        g = t - (n - 1)                            # gradient deposit (exit)
+        if 0 <= g < iterations * rs:
+            step, within = divmod(g, rs)
+            r, slot = divmod(within, s)
+            if plan.stages[slot].kind != "F":
+                for lid in plan.stages[slot].layers:
+                    if r == 0 and not proto.may_grad_download(lid, step):
+                        fail(4, "grad download", lid, step, t)
+                    if r == rounds - 1:
+                        proto.after_grad_download(lid, step)
+            if within == rs - 1:                   # D_step: host update site
+                for lid in range(plan.n_layers):
+                    if not proto.may_g_copy(lid, step):
+                        fail(3, "G-copy", lid, step, t)
+                    proto.after_g_copy(lid, step)
+                if step != last_update + 1:        # (5): sequential optimizer
+                    raise ValueError(
+                        f"constraint (5) violated: update for step {step} "
+                        f"after step {last_update}")
+                last_update = step
+                for lid in range(plan.n_layers):
+                    if not proto.may_p_copy(lid, step, double_buffered=True):
+                        fail(1, "P-copy", lid, step, t)
+                    proto.after_p_copy(lid, step)
+    if last_update != iterations - 1:
+        raise ValueError(f"only {last_update + 1} of {iterations} optimizer "
+                         f"updates were reached by the tick table")
 
 
 def reference_staleness1(n_layers: int, device_fn: Callable, optimizer_fn: Callable,

@@ -546,6 +546,419 @@ def roundpipe_forward_backward(params, batch, worker_id, cfg: ModelConfig, *,
     return grads, loss_sum * scale, tok_count
 
 
+def roundpipe_async_forward_backward(params, opt_state, batch, worker_id,
+                                     cfg: ModelConfig, *, plan, n_workers: int,
+                                     l_pad: int, steps: int, rounds: int,
+                                     opt_cfg, xent_chunk: int = 256,
+                                     kv_chunk: int = 1024,
+                                     ring_grad_dtype=jnp.float32,
+                                     prefetch_program=None):
+    """Cross-step chained body (paper §4.3, DESIGN.md §6): ``steps``
+    optimizer iterations executed back-to-back in ONE ring program of
+    ``I*R*S + N - 1`` ticks — step ``T+1``'s round injection begins while
+    step ``T``'s gradient waves are still draining to their pool owners,
+    so the ``N-1``-tick fill/drain is paid once per CALL, not once per
+    step.
+
+    What makes the overlap sound is staleness-1 parameter versioning:
+    step ``T`` reads version ``v_{T-1}`` (grads ``0..T-2`` applied) while
+    the in-program optimizer (``repro.optim.adam.apply_updates`` on this
+    worker's pool shard — the "host-resident" copy) consumes step
+    ``T-1``'s freshly-drained gradients.  The five §4.3 ordering
+    constraints are realized by data dependence and certified at build
+    time by ``repro.core.consistency.verify_async_ticks``:
+
+      * injections of step ``T`` read the version list entry staged at
+        step ``T-2``'s deposit-complete tick ``D_{T-2}`` (constraint 2);
+      * the gradient accumulators are snapshotted + reset at ``D_T``
+        before step ``T+1``'s first wave exits the ring (constraints 3/4);
+      * the update runs once per step at ``D_T``, sequentially
+        (constraint 5), writing the double-buffered read slot whose last
+        reader — step ``T``'s deepest backward — retired at that same
+        tick (constraint 1, double-buffered form);
+
+    Replicated parameters (embed / LM head / final norm) read by *traced*
+    work need per-worker version selection (a worker may still run step
+    ``T``'s deep slots while the injection front is in step ``T+1``), so
+    they live in a 2-deep parity buffer indexed by the traced work-step.
+
+    ``batch`` leaves arrive ``(steps, rounds, B_w, ...)``.  Returns
+    ``(new_params, new_opt_state, metrics)`` with per-step ``loss`` /
+    ``tokens`` / ``grad_norm`` arrays of shape ``(steps,)``; the final
+    update (step ``I-1``'s) is applied before returning — the flush —
+    so the result matches ``reference_staleness1`` over ``steps``
+    iterations exactly.
+    """
+    n = n_workers
+    l_total = cfg.n_layers
+    per = l_pad // n
+    w = worker_id[0]
+
+    slots = plan.stages
+    sf = plan.n_fwd
+    s_total = plan.n_slots
+    kmax = plan.max_block
+    fused_spec = plan.fused
+    rs = rounds * s_total                  # live ticks per step
+    live = steps * rs
+    tied = "lm_head" not in params
+
+    starts_arr = jnp.array([s.start for s in slots] + [0], jnp.int32)
+    sizes_arr = jnp.array([s.size for s in slots] + [0], jnp.int32)
+
+    def sel2(leaf, i, j):
+        """leaf[(traced i, traced j)] along the two leading axes."""
+        leaf = jax.lax.dynamic_index_in_dim(leaf, i, 0, keepdims=False)
+        return jax.lax.dynamic_index_in_dim(leaf, j, 0, keepdims=False)
+
+    def batch_step(i):                     # static leading-index slice
+        return jax.tree.map(lambda x: x[i], batch)
+
+    tokens = batch.get("tokens")           # (I, R, B_w, S) or None
+    labels = batch["labels"]
+
+    # ---- staleness-1 version bookkeeping ------------------------------------
+    # versions[k] = params with grads 0..k-1 applied (v_0 = the input);
+    # step T's injections read versions[max(0, T-1)] — STATIC selection,
+    # since injection ticks are static.  Appended at each deposit-complete
+    # tick D_k below, in step order (constraint 5).
+    versions = [params]
+    opt = opt_state
+
+    def emb_for(p, i):                     # (R, B_w, S, D) for step i
+        return T.embed_inputs(p, batch_step(i), cfg)
+
+    # parity buffers for TRACED reads: slot T % 2 holds what step T's work
+    # consumes (replicated params of v_{max(0,T-1)} and its embeddings of
+    # step T's batch).  Steps 0 and 1 both read v_0.
+    x_emb_pair = jnp.stack([emb_for(params, 0),
+                            emb_for(params, min(1, steps - 1))])
+    fnorm_pair = jax.tree.map(lambda a: jnp.stack([a, a]),
+                              params["final_norm"])
+    head0 = T.lm_head_weights(params, cfg)
+    head_pair = jnp.stack([head0, head0])
+    bshape = x_emb_pair.shape[2:]          # (B_w, S, D)
+
+    # ---- tick-state ---------------------------------------------------------
+    pool = params["layers"]
+    ring = _zeros_block(pool, kmax)
+    gbuf = jax.tree.map(lambda a: a.astype(ring_grad_dtype),
+                        _zeros_block(pool, kmax))
+    pool_grads = jax.tree.map(lambda a: jnp.zeros(a.shape, jnp.float32), pool)
+    stash = jnp.zeros((l_total + 1,) + bshape, x_emb_pair.dtype)
+    act = jnp.zeros(bshape, x_emb_pair.dtype)
+    grad_carry = jnp.zeros(bshape, jnp.float32)
+    # per-step accumulators are parity-PAIRED (leading dim 2, indexed by the
+    # traced work-step): on shallow plans (sf < N-1 or S < N) a worker
+    # starts step k+1's fused/backward work before step k's
+    # deposit-complete tick D_k, so a single accumulator would leak early
+    # step-k+1 contributions into step k's snapshot.  Pool deposits need no
+    # pairing — waves exit the ring strictly in step order (step k's last
+    # deposit is tick D_k, step k+1's first is D_k + 1).
+    loss_sum = jnp.zeros((2,), jnp.float32)
+    tok_count = jnp.zeros((2,), jnp.int32)
+    embed_grad = jnp.zeros((2,) + params["embed"].shape, jnp.float32)
+    head_grad = jnp.zeros((2,) + head0.shape, jnp.float32)
+    fnorm_grad = jax.tree.map(
+        lambda a: jnp.zeros((2,) + a.shape, jnp.float32),
+        params["final_norm"])
+    losses, toks, gnorms = [], [], []
+
+    def block_row(block, k):
+        return jax.tree.map(lambda a: a[k], block)
+
+    if kmax == 1:
+        def stage_fwd(block, n_active, x):
+            y = T.layer_forward(x, block_row(block, 0), cfg, kv_chunk=kv_chunk)
+            return jnp.where(n_active > 0, y, x)
+    else:
+        def stage_fwd(block, n_active, x):
+            def body(xc, inp):
+                k, lw = inp
+                y = T.layer_forward(xc, lw, cfg, kv_chunk=kv_chunk)
+                return jnp.where(k < n_active, y, xc), None
+            out, _ = jax.lax.scan(body, x, (jnp.arange(kmax), block))
+            return out
+
+    def fused_loss(block, fnorm, hw, x, labels_cur):
+        if fused_spec.size:
+            x = stage_fwd(block, fused_spec.size, x)
+        h = apply_norm(x, fnorm, cfg.norm_kind, cfg.norm_eps)
+        tot, cnt = T.chunked_softmax_xent(h, hw, labels_cur, chunk=xent_chunk)
+        return tot, cnt
+
+    def inj_pool(t_step):                  # version step t_step injects
+        return versions[max(0, t_step - 1)]["layers"]
+
+    def assemble_block(spec, src_pool):
+        rows = []
+        for lid in spec.layers:
+            owner, idx = divmod(lid, per)
+            inj = jax.tree.map(lambda a: a[idx], src_pool)
+            rows.append(jax.lax.ppermute(inj, AXIS, [(owner, 0)]))
+        if not rows:
+            return None
+        rows += [rows[0]] * (kmax - len(rows))
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *rows)
+
+    # ---- chunked double-buffered uploader (per-version pool leaves) ---------
+    pool_leaves0, pool_def = jax.tree_util.tree_flatten(pool)
+    leaf_elems = [int(math.prod(l.shape[1:])) for l in pool_leaves0]
+    leaf_offs = list(itertools.accumulate([0] + leaf_elems[:-1]))
+    row_elems = sum(leaf_elems)
+
+    def _chunk_elem_range(cu):
+        if cu.parent_bytes <= 0:
+            return 0, row_elems
+        return (cu.lo * row_elems // cu.parent_bytes,
+                cu.hi * row_elems // cu.parent_bytes)
+
+    def upload_slot(stand, slot_idx, pool_leaves):
+        stand = list(stand)
+        for cu in prefetch_program.uploads[slot_idx]:
+            if cu.row < 0:
+                continue
+            a, b = _chunk_elem_range(cu)
+            for i, (off, ne) in enumerate(zip(leaf_offs, leaf_elems)):
+                la, lb = max(a - off, 0), min(b - off, ne)
+                if la >= lb:
+                    continue
+                src = jax.lax.slice(
+                    pool_leaves[i][cu.pool_row].reshape(-1), (la,), (lb,))
+                src = jax.lax.ppermute(src, AXIS, [(cu.owner, 0)])
+                flat = stand[i].reshape(kmax, -1)
+                stand[i] = flat.at[cu.row, la:lb].set(src).reshape(
+                    stand[i].shape)
+        return stand
+
+    def promote_standby(stand, spec):
+        leaves = []
+        for l in stand:
+            if spec.size < kmax:
+                pad = jnp.broadcast_to(l[0], (kmax - spec.size,) + l.shape[1:])
+                l = l.at[spec.size:].set(pad)
+            leaves.append(l)
+        return jax.tree_util.tree_unflatten(pool_def, leaves)
+
+    def zeros_standby():
+        return [jnp.zeros((kmax,) + l.shape[1:], l.dtype)
+                for l in pool_leaves0]
+
+    tick_entries = plan.tick_table(rounds, steps)
+    if prefetch_program is not None:
+        standby = upload_slot(zeros_standby(), 0,
+                              jax.tree_util.tree_flatten(inj_pool(0))[0])
+
+    for t, entry in enumerate(tick_entries):
+        # ---- ring plumbing (static per tick) --------------------------------
+        shifted = jax.tree.map(
+            lambda a: jax.lax.ppermute(a, AXIS, _shift_perm(n)), ring)
+        gbuf = jax.tree.map(
+            lambda a: jax.lax.ppermute(a, AXIS, _shift_perm(n)), gbuf)
+        if entry is not None:
+            t_inj = entry[0] // rounds     # static injection step
+            spec = slots[entry[1]]
+            if prefetch_program is not None:
+                if spec.size:
+                    ring = _ring_add(shifted, promote_standby(standby, spec))
+                else:
+                    ring = shifted
+            else:
+                inj = assemble_block(spec, inj_pool(t_inj))
+                ring = _ring_add(shifted, inj) if inj is not None else shifted
+        else:
+            ring = shifted
+
+        # ---- compute: worker w holds stitched global tick (t - w) -----------
+        fb = t - w                                          # traced
+        on_ring = jnp.logical_and(fb >= 0, fb < live)
+        slot_i = jnp.where(on_ring, jnp.mod(fb, s_total), s_total)
+        g_round = jnp.clip(jnp.floor_divide(fb, s_total), 0,
+                           steps * rounds - 1)
+        ri = jnp.mod(g_round, rounds)                       # round in step
+        parity = jnp.mod(jnp.floor_divide(g_round, rounds), 2)
+        round_start = slot_i == 0
+        plain_on = jnp.logical_and(on_ring, slot_i < sf)
+        fused_on = jnp.logical_and(on_ring, slot_i == sf)
+        bwd_on = jnp.logical_and(on_ring, slot_i > sf)
+        start = starts_arr[slot_i]
+        n_act = sizes_arr[slot_i]
+
+        def x_emb_cur():
+            return sel2(x_emb_pair, parity, ri)
+
+        step_tr = jnp.floor_divide(g_round, rounds)
+
+        def do_plain(op):
+            act_, stash_ = op
+            x_in = jnp.where(round_start, x_emb_cur(), act_)
+
+            def step_one(xc, st_, k, lw):
+                active = k < n_act
+                lid = jnp.where(active, jnp.minimum(start + k, l_total),
+                                l_total)
+                st_ = jax.lax.dynamic_update_slice(
+                    st_, xc[None].astype(st_.dtype),
+                    (lid,) + (jnp.int32(0),) * len(bshape))
+                y = T.layer_forward(xc, lw, cfg, kv_chunk=kv_chunk)
+                return jnp.where(active, y, xc), st_
+
+            if kmax == 1:
+                return step_one(x_in, stash_, 0, block_row(ring, 0))
+
+            def body(carry, inp):
+                xc, st_ = carry
+                k, lw = inp
+                return step_one(xc, st_, k, lw), None
+
+            (y, stash_), _ = jax.lax.scan(body, (x_in, stash_),
+                                          (jnp.arange(kmax), ring))
+            return y, stash_
+
+        act, stash = jax.lax.cond(plain_on, do_plain,
+                                  lambda op: op, (act, stash))
+
+        def do_fused(op):
+            act_, ls, tc, gcarry, hg, fg, gb_, eg = op
+            x_in = jnp.where(round_start, x_emb_cur(), act_)    # Sf == 0 edge
+            labels_cur = sel2(labels, step_tr, ri)
+            fnorm_cur = jax.tree.map(
+                lambda a: jax.lax.dynamic_index_in_dim(a, parity, 0,
+                                                       keepdims=False),
+                fnorm_pair)
+            head_cur = jax.lax.dynamic_index_in_dim(head_pair, parity, 0,
+                                                    keepdims=False)
+            tot, vjp, cnt = jax.vjp(
+                lambda blk, fn, hw_, xx: fused_loss(blk, fn, hw_, xx,
+                                                    labels_cur),
+                ring, fnorm_cur, head_cur, x_in, has_aux=True)
+            gb, gf, gh, gx = vjp(jnp.float32(1.0))
+            gb_ = jax.tree.map(lambda a, d: a + d.astype(a.dtype), gb_, gb)
+            if sf == 0 and fused_spec.layers and tokens is not None:
+                eg = eg.at[parity, sel2(tokens, step_tr, ri)].add(
+                    gx.astype(jnp.float32))
+            return (act_, ls.at[parity].add(tot),
+                    tc.at[parity].add(cnt), gx.astype(jnp.float32),
+                    hg.at[parity].add(gh.astype(jnp.float32)),
+                    jax.tree.map(
+                        lambda a, d: a.at[parity].add(d.astype(jnp.float32)),
+                        fg, gf),
+                    gb_, eg)
+
+        (act, loss_sum, tok_count, grad_carry, head_grad, fnorm_grad,
+         gbuf, embed_grad) = jax.lax.cond(
+            fused_on, do_fused, lambda op: op,
+            (act, loss_sum, tok_count, grad_carry, head_grad, fnorm_grad,
+             gbuf, embed_grad))
+
+        def do_bwd(op):
+            gcarry, gb_, eg = op
+            x_in = jax.lax.dynamic_index_in_dim(
+                stash, jnp.minimum(start, l_total), 0, keepdims=False)
+            y, vjp = jax.vjp(lambda blk, xx: stage_fwd(blk, n_act, xx),
+                             ring, x_in)
+            gb, gx = vjp(gcarry.astype(y.dtype))
+            gb_ = jax.tree.map(lambda a, d: a + d.astype(a.dtype), gb_, gb)
+
+            def embed_bwd(e):
+                if tokens is None:
+                    return e
+                return e.at[parity, sel2(tokens, step_tr, ri)].add(
+                    gx.astype(jnp.float32))
+
+            eg = jax.lax.cond(jnp.logical_and(start == 0, n_act > 0),
+                              embed_bwd, lambda e: e, eg)
+            return gx.astype(jnp.float32), gb_, eg
+
+        grad_carry, gbuf, embed_grad = jax.lax.cond(
+            bwd_on, do_bwd, lambda op: op, (grad_carry, gbuf, embed_grad))
+
+        # ---- gradient deposit -----------------------------------------------
+        g = t - (n - 1)                    # global stitched slot exiting now
+        if 0 <= g < live and slots[g % s_total].kind != "F":
+            for k, lid in enumerate(slots[g % s_total].layers):
+                owner, idx = divmod(lid, per)
+                row = jax.tree.map(lambda a: a[k], gbuf)
+                arriving = jax.tree.map(
+                    lambda a: jax.lax.ppermute(a, AXIS, [(n - 1, owner)]), row)
+                pool_grads = jax.tree.map(
+                    lambda pg, ar: pg.at[idx].add(ar.astype(jnp.float32)),
+                    pool_grads, arriving)
+
+        # ---- D_k: step k's grads fully drained -> host optimizer update -----
+        if g >= 0 and (g + 1) % rs == 0:
+            k = g // rs                    # static step index, in order
+            p_k = k % 2                    # step k's accumulator parity slot
+            loss_k = jax.lax.psum(loss_sum[p_k], AXIS)
+            tok_k = jax.lax.psum(tok_count[p_k], AXIS)
+            scale = 1.0 / jnp.maximum(tok_k.astype(jnp.float32), 1.0)
+            eg = jax.lax.psum(embed_grad[p_k], AXIS)
+            hg = jax.lax.psum(head_grad[p_k], AXIS)
+            fg = jax.tree.map(lambda x: jax.lax.psum(x[p_k], AXIS),
+                              fnorm_grad)
+            grads = {"embed": eg, "layers": pool_grads, "final_norm": fg}
+            if not tied:
+                grads["lm_head"] = hg
+            else:
+                grads["embed"] = grads["embed"] + hg.T
+            grads = jax.tree.map(lambda x: x * scale, grads)
+            # global clip norm: pool rows are disjoint across shards (psum);
+            # replicated grads are identical everywhere (count once)
+            pool_sq = jax.lax.psum(
+                sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                    for x in jax.tree.leaves(grads["layers"])), AXIS)
+            rep_sq = sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                         for key, v in grads.items() if key != "layers"
+                         for x in jax.tree.leaves(v))
+            gnorm = jnp.sqrt(pool_sq + rep_sq)
+            new_params, opt, _ = apply_updates(opt, grads, opt_cfg,
+                                               param_like=params,
+                                               grad_norm=gnorm)
+            versions.append(new_params)
+            losses.append(loss_k * scale)
+            toks.append(tok_k)
+            gnorms.append(gnorm)
+            # the G-copy/reset: pool deposits clear fully (step k+1's first
+            # wave exits at tick g+N, strictly later); the paired
+            # accumulators clear ONLY step k's parity slot — the other slot
+            # may already hold step k+1's early fused/backward contributions,
+            # and step k+2 (which reuses slot p_k) starts no earlier than
+            # tick (k+2)*R*S > D_k
+            pool_grads = jax.tree.map(
+                lambda a: jnp.zeros(a.shape, jnp.float32), pool)
+            embed_grad = embed_grad.at[p_k].set(0.0)
+            head_grad = head_grad.at[p_k].set(0.0)
+            fnorm_grad = jax.tree.map(lambda a: a.at[p_k].set(0.0),
+                                      fnorm_grad)
+            loss_sum = loss_sum.at[p_k].set(0.0)
+            tok_count = tok_count.at[p_k].set(0)
+            # publish v_{k+1} into the parity slot step k+2 will read; its
+            # previous occupant (v_{k-1}) had its last reader retire at this
+            # very tick — constraint (1), double-buffered form
+            nxt = k + 2
+            if nxt < steps:
+                x_emb_pair = x_emb_pair.at[nxt % 2].set(
+                    emb_for(new_params, nxt))
+                fnorm_pair = jax.tree.map(
+                    lambda pair, v: pair.at[nxt % 2].set(v),
+                    fnorm_pair, new_params["final_norm"])
+                head_pair = head_pair.at[nxt % 2].set(
+                    T.lm_head_weights(new_params, cfg))
+
+        # ---- standby upload for tick t+1 (after any version publish) --------
+        if prefetch_program is not None and t + 1 < len(tick_entries):
+            nxt_entry = tick_entries[t + 1]
+            if nxt_entry is not None:
+                nxt_step = nxt_entry[0] // rounds
+                standby = upload_slot(
+                    zeros_standby(), nxt_entry[1] % s_total,
+                    jax.tree_util.tree_flatten(inj_pool(nxt_step))[0])
+
+    metrics = {"loss": jnp.stack(losses), "tokens": jnp.stack(toks),
+               "grad_norm": jnp.stack(gnorms), "step": opt["step"]}
+    return versions[-1], opt, metrics
+
+
 # ---------------------------------------------------------------------------
 # jit-level builders (strategy="roundpipe")
 # ---------------------------------------------------------------------------
@@ -809,6 +1222,143 @@ def build_roundpipe_train_step(cfg: ModelConfig, mesh, step_cfg,
     batch_shardings = jax.tree.map(lambda s: NamedSharding(mesh, s), bspecs,
                                    is_leaf=lambda x: isinstance(x, P))
     step = jax.jit(train_step,
+                   in_shardings=(state_shardings, batch_shardings),
+                   out_shardings=(state_shardings, None),
+                   donate_argnums=(0,))
+    return step, state_shardings, batch_shardings, plan
+
+
+def build_roundpipe_async_train_step(cfg: ModelConfig, mesh, step_cfg,
+                                     global_batch: int, seq_len: int, *,
+                                     steps_per_call: int, plan=None,
+                                     overlap: bool = True):
+    """Compile the cross-step staleness-1 async train program (paper §4.3,
+    DESIGN.md §6): ``multi_step(state, batches) -> (state, metrics)`` runs
+    ``steps_per_call`` optimizer steps back-to-back in ONE chained ring
+    program — step ``T+1``'s injection streams while step ``T``'s
+    gradients drain and the in-program optimizer applies them, so the
+    fill/drain bubble amortizes to ``(N-1)/(I*R*S + N-1)`` (the
+    ``iterations=I`` mode of ``simulate_plan``).
+
+    ``batches`` leaves carry a leading ``(steps_per_call,)`` axis (one
+    global batch per step); ``metrics['loss'/'tokens'/'grad_norm']`` come
+    back per-step with shape ``(steps_per_call,)``.  The state is the same
+    ``{"params", "opt"}`` pytree as the synchronous step (padded pool,
+    ``init_roundpipe_state``) — checkpoints interchange freely.  The final
+    step's update is applied before returning (flush), so the result
+    matches ``repro.core.consistency.reference_staleness1`` over
+    ``steps_per_call`` iterations.
+
+    ``overlap=False`` degenerates to the PR-4 synchronous runtime: the
+    same multi-batch calling convention driven by the unmodified one-step
+    program per sub-step (staleness-0) — bit-identical to calling
+    ``build_roundpipe_train_step``'s step ``steps_per_call`` times.
+
+    Frozen-base LoRA is not supported yet (the in-program optimizer
+    updates the dense pool); pass ``step_cfg.lora=None``.
+
+    Returns ``(multi_step, state_shardings, batch_shardings, plan)``.
+    """
+    from repro.core.consistency import verify_async_ticks
+
+    if steps_per_call < 1:
+        raise ValueError(f"steps_per_call must be >= 1, got {steps_per_call}")
+    if getattr(step_cfg, "lora", None) is not None:
+        raise ValueError(
+            "async optimizer + frozen-base LoRA is not supported: the "
+            "in-program host optimizer updates the dense pool — drop "
+            "StepConfig.lora or use the synchronous step")
+    n = axis_size(mesh, AXIS)
+    if global_batch % n:
+        raise ValueError("global batch must divide the model axis")
+    if plan is None:
+        plan = resolve_plan(cfg, step_cfg, n)
+    m_micro = getattr(step_cfg, "n_microbatches", None) or n
+    rounds = plan.rounds_for(m_micro)
+    if global_batch % m_micro:
+        raise ValueError(
+            f"global batch {global_batch} must be divisible by "
+            f"n_microbatches {m_micro}")
+
+    if not overlap:
+        sync_step, state_sh, batch_sh, plan = build_roundpipe_train_step(
+            cfg, mesh, step_cfg, global_batch, seq_len, plan=plan)
+
+        def multi_step(state, batches):
+            per_step = []
+            for i in range(steps_per_call):
+                sub = jax.tree.map(lambda x: x[i], batches)
+                state, m = sync_step(state, sub)
+                per_step.append(m)
+            metrics = {k: jnp.stack([m[k] for m in per_step])
+                       for k in ("loss", "tokens", "grad_norm")}
+            metrics["step"] = per_step[-1]["step"]
+            return state, metrics
+
+        stacked_sh = jax.tree.map(
+            lambda s: NamedSharding(mesh, P(None, *s.spec)), batch_sh)
+        return multi_step, state_sh, stacked_sh, plan
+
+    plan.validate()
+    plan.validate_async(rounds)
+    # certify the chained tick order satisfies the five §4.3 constraints
+    verify_async_ticks(plan, rounds, steps_per_call)
+    program = None
+    if getattr(step_cfg, "prefetch", True):
+        program = plan.prefetch_program(
+            chunk_limit=getattr(step_cfg, "prefetch_chunk_limit", None))
+        program.validate(plan)
+    l_pad = pool_rows(cfg, n)
+
+    abstract = T.abstract_params(cfg)
+    pspecs = roundpipe_param_specs(cfg, abstract)
+    ospecs = opt_state_specs(pspecs, step_cfg.opt)
+    state_specs = {"params": pspecs, "opt": ospecs}
+    body = functools.partial(
+        roundpipe_async_forward_backward, cfg=cfg, plan=plan, n_workers=n,
+        l_pad=l_pad, steps=steps_per_call, rounds=rounds, opt_cfg=step_cfg.opt,
+        xent_chunk=step_cfg.xent_chunk, kv_chunk=step_cfg.kv_chunk,
+        ring_grad_dtype=step_cfg.accum_dtype, prefetch_program=program)
+
+    batch_abs = {}
+    if cfg.frontend:
+        batch_abs["embeds"] = jax.ShapeDtypeStruct(
+            (steps_per_call, global_batch, seq_len, cfg.d_model), jnp.bfloat16)
+    else:
+        batch_abs["tokens"] = jax.ShapeDtypeStruct(
+            (steps_per_call, global_batch, seq_len), jnp.int32)
+    batch_abs["labels"] = jax.ShapeDtypeStruct(
+        (steps_per_call, global_batch, seq_len), jnp.int32)
+    bspecs = jax.tree.map(
+        lambda leaf: P(None, AXIS, *([None] * (leaf.ndim - 2))), batch_abs)
+    # inside the manual region: (I, R, B_w, ...) — step and round axes
+    # replicated, per-round batch dim sharded over `model`
+    inner_bspecs = jax.tree.map(
+        lambda leaf: P(None, None, AXIS, *([None] * (leaf.ndim - 2))),
+        batch_abs)
+
+    def multi_step(state, batches):
+        # (I, G, ...) -> (I, R, G/R, ...): step i round r owns micro-batch
+        # groups r*N..(r+1)*N-1 of that step's global batch
+        batches = jax.tree.map(
+            lambda x: x.reshape(x.shape[0], rounds, x.shape[1] // rounds,
+                                *x.shape[2:]), batches)
+        f = shard_map(
+            body, mesh, axis_names={AXIS},
+            in_specs=(pspecs, ospecs, inner_bspecs, P(AXIS)),
+            out_specs=(pspecs, ospecs, P()),
+            check_vma=False)
+        new_params, new_opt, metrics = f(
+            state["params"], state["opt"], batches,
+            jnp.arange(n, dtype=jnp.int32))
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    state_shardings = jax.tree.map(
+        lambda s: NamedSharding(mesh, s), state_specs,
+        is_leaf=lambda x: isinstance(x, P))
+    batch_shardings = jax.tree.map(lambda s: NamedSharding(mesh, s), bspecs,
+                                   is_leaf=lambda x: isinstance(x, P))
+    step = jax.jit(multi_step,
                    in_shardings=(state_shardings, batch_shardings),
                    out_shardings=(state_shardings, None),
                    donate_argnums=(0,))

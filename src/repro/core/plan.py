@@ -258,25 +258,51 @@ class ExecutionPlan:
                 f"M = R*{self.n_workers}")
         return n_microbatches // self.n_workers
 
-    def tick_table(self, rounds: int = 1) -> tuple:
+    def tick_table(self, rounds: int = 1, iterations: int = 1) -> tuple:
         """The round-stitched injection order BOTH consumers follow.
 
-        Entry ``t`` (one per ring tick, ``R*S + N - 1`` total) is the
+        Entry ``t`` (one per ring tick, ``I*R*S + N - 1`` total) is the
         ``(round, slot)`` injected at worker 0 at tick ``t`` — consecutive
         rounds stitch back-to-back (``t -> divmod(t, S)``), so the
         ``N - 1``-tick drain (the trailing ``None`` entries) is paid once
-        per iteration rather than once per round.  The dispatch runtime
+        per table rather than once per round.  The dispatch runtime
         iterates exactly this table, reusing slot ``t % S``'s compiled
         :class:`ChunkUpload` tables every round; the round-robin schedule
         generator dispatches slots in the same stitched order (asserted in
         ``tests/test_multiround_plan.py``).
+
+        ``iterations > 1`` is the cross-step asynchronous-optimizer regime
+        (paper §4.3, DESIGN.md §6): optimizer steps chain back-to-back
+        exactly like rounds, so the ``round`` field is a GLOBAL round index
+        ``0 .. I*R-1`` (step ``T`` owns rounds ``T*R .. (T+1)*R - 1``) and
+        the single fill/drain is amortized over all ``I`` steps — valid
+        only under staleness-1 parameter reads, which is what
+        ``repro.core.consistency.verify_async_ticks`` certifies.
         """
         if rounds < 1:
             raise ValueError(f"rounds must be >= 1, got {rounds}")
+        if iterations < 1:
+            raise ValueError(f"iterations must be >= 1, got {iterations}")
         s = self.n_slots
-        live = rounds * s
+        live = iterations * rounds * s
         return tuple(divmod(t, s) if t < live else None
                      for t in range(live + self.n_workers - 1))
+
+    def validate_async(self, rounds: int = 1) -> None:
+        """Raise unless cross-step chaining (``tick_table(iterations > 1)``)
+        is feasible at ``rounds`` rounds per step: step ``T``'s first
+        injection (tick ``T*R*S``) must come strictly after step ``T-2``'s
+        gradients finish draining (tick ``(T-1)*R*S + N - 2``), i.e.
+        ``R*S >= N - 1`` — otherwise even a staleness-1 read would consume
+        parameters whose update is still waiting on in-flight gradients."""
+        rs = rounds * self.n_slots
+        if rs < self.n_workers - 1:
+            raise ValueError(
+                f"cross-step chaining infeasible: {rounds} round(s) x "
+                f"{self.n_slots} slots = {rs} live ticks per step, but the "
+                f"drain is {self.n_workers - 1} ticks — step T's injection "
+                f"would overtake step T-2's gradient drain.  Raise rounds "
+                f"to >= {-(-(self.n_workers - 1) // self.n_slots)}")
 
     def schedule(self, n_microbatches: int, *, round_size: int | None = None,
                  iterations: int = 1, g0: int = 0) -> Schedule:

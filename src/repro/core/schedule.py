@@ -279,14 +279,24 @@ def interleaved_1f1b_schedule(
 # Schedule sanity checks (used by tests and the dispatch runtime)
 # ---------------------------------------------------------------------------
 
-def dispatch_slot_order(schedule: Schedule, round_size: int) -> list:
+def dispatch_slot_order(schedule: Schedule, round_size: int,
+                        *, rounds_per_iteration: int | None = None) -> list:
     """The deduped ``(round, slot)`` sequence a roundpipe schedule
     dispatches, in task order — the bridge for asserting that the schedule
     generator, the simulator and the dispatch runtime all follow the SAME
-    round-stitched order (``ExecutionPlan.tick_table``'s live entries)."""
+    round-stitched order (``ExecutionPlan.tick_table``'s live entries).
+
+    ``rounds_per_iteration`` handles cross-step schedules
+    (``roundpipe_schedule(iterations > 1)``, whose micro-batch numbering
+    restarts every iteration): the round index becomes GLOBAL —
+    ``iteration * rounds_per_iteration + microbatch // round_size`` —
+    matching ``tick_table(rounds, iterations)``'s global round field."""
     out: list = []
     for t in schedule.tasks:
-        entry = (t.microbatch // round_size, t.stage)
+        r = t.microbatch // round_size
+        if rounds_per_iteration is not None:
+            r += t.iteration * rounds_per_iteration
+        entry = (r, t.stage)
         if not out or out[-1] != entry:
             out.append(entry)
     return out
@@ -310,3 +320,11 @@ def validate(schedule: Schedule) -> None:
 def theoretical_bubble_roundpipe(n: int, m: int, s: int) -> float:
     """Paper §3.3: N(N-1) / (M*S + N(N-1)) under uniform stage time."""
     return n * (n - 1) / (m * s + n * (n - 1))
+
+
+def theoretical_bubble_crossstep(n: int, rounds: int, s: int,
+                                 iterations: int) -> float:
+    """DESIGN.md §6: with the staleness-1 optimizer chaining I steps
+    back-to-back the single fill/drain amortizes over every step —
+    (N-1) / (I*R*S + N-1) under uniform slot time, -> 0 as I*R grows."""
+    return (n - 1) / (iterations * rounds * s + n - 1)

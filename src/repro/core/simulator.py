@@ -244,6 +244,16 @@ def simulate_plan(plan, n_microbatches: int | None = None, *,
     micro-batch group per worker per round, fill/drain paid once per
     step); the ``R = 1`` default is the legacy one-round step.
 
+    ``iterations > 1`` is the cross-step asynchronous-optimizer mode
+    (paper §4.3, DESIGN.md §6): optimizer steps chain back-to-back with no
+    inter-iteration dependency — the order ``plan.tick_table(R, I)``
+    stitches and the chained program of
+    ``dispatch.build_roundpipe_async_train_step`` executes under
+    staleness-1 parameter reads — so the reported ``bubble_ratio`` is the
+    executed cross-step bubble with ONE fill/drain amortized over all
+    ``I`` steps ((N-1)/(I*R*S + N-1) under uniform slot costs), strictly
+    below the per-step synchronous bubble.
+
     ``bandwidth`` (bytes per cost-model time-unit) switches on the
     two-resource model: each slot's ``plan.stage_bytes`` is charged against
     the device's transfer lane, either head-of-line (``transfer_mode=

@@ -114,6 +114,13 @@ def run_cell(arch: str, shape: str, multi_pod: bool, strategy: str,
                 meta["simulated_bubble"] = round(
                     simulate_plan(plan, m_micro,
                                   round_size=n_model).bubble_ratio, 4)
+                # the §4.3 cross-step regime this plan WOULD reach with the
+                # staleness-1 chained program (4 steps per chain) — a
+                # simulator projection only: the program lowered below is
+                # always the synchronous per-step one
+                meta["simulated_bubble_async4"] = round(
+                    simulate_plan(plan, m_micro, round_size=n_model,
+                                  iterations=4).bubble_ratio, 4)
             step, state_sh, batch_sh = build_train_step(
                 cfg, mesh, step_cfg, spec.global_batch, spec.seq_len)
             if strategy == "roundpipe":
@@ -181,7 +188,7 @@ def run_cell(arch: str, shape: str, multi_pod: bool, strategy: str,
     )
 
 
-def main() -> int:
+def build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch")
     ap.add_argument("--shape")
@@ -192,7 +199,11 @@ def main() -> int:
     ap.add_argument("--all", action="store_true",
                     help="run every (arch x shape x mesh) cell, one subprocess each")
     ap.add_argument("--skip-existing", action="store_true")
-    args = ap.parse_args()
+    return ap
+
+
+def main() -> int:
+    args = build_parser().parse_args()
     RESULTS.mkdir(parents=True, exist_ok=True)
 
     if args.all:

@@ -28,7 +28,14 @@ class StepConfig:
     strategy: str = "gspmd"          # gspmd | roundpipe
     grad_accum: int | str = "auto"   # microbatch count ('auto' -> 1/chip batch)
     accum_dtype: Any = jnp.float32
-    async_optimizer: bool = True     # paper's staleness-1 update
+    # paper's staleness-1 update (§4.3).  gspmd: realized in-step via
+    # AsyncOptState (pending-grad data independence).  roundpipe: realized
+    # by the CROSS-STEP chained program — which consumes one stacked batch
+    # per K steps and therefore has its own builder,
+    # ``core.dispatch.build_roundpipe_async_train_step`` (build_train_step
+    # always returns the per-step synchronous roundpipe program; the
+    # launcher routes --async-opt to the chained builder).
+    async_optimizer: bool = True
     offload_boundaries: bool = False  # host-offload remat boundaries (TPU)
     sequence_parallel: bool = True
     pure_dp: bool = False            # small models: batch over EVERY axis,
@@ -140,6 +147,11 @@ def build_train_step(cfg: ModelConfig, mesh, step_cfg: StepConfig,
 
     train_step(state, batch) -> (state, metrics); state donated.
     state = {params, opt|async} with opt per ``step_cfg.opt.mode``.
+
+    Strategy "roundpipe" always returns the per-step SYNCHRONOUS program;
+    the staleness-1 async roundpipe regime chains K steps per call and so
+    lives behind ``repro.core.dispatch.build_roundpipe_async_train_step``
+    (see ``StepConfig.async_optimizer``).
     """
     if step_cfg.strategy == "roundpipe":
         from repro.core.dispatch import build_roundpipe_train_step

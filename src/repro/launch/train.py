@@ -55,7 +55,19 @@ def build_parser() -> argparse.ArgumentParser:
                     dest="ckpt_every",
                     help="save an atomic checkpoint every K steps; startup "
                          "always resumes from the newest one in --ckpt-dir")
-    ap.add_argument("--async-opt", action="store_true")
+    ap.add_argument("--async-opt", action="store_true",
+                    help="staleness-1 host optimizer (paper §4.3): under "
+                         "gspmd the update of the PENDING grads overlaps the "
+                         "current step inside one program; under roundpipe "
+                         "--async-steps optimizer steps chain back-to-back "
+                         "in one ring program (fill/drain paid once per "
+                         "chain).  Errors for strategies that cannot "
+                         "support it and for --lora-rank")
+    ap.add_argument("--async-steps", type=int, default=4,
+                    help="roundpipe + --async-opt only: optimizer steps "
+                         "chained per program call (the I of the "
+                         "(N-1)/(I*R*S+N-1) cross-step bubble); must "
+                         "divide --steps")
     ap.add_argument("--log-every", type=int, default=10)
     return ap
 
@@ -103,6 +115,28 @@ def run_training(args) -> dict:
     microbatches = args.microbatches or None
     if microbatches is not None and args.strategy != "roundpipe":
         raise SystemExit("--microbatches requires --strategy roundpipe")
+    # --async-opt routing (no more silent drop): every strategy either
+    # supports the staleness-1 update or refuses it loudly
+    async_rp = args.async_opt and args.strategy == "roundpipe"
+    if args.async_opt and args.strategy not in ("gspmd", "roundpipe"):
+        raise SystemExit(
+            f"--async-opt is not supported under --strategy {args.strategy}: "
+            f"the staleness-1 update needs either the gspmd in-step pending-"
+            f"grad path or the roundpipe cross-step chained program")
+    if async_rp and lora_cfg is not None:
+        raise SystemExit(
+            "--async-opt cannot combine with --lora-rank: the chained "
+            "program's in-program optimizer updates the dense pool, not "
+            "the frozen-base adapter ring — drop one of the two flags")
+    if async_rp and args.async_steps < 1:
+        raise SystemExit("--async-steps must be >= 1")
+    if async_rp and args.steps % args.async_steps:
+        lo = args.steps - args.steps % args.async_steps or args.async_steps
+        hi = (args.steps // args.async_steps + 1) * args.async_steps
+        raise SystemExit(
+            f"--steps {args.steps} must be a multiple of --async-steps "
+            f"{args.async_steps}: the chained program executes whole "
+            f"chains — choose e.g. {lo} or {hi}")
     plan = None
     if args.strategy == "roundpipe":
         # compile the plan up front: the train step executes this exact
@@ -122,6 +156,12 @@ def run_training(args) -> dict:
         print(f"simulated bubble ratio ({r_sim} round"
               f"{'s' if r_sim != 1 else ''}, M={m_sim}): "
               f"{sim.bubble_ratio:.4f}")
+        if async_rp:
+            sim_async = simulate_plan(plan, m_sim, round_size=n_model,
+                                      iterations=args.async_steps)
+            print(f"simulated cross-step bubble "
+                  f"({args.async_steps} chained steps, staleness-1): "
+                  f"{sim_async.bubble_ratio:.4f}")
         if lora_cfg is not None:
             full = plan_from_config(cfg, n_model, partition=plan.partition)
             up = sum(plan.stage_bytes) * r_sim
@@ -131,7 +171,7 @@ def run_training(args) -> dict:
                   f"grad download {down / 2**20:.3f} MiB/step "
                   f"(full fine-tune would download {full_down / 2**20:.1f} MiB)")
     step_cfg = StepConfig(strategy=args.strategy, grad_accum=1,
-                          async_optimizer=args.async_opt and args.strategy == "gspmd",
+                          async_optimizer=args.async_opt,
                           sequence_parallel=n_model > 1,
                           kv_chunk=min(1024, args.seq),
                           xent_chunk=min(256, args.seq),
@@ -147,8 +187,17 @@ def run_training(args) -> dict:
               f"{args.ckpt_dir}")
 
     with mesh:
-        step, state_sh, _ = build_train_step(cfg, mesh, step_cfg, args.batch,
-                                             args.seq)
+        if async_rp:
+            # the tentpole: K steps chained in ONE ring program — step T+1's
+            # injection streams while step T's grads drain into the
+            # in-program staleness-1 optimizer (paper §4.3, DESIGN.md §6)
+            from repro.core.dispatch import build_roundpipe_async_train_step
+            step, state_sh, _, plan = build_roundpipe_async_train_step(
+                cfg, mesh, step_cfg, args.batch, args.seq,
+                steps_per_call=args.async_steps, plan=plan)
+        else:
+            step, state_sh, _ = build_train_step(cfg, mesh, step_cfg,
+                                                 args.batch, args.seq)
         if args.strategy == "roundpipe":
             from repro.core.dispatch import init_roundpipe_state
             init = lambda: jax.device_put(
@@ -163,19 +212,92 @@ def run_training(args) -> dict:
 
         mgr = CheckpointManager(args.ckpt_dir, save_every=args.ckpt_every)
         losses = []
+        steps_per_call = args.async_steps if async_rp else 1
+
+        if async_rp:
+            import numpy as np
+
+            from repro.checkpoint import save_checkpoint
+
+            class _ChainedBatches:
+                """Stack --async-steps consecutive global batches along a
+                leading step axis — one chained-program call each."""
+
+                def batch(self, call):
+                    bs = [data.batch(call * steps_per_call + j)
+                          for j in range(steps_per_call)]
+                    return jax.tree.map(lambda *xs: np.stack(xs), *bs)
+
+            class _OptStepCkpt:
+                """Keep the checkpoint manifest counter in OPTIMIZER-step
+                units (the sync convention) while the loop counts chained
+                program calls: call c's manifest step is its last completed
+                optimizer step (c+1)*K - 1, so sync and async runs share a
+                --ckpt-dir without mis-positioning the data stream."""
+
+                def restore_or_init(self, init_fn, like, shardings=None):
+                    state, start_opt = mgr.restore_or_init(init_fn, like,
+                                                           shardings)
+                    calls, rem = divmod(start_opt, steps_per_call)
+                    if rem:
+                        # flooring to a chain boundary would RE-APPLY the
+                        # trailing rem updates (double-training, not a
+                        # deterministic replay) — refuse, like the --steps
+                        # multiple check above.  Synchronous runs save at
+                        # manifest steps ≡ 0 (mod --ckpt-every), which a
+                        # chain can never start from: the interchange is
+                        # one-directional (async checkpoints resume
+                        # synchronously; the reverse needs an aligned
+                        # manifest)
+                        raise SystemExit(
+                            f"checkpoint in {args.ckpt_dir} holds "
+                            f"{start_opt} optimizer steps, not a multiple "
+                            f"of --async-steps {steps_per_call}: resuming "
+                            f"the chained program here would double-apply "
+                            f"{rem} update(s).  Resume synchronously (drop "
+                            f"--async-opt) — sync-written checkpoints do "
+                            f"not land on chain boundaries")
+                    return state, calls
+
+                def maybe_save(self, call, state) -> bool:
+                    every = max(1, args.ckpt_every // steps_per_call)
+                    if call % every:
+                        return False
+                    save_checkpoint(args.ckpt_dir,
+                                    (call + 1) * steps_per_call - 1, state,
+                                    keep=mgr.keep)
+                    return True
+
+            loop_mgr = _OptStepCkpt()
+            loop_data = _ChainedBatches()
+            n_calls = args.steps // steps_per_call
+        else:
+            loop_mgr = mgr
+            loop_data = data
+            n_calls = args.steps
 
         def metrics_cb(s, m, dt):
-            losses.append(float(m["loss"]))
+            import numpy as np
+            ls = np.asarray(m["loss"]).reshape(-1)
+            losses.extend(float(x) for x in ls)
             if s % args.log_every == 0:
-                tps = args.batch * args.seq / dt
-                print(f"step {s:5d} loss {float(m['loss']):.4f} "
-                      f"gnorm {float(m.get('grad_norm', 0)):.3f} "
-                      f"{dt * 1e3:7.1f} ms/step {tps:9.0f} tok/s", flush=True)
+                n_sub = ls.size
+                tps = n_sub * args.batch * args.seq / dt
+                gn = np.asarray(m.get("grad_norm", 0)).reshape(-1)[-1]
+                # label the LAST optimizer step of the chain — the one whose
+                # loss is printed — so async and sync loss curves line up
+                step_no = s * n_sub + n_sub - 1
+                print(f"step {step_no:5d} loss {float(ls[-1]):.4f} "
+                      f"gnorm {float(gn):.3f} "
+                      f"{dt * 1e3 / n_sub:7.1f} ms/step {tps:9.0f} tok/s",
+                      flush=True)
 
-        loop = FaultTolerantLoop(step, mgr, data, step_timeout_s=600.0)
+        loop = FaultTolerantLoop(step, loop_mgr, loop_data,
+                                 step_timeout_s=600.0)
         t0 = time.time()
-        state, final = loop.run(init, like, args.steps, shardings=state_sh,
+        state, final = loop.run(init, like, n_calls, shardings=state_sh,
                                 metrics_cb=metrics_cb)
+        final *= steps_per_call
         dt = time.time() - t0
     if losses:
         print(f"done: {final} steps in {dt:.1f}s; "

@@ -110,13 +110,18 @@ def global_grad_norm(grads):
                         for g in jax.tree.leaves(grads)))
 
 
-def apply_updates(opt_state, grads, cfg: OptConfig, param_like=None):
+def apply_updates(opt_state, grads, cfg: OptConfig, param_like=None,
+                  grad_norm=None):
     """Returns (new_params, new_opt_state, metrics).
 
     ``param_like`` (a params pytree) fixes the per-leaf compute dtype of the
-    returned params; defaults to bfloat16 everywhere."""
+    returned params; defaults to bfloat16 everywhere.  ``grad_norm``
+    overrides the clipping norm — required inside ``shard_map`` regions
+    where ``grads`` leaves are local shards and the GLOBAL norm needs a
+    ``psum`` the caller must supply (the dispatch runtime's in-program
+    async optimizer does exactly this)."""
     step = opt_state["step"] + 1
-    gnorm = global_grad_norm(grads)
+    gnorm = global_grad_norm(grads) if grad_norm is None else grad_norm
     scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-12)) \
         if cfg.grad_clip else 1.0
     t = step.astype(jnp.float32)

@@ -63,3 +63,99 @@ def flush(params, state: AsyncOptState, cfg: OptConfig):
         state.has_pending, do_update, skip, None)
     zeros = jax.tree.map(lambda g: jnp.zeros_like(g), state.pending)
     return new_params, AsyncOptState(new_opt, zeros, jnp.bool_(False)), metrics
+
+
+# ---------------------------------------------------------------------------
+# Host-side optimizer worker (the threaded §4.3 realization)
+# ---------------------------------------------------------------------------
+
+def split_host_layers(params):
+    """Split a RoundPipe params tree into the per-"layer" host units the
+    §4.3 event protocol synchronizes on: one unit per stacked pool row of
+    ``params["layers"]`` plus one trailing unit holding every replicated
+    leaf (embed / LM head / final norm).  Returns ``(units, unsplit)``
+    where ``unsplit(units) -> tree`` restacks; gradients (same tree
+    structure in the dense regime) split with the same function.
+    """
+    pool = params["layers"]
+    n_rows = jax.tree.leaves(pool)[0].shape[0]
+    units = [jax.tree.map(lambda a, l=l: a[l], pool) for l in range(n_rows)]
+    units.append({k: v for k, v in params.items() if k != "layers"})
+
+    def unsplit(us):
+        pool_rows = us[:n_rows]
+        tree = dict(us[n_rows])
+        tree["layers"] = jax.tree.map(
+            lambda *xs: jnp.stack(xs), *pool_rows)
+        return tree
+
+    return units, unsplit
+
+
+class HostAsyncRoundPipe:
+    """Staleness-1 training with a HOST-side optimizer worker around a
+    compiled RoundPipe gradient program (paper §4.3's threaded
+    realization, DESIGN.md §6).
+
+    ``grads_fn(params, batch) -> (grads, loss, tokens)`` is the dispatch
+    runtime's compiled program (``core.dispatch.build_roundpipe_grads_fn``
+    — the real upload/download path).  A device thread runs it per step
+    against the stale master copy; an optimizer thread applies
+    :func:`repro.optim.adam.apply_updates` to the full-precision copy.
+    The two synchronize through
+    :class:`repro.core.consistency.ConsistencyProtocol`'s five PER-LAYER
+    ordering constraints (one protocol "layer" per pool row + one for the
+    replicated leaves, via :func:`split_host_layers`) — no global barrier,
+    exactly the paper's Fig. 8b — so the final weights match
+    ``reference_staleness1``.
+    """
+
+    def __init__(self, grads_fn, params, cfg: OptConfig, batches, *,
+                 mesh=None):
+        from contextlib import nullcontext
+
+        from repro.core.consistency import AsyncTrainer
+
+        self.losses: list = []
+        # the master/optimizer copies live HOST-resident (the paper's §4.3
+        # placement): every tree crossing the protocol is pulled to host
+        # numpy, so the device worker's upload genuinely starts from host
+        # — and the jitted grads_fn sees uncommitted inputs every
+        # iteration (device-committed, mesh-sharded leaves would change
+        # the jit cache key and recompile from iteration 2 on)
+        host = jax.device_get
+        units, self._unsplit = split_host_layers(host(params))
+        self._opt = init_opt_state(host(params), cfg)
+        self._cfg = cfg
+        self._params_like = params
+        # worker threads do NOT inherit the main thread's ambient mesh
+        # context — and the jit cache keys on it — so re-enter it per call
+        ctx = (lambda: mesh) if mesh is not None else nullcontext
+
+        def device_fn(weight_units, t):
+            p = self._unsplit(weight_units)
+            with ctx():
+                grads, loss, _ = grads_fn(p, batches[t])
+                grads = host(grads)          # the §4.3 download direction
+            self.losses.append(float(loss))
+            gu, _ = split_host_layers(grads)
+            return gu
+
+        def optimizer_fn(opt_units, grad_units, t):
+            grads = self._unsplit(grad_units)
+            with ctx():
+                new_params, self._opt, _ = apply_updates(
+                    self._opt, grads, cfg, param_like=self._params_like)
+                new_params = host(new_params)
+                self._opt = host(self._opt)
+            nu, _ = split_host_layers(new_params)
+            return nu
+
+        self._trainer = AsyncTrainer(len(units), device_fn, optimizer_fn,
+                                     units)
+
+    def train(self, n_steps: int, timeout: float = 600.0):
+        """Run ``n_steps`` staleness-1 iterations; returns the final params
+        tree (every update applied — the flush)."""
+        final_units = self._trainer.train(n_steps, timeout=timeout)
+        return self._unsplit(final_units)

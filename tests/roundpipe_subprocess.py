@@ -27,6 +27,16 @@ mode:
              BIT-identical to the legacy single-round path
   rounds-lora — the same R-sweep with a frozen base: R-round accumulated
              adapter grads vs the merged-dense full-batch reference
+  async    — cross-step staleness-1 chained program (paper §4.3) on the
+             uneven 7-layer/4-worker auto plan: I optimizer steps executed
+             back-to-back in ONE ring program (fill/drain paid once per
+             chain, step T+1 injecting while step T drains into the
+             in-program host optimizer) must per-leaf allclose
+             reference_staleness1; with overlap disabled the multi-step
+             driver must be BIT-identical to looping PR 4's synchronous
+             step; and the threaded HostAsyncRoundPipe worker (the five
+             per-layer ConsistencyProtocol constraints around the real
+             dispatch grads_fn) must land on the same trajectory
 """
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
@@ -54,7 +64,7 @@ LORA_CFG = None  # set in main() for mode == "lora"
 
 
 def make_plan(mode: str, cfg, n_workers: int):
-    if mode in ("prefetch", "rounds"):
+    if mode in ("prefetch", "rounds", "async"):
         return plan_from_config(cfg, n_workers)
     if mode in ("lora", "rounds-lora"):
         return plan_from_config(cfg, n_workers, lora=LORA_CFG)
@@ -104,6 +114,9 @@ def main():
     b, s = 8, 16
     if mode in ("rounds", "rounds-lora"):
         run_rounds(cfg, mesh, plan, params, s, lora=mode == "rounds-lora")
+        return
+    if mode == "async":
+        run_async(cfg, mesh, plan, params, b, s)
         return
     if cfg.frontend:
         batch = {"embeds": jax.random.normal(key, (b, s, cfg.d_model), jnp.float32)}
@@ -310,6 +323,184 @@ def run_rounds(cfg, mesh, plan, params, s, *, lora=False):
                 print("MISMATCH", f"R={r}", jax.tree_util.keystr(ka), err)
         print(f"R={r}: worst rel grad err: {worst}")
         assert worst < 5e-3, (r, worst)
+    print("ROUNDPIPE_DISPATCH_OK")
+
+
+def run_async(cfg, mesh, plan, params, b, s):
+    """Cross-step staleness-1 equivalence (ISSUE 5 tentpole).
+
+    For (rounds, steps, prefetch) in {(1, 3, off), (2, 2, on)}: the chained
+    ring program of ``build_roundpipe_async_train_step`` — I optimizer
+    steps in ``I*R*S + N - 1`` ticks, in-program updates at each step's
+    deposit-complete tick — must land per-leaf allclose on
+    ``reference_staleness1``'s final weights and per-step losses, and must
+    be DISTINGUISHABLE from the synchronous (staleness-0) trajectory.
+    ``overlap=False`` must be bit-identical to looping the PR-4
+    synchronous step.  The threaded ``HostAsyncRoundPipe`` worker (the
+    five per-layer §4.3 constraints around the real dispatch grads_fn)
+    must reproduce the same staleness-1 trajectory.
+    """
+    import functools
+
+    from repro.core.consistency import reference_staleness1
+    from repro.core.dispatch import (build_roundpipe_async_train_step,
+                                     build_roundpipe_train_step, pad_pool)
+    from repro.core.schedule import dispatch_slot_order
+    from repro.core.schedule import validate as validate_schedule
+    from repro.launch.steps import StepConfig
+    from repro.optim import OptConfig, init_opt_state
+    from repro.optim.adam import apply_updates
+    from repro.optim.async_opt import HostAsyncRoundPipe
+
+    n = plan.n_workers
+    ocfg = OptConfig(lr=1e-2)            # big enough that staleness shows
+    key = jax.random.PRNGKey(7)
+
+    def fresh_state(sh):
+        """A donation-safe train state: the steps donate their input, so
+        every run gets its own copy of the padded params/opt buffers."""
+        padded = jax.tree.map(lambda x: jnp.array(x, copy=True),
+                              pad_pool(params, cfg, n))
+        return jax.device_put({"params": padded,
+                               "opt": init_opt_state(padded, ocfg)}, sh)
+
+    def leaves(tree):
+        return jax.tree_util.tree_flatten_with_path(tree)[0]
+
+    def worst_rel(a_tree, b_tree):
+        worst = 0.0
+        for (ka, va), (kb, vb) in zip(leaves(a_tree), leaves(b_tree)):
+            assert ka == kb
+            av = np.asarray(va, np.float32)
+            bv = np.asarray(vb, np.float32)
+            worst = max(worst,
+                        np.abs(av - bv).max() / (np.abs(bv).max() + 1e-6))
+        return worst
+
+    # shallow plans (sf < N-1) overlap step k+1's fused work with step k's
+    # drain — the regime the parity-paired accumulators exist for; the
+    # full extras (overlap=False bit-identity, threaded worker) only run
+    # on the deep plan to bound compile time
+    shallow = plan.n_fwd < n - 1
+    configs = ((1, 3, True),) if shallow else ((1, 3, False), (2, 2, True))
+    for rounds, steps, prefetch in configs:
+        m = rounds * n
+        kb = jax.random.fold_in(key, rounds)
+        batches = {
+            "tokens": jax.random.randint(kb, (steps, b, s), 0,
+                                         cfg.vocab_size),
+            "labels": jax.random.randint(jax.random.fold_in(kb, 1),
+                                         (steps, b, s), 0, cfg.vocab_size)}
+
+        # the chained order IS the cross-step tick table, and the schedule
+        # generator dispatches it identically (iterations > 1, g0 advancing)
+        table = plan.tick_table(rounds, steps)
+        assert len(table) == steps * rounds * plan.n_slots + n - 1
+        sched = plan.schedule(m, round_size=n, iterations=steps)
+        validate_schedule(sched)
+        assert dispatch_slot_order(sched, n, rounds_per_iteration=rounds) \
+            == [e for e in table if e is not None], (rounds, steps)
+
+        # ---- staleness-1 oracle (the whole net as one protocol layer) ------
+        def batch_of(t):
+            return jax.tree.map(lambda x: x[t], batches)
+
+        loss_of = functools.partial(T.loss_fn, cfg=cfg, remat=False,
+                                    xent_chunk=8, kv_chunk=8)
+        ref_losses = []
+        opt_cell = {"opt": init_opt_state(params, ocfg)}
+
+        def device_fn(weights, t):
+            loss, grads = jax.value_and_grad(
+                lambda p: loss_of(p, batch_of(t)))(weights[0])
+            ref_losses.append(float(loss))
+            return [grads]
+
+        def optimizer_fn(opt_w, staged, t):
+            new_p, opt_cell["opt"], _ = apply_updates(
+                opt_cell["opt"], staged[0], ocfg, param_like=params)
+            return [new_p]
+
+        ref_final = reference_staleness1(1, device_fn, optimizer_fn,
+                                         [params], steps)[0]
+
+        # staleness-0 (synchronous) oracle, for distinguishability
+        sync_losses = []
+        p_sync, opt_sync = params, init_opt_state(params, ocfg)
+        for t in range(steps):
+            loss, grads = jax.value_and_grad(
+                lambda p: loss_of(p, batch_of(t)))(p_sync)
+            sync_losses.append(float(loss))
+            p_sync, opt_sync, _ = apply_updates(opt_sync, grads, ocfg,
+                                                param_like=params)
+
+        # ---- the chained program -------------------------------------------
+        step_cfg = StepConfig(strategy="roundpipe", grad_accum=1,
+                              partition=plan, n_microbatches=m,
+                              prefetch=prefetch, kv_chunk=8, xent_chunk=8,
+                              opt=ocfg)
+        multi, state_sh, _, _ = build_roundpipe_async_train_step(
+            cfg, mesh, step_cfg, b, s, steps_per_call=steps, plan=plan)
+        state0 = fresh_state(state_sh)
+        with mesh:
+            state1, metrics = multi(state0, batches)
+        got = {k: (jax.tree.map(lambda a: a[:cfg.n_layers], v)
+                   if k == "layers" else v)
+               for k, v in state1["params"].items()}
+
+        err_s1 = worst_rel(got, ref_final)
+        err_s0 = worst_rel(got, p_sync)
+        sep = worst_rel(ref_final, p_sync)
+        print(f"R={rounds} I={steps} prefetch={prefetch}: "
+              f"err vs staleness-1 {err_s1:.2e}, vs staleness-0 {err_s0:.2e} "
+              f"(oracle separation {sep:.2e})")
+        np.testing.assert_allclose(np.asarray(metrics["loss"]),
+                                   np.asarray(ref_losses), rtol=1e-4)
+        assert err_s1 < 5e-3, err_s1
+        assert sep > 10 * max(err_s1, 1e-9), (sep, err_s1)
+        assert err_s0 > 5 * err_s1, (err_s0, err_s1)
+        assert int(metrics["step"]) == steps
+
+        # ---- overlap disabled == PR-4 synchronous loop, bitwise -------------
+        if rounds == 1 and not shallow:
+            nool, state_sh2, _, _ = build_roundpipe_async_train_step(
+                cfg, mesh, step_cfg, b, s, steps_per_call=steps, plan=plan,
+                overlap=False)
+            s_a = fresh_state(state_sh2)
+            with mesh:
+                s_a, m_a = nool(s_a, batches)
+            sync_step, state_sh3, _, _ = build_roundpipe_train_step(
+                cfg, mesh, step_cfg, b, s, plan=plan)
+            s_b = fresh_state(state_sh3)
+            with mesh:
+                for t in range(steps):
+                    s_b, _ = sync_step(s_b, batch_of(t))
+            for (ka, va), (kb_, vb) in zip(leaves(s_a["params"]),
+                                           leaves(s_b["params"])):
+                assert ka == kb_
+                np.testing.assert_array_equal(
+                    np.asarray(va), np.asarray(vb),
+                    err_msg=f"overlap=False not bit-identical to the "
+                            f"synchronous loop at {jax.tree_util.keystr(ka)}")
+            print("overlap=False bit-identical to the synchronous PR-4 loop")
+
+        # ---- threaded host worker: the five per-layer constraints ----------
+        if rounds == 1 and not shallow:
+            from repro.core.dispatch import build_roundpipe_grads_fn
+            grads_fn = build_roundpipe_grads_fn(cfg, mesh, plan, xent_chunk=8,
+                                                kv_chunk=8)
+            with mesh:
+                jfn = jax.jit(grads_fn)
+                jfn(params, batch_of(0))     # compile on the main thread
+            host = HostAsyncRoundPipe(
+                lambda p, bt: jfn(p, bt), params, ocfg,
+                [batch_of(t) for t in range(steps)], mesh=mesh)
+            host_final = host.train(steps)
+            err_host = worst_rel(host_final, ref_final)
+            print(f"threaded host worker err vs staleness-1: {err_host:.2e}")
+            assert err_host < 5e-3, err_host
+            np.testing.assert_allclose(np.asarray(host.losses),
+                                       np.asarray(ref_losses), rtol=1e-4)
     print("ROUNDPIPE_DISPATCH_OK")
 
 

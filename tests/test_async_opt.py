@@ -1,0 +1,155 @@
+"""Direct fast tests for the staleness-1 optimizer pieces (ISSUE 5):
+``optim/async_opt.py``'s jit realization (``async_apply`` do_update/skip
+branches, ``flush``) and the host-side split helpers behind the threaded
+worker.  The cross-step chained DISPATCH realization is proven by the slow
+subprocess suite (``roundpipe_subprocess.py async``); these cover the
+state machine itself.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim import OptConfig, apply_updates, async_apply, init_async
+from repro.optim.adam import init_opt_state
+from repro.optim.async_opt import flush, split_host_layers
+
+CFG = OptConfig(lr=0.1, b1=0.5, b2=0.9, grad_clip=0.0)
+
+
+def params0():
+    return {"w": jnp.arange(4, dtype=jnp.float32) + 1.0,
+            "b": jnp.ones((2,), jnp.float32)}
+
+
+def grads_at(t):
+    return {"w": jnp.full((4,), 0.1 * (t + 1), jnp.float32),
+            "b": jnp.full((2,), -0.2 * (t + 1), jnp.float32)}
+
+
+class TestAsyncApply:
+    def test_first_call_skips_update(self):
+        """No pending grads yet: params pass through untouched, metrics
+        report a zero grad norm and an unadvanced step counter."""
+        p = params0()
+        state = init_async(p, CFG)
+        new_p, new_state, m = async_apply(p, state, grads_at(0), CFG)
+        for a, b in zip(jax.tree.leaves(new_p), jax.tree.leaves(p)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert float(m["grad_norm"]) == 0.0
+        assert int(m["step"]) == 0
+        assert bool(new_state.has_pending)
+
+    def test_second_call_applies_pending(self):
+        """Call T applies call T-1's grads: the result equals a direct
+        apply_updates with those grads (same opt state, bf16 stash cast)."""
+        p = params0()
+        state = init_async(p, CFG)
+        p1, state, _ = async_apply(p, state, grads_at(0), CFG)
+        p2, state, m = async_apply(p1, state, grads_at(1), CFG)
+        g0_bf16 = jax.tree.map(lambda g: g.astype(jnp.bfloat16).astype(g.dtype),
+                               grads_at(0))
+        want, _, _ = apply_updates(init_opt_state(p, CFG), g0_bf16, CFG,
+                                   param_like=p)
+        for a, b in zip(jax.tree.leaves(p2), jax.tree.leaves(want)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-6)
+        assert int(m["step"]) == 1
+
+    def test_flush_drains_pending(self):
+        """flush applies the stashed grads and resets has_pending; flushing
+        an empty state is a no-op."""
+        p = params0()
+        state = init_async(p, CFG)
+        p1, state, _ = async_apply(p, state, grads_at(0), CFG)
+        p2, state, m = flush(p1, state, CFG)
+        assert int(m["step"]) == 1
+        assert not bool(state.has_pending)
+        for leaf in jax.tree.leaves(state.pending):
+            assert float(jnp.abs(leaf).max()) == 0.0
+        # a second flush has nothing to drain
+        p3, state, m2 = flush(p2, state, CFG)
+        assert int(m2["step"]) == 1
+        for a, b in zip(jax.tree.leaves(p3), jax.tree.leaves(p2)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_trajectory_matches_staleness1_oracle(self):
+        """N async_apply calls + flush == reference_staleness1 with the same
+        Adam (grads stashed in fp32-preserving magnitudes)."""
+        from repro.core.consistency import reference_staleness1
+
+        p = params0()
+        n_steps = 5
+        gs = [grads_at(t) for t in range(n_steps)]
+        # oracle: full-precision pending; quantize grads to bf16 up front so
+        # both sides consume identical stashes
+        gs = [jax.tree.map(lambda g: g.astype(jnp.bfloat16).astype(jnp.float32),
+                           g) for g in gs]
+        cell = {"opt": init_opt_state(p, CFG)}
+
+        def device_fn(weights, t):
+            return [gs[t]]
+
+        def optimizer_fn(opt_w, staged, t):
+            new_p, cell["opt"], _ = apply_updates(cell["opt"], staged[0], CFG,
+                                                  param_like=p)
+            return [new_p]
+
+        want = reference_staleness1(1, device_fn, optimizer_fn, [p],
+                                    n_steps)[0]
+        state = init_async(p, CFG)
+        cur = p
+        for t in range(n_steps):
+            cur, state, _ = async_apply(cur, state, gs[t], CFG)
+        cur, state, _ = flush(cur, state, CFG)
+        for a, b in zip(jax.tree.leaves(cur), jax.tree.leaves(want)):
+            np.testing.assert_allclose(np.asarray(a, np.float32),
+                                       np.asarray(b, np.float32), rtol=1e-2)
+
+
+class TestSplitHostLayers:
+    """The per-layer protocol units the threaded host worker syncs on."""
+
+    def tree(self):
+        return {"embed": jnp.ones((5, 3)),
+                "layers": {"attn": jnp.arange(24, dtype=jnp.float32
+                                              ).reshape(4, 2, 3),
+                           "mlp": jnp.ones((4, 3))},
+                "final_norm": {"scale": jnp.ones((3,))}}
+
+    def test_roundtrip_identity(self):
+        t = self.tree()
+        units, unsplit = split_host_layers(t)
+        assert len(units) == 4 + 1          # one per pool row + replicated
+        back = unsplit(units)
+        for a, b in zip(jax.tree.leaves(back), jax.tree.leaves(t)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_units_are_per_row(self):
+        t = self.tree()
+        units, _ = split_host_layers(t)
+        np.testing.assert_array_equal(np.asarray(units[2]["attn"]),
+                                      np.asarray(t["layers"]["attn"][2]))
+        assert "embed" in units[-1] and "layers" not in units[-1]
+
+
+class TestApplyUpdatesGradNormOverride:
+    def test_supplied_norm_controls_clipping(self):
+        """grad_norm= overrides the internally computed clip norm — the
+        hook the in-program sharded optimizer uses to psum a global norm."""
+        cfg = OptConfig(lr=0.1, grad_clip=1.0)
+        p = params0()
+        g = jax.tree.map(lambda x: jnp.full_like(x, 100.0), p)
+        _, _, m_auto = apply_updates(init_opt_state(p, cfg), g, cfg,
+                                     param_like=p)
+        big = jnp.float32(1e6)
+        p_ovr, _, m_ovr = apply_updates(init_opt_state(p, cfg), g, cfg,
+                                        param_like=p, grad_norm=big)
+        assert float(m_ovr["grad_norm"]) == pytest.approx(1e6)
+        assert float(m_auto["grad_norm"]) != float(m_ovr["grad_norm"])
+        # a huge claimed norm clips harder than the true norm would
+        p_auto, _, _ = apply_updates(init_opt_state(p, cfg), g, cfg,
+                                     param_like=p)
+        d_ovr = float(jnp.abs(p_ovr["w"] - p["w"]).max())
+        d_auto = float(jnp.abs(p_auto["w"] - p["w"]).max())
+        assert d_ovr < d_auto

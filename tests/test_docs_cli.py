@@ -1,0 +1,64 @@
+"""Docs stay honest (ISSUE 5 satellites): the flag set documented in
+``docs/cli.md`` must equal each launcher's argparse flag set, and every
+relative markdown link in the user-facing docs must resolve.
+
+These run without jax — ``build_parser`` in both launchers imports only
+the standard library — so CI's docs job can run them on a bare python.
+"""
+import re
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parents[1]
+CLI_DOC = REPO / "docs" / "cli.md"
+
+
+def argparse_flags(parser):
+    """Every long option string the parser accepts (aliases included),
+    minus argparse's built-in --help."""
+    flags = set()
+    for action in parser._actions:
+        flags.update(o for o in action.option_strings if o.startswith("--"))
+    flags.discard("--help")
+    return flags
+
+
+def documented_flags(section: str):
+    """--flags named in backticks within one '## <tool>' doc section."""
+    text = CLI_DOC.read_text()
+    m = re.search(rf"^## {re.escape(section)}$(.*?)(?=^## |\Z)", text,
+                  re.M | re.S)
+    assert m, f"docs/cli.md has no '## {section}' section"
+    return set(re.findall(r"`(--[a-z][a-z0-9-]*)`", m.group(1)))
+
+
+class TestFlagSync:
+    def test_train_flags_match_docs(self):
+        from repro.launch.train import build_parser
+
+        want = argparse_flags(build_parser())
+        got = documented_flags("repro.launch.train")
+        assert got == want, (
+            f"docs/cli.md train section out of sync: "
+            f"undocumented={sorted(want - got)} stale={sorted(got - want)}")
+
+    def test_dryrun_flags_match_docs(self):
+        from repro.launch.dryrun import build_parser
+
+        want = argparse_flags(build_parser())
+        got = documented_flags("repro.launch.dryrun")
+        assert got == want, (
+            f"docs/cli.md dryrun section out of sync: "
+            f"undocumented={sorted(want - got)} stale={sorted(got - want)}")
+
+
+class TestRelativeLinks:
+    def test_all_relative_links_resolve(self):
+        """Same check the CI docs job runs via scripts/check_links.py."""
+        import importlib.util
+
+        spec = importlib.util.spec_from_file_location(
+            "check_links", REPO / "scripts" / "check_links.py")
+        mod = importlib.util.module_from_spec(spec)
+        spec.loader.exec_module(mod)
+        problems = mod.check_repo(REPO)
+        assert not problems, "\n".join(problems)

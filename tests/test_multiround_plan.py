@@ -91,6 +91,79 @@ class TestScheduleConsumesTickTable:
         assert 0.0 <= res.bubble_ratio < 1.0
 
 
+class TestCrossStepTickTable:
+    """ISSUE 5: optimizer steps chain like rounds — ``tick_table(R, I)``
+    stitches I*R*S live ticks with ONE trailing drain, the schedule
+    generator (``iterations > 1``, g0 advancing) dispatches the identical
+    order, and the simulated cross-step bubble undercuts the per-step
+    synchronous bubble on real workload cost models."""
+
+    def test_stitching_across_steps(self):
+        rng = random.Random(23)
+        for _ in range(6):
+            plan = random_plan(rng)
+            s, n = plan.n_slots, plan.n_workers
+            for rounds, iters in ((1, 3), (2, 2), (3, 4)):
+                table = plan.tick_table(rounds, iters)
+                live = iters * rounds * s
+                assert len(table) == live + n - 1
+                assert list(table[:live]) == [divmod(t, s)
+                                              for t in range(live)]
+                assert list(table[live:]) == [None] * (n - 1)
+                # iterations=1 is exactly the PR-4 table
+                assert plan.tick_table(rounds, 1) == plan.tick_table(rounds)
+
+    def test_rejects_nonpositive_iterations(self):
+        plan = random_plan(random.Random(29))
+        with pytest.raises(ValueError, match="iterations"):
+            plan.tick_table(1, 0)
+
+    def test_schedule_dispatches_crossstep_order(self):
+        rng = random.Random(31)
+        for _ in range(5):
+            plan = random_plan(rng)
+            n = plan.n_workers
+            for rounds, iters in ((1, 3), (2, 2)):
+                sched = plan.schedule(rounds * n, round_size=n,
+                                      iterations=iters)
+                validate(sched)
+                table = plan.tick_table(rounds, iters)
+                assert dispatch_slot_order(sched, n,
+                                           rounds_per_iteration=rounds) == \
+                    [e for e in table if e is not None]
+
+    @pytest.mark.parametrize("arch", ["qwen3-1.7b", "llama-3.1-8b"])
+    def test_crossstep_bubble_below_per_step_sync(self, arch):
+        cfg = smoke_config(get_config(arch))
+        n = 4
+        plan = plan_from_config(cfg, n)
+        sync = simulate_plan(plan, 2 * n, round_size=n).bubble_ratio
+        chained = [simulate_plan(plan, 2 * n, round_size=n,
+                                 iterations=i).bubble_ratio
+                   for i in (2, 3, 4)]
+        assert all(c < sync for c in chained), (sync, chained)
+        assert all(b < a for a, b in zip(chained, chained[1:])), chained
+
+    def test_uniform_crossstep_matches_formula(self):
+        """Uniform slot costs: the chained bubble is exactly
+        (N-1)/(I*R*S + N-1) — the fill/drain amortized over every step
+        (DESIGN.md §6)."""
+        from repro.core.plan import uniform_partition
+        from repro.core.schedule import theoretical_bubble_crossstep
+
+        n, n_layers = 4, 9
+        layers = [LayerCost(1.0, 0.0) for _ in range(n_layers)]
+        plan = compile_plan(uniform_partition(n_layers, grad_ratio=0.0),
+                            layers, n_workers=n)
+        s = plan.n_slots
+        for rounds, iters in ((1, 1), (1, 4), (2, 3), (4, 8)):
+            got = simulate_plan(plan, rounds * n, round_size=n,
+                                iterations=iters).bubble_ratio
+            want = theoretical_bubble_crossstep(n, rounds, s, iters)
+            assert got == pytest.approx(want, rel=1e-9), \
+                (rounds, iters, got, want)
+
+
 class TestSteadyStateBubble:
     """Paper §3.2/§3.3: with rounds chained back-to-back the fill/drain is
     paid once per iteration, so the simulated bubble falls strictly and

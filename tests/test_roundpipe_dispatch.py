@@ -74,6 +74,27 @@ def test_dispatch_multiround_lora_matches_merged_dense():
     _run("qwen3-1.7b", "rounds-lora", n_layers=7)
 
 
+def test_dispatch_async_crossstep_matches_staleness1():
+    """Cross-step staleness-1 async optimizer (ISSUE 5 tentpole): the
+    chained ring program — I optimizer steps in I*R*S + N - 1 ticks, step
+    T+1 injecting while step T's gradients drain into the in-program host
+    optimizer — on the uneven 7-layer/4-worker auto plan must per-leaf
+    allclose reference_staleness1 (and be distinguishable from the
+    staleness-0 trajectory), degenerate BIT-identically to the PR-4
+    synchronous loop with overlap disabled, and agree with the threaded
+    HostAsyncRoundPipe worker that drives the five per-layer §4.3
+    constraints around the real dispatch grads_fn."""
+    _run("qwen3-1.7b", "async", n_layers=7)
+
+
+def test_dispatch_async_shallow_plan_parity():
+    """Shallow plan (3 layers on 4 workers: sf=1 < N-1): step k+1's fused
+    work starts BEFORE step k's deposit-complete tick, so the per-step
+    loss/replicated-grad accumulators must separate by work-step parity —
+    the chained program must still match reference_staleness1."""
+    _run("qwen3-1.7b", "async", n_layers=3)
+
+
 def test_dispatch_lora_matches_merged_dense():
     """Frozen-base LoRA equivalence (headline): one adapter fine-tuning step
     through the ring on the uneven 7-layer/4-worker auto plan vs a
