@@ -1,5 +1,5 @@
 # Tier-1 verify: `make test` wraps the canonical command from ROADMAP.md.
-.PHONY: test test-fast bench-bubble docs-check
+.PHONY: test test-fast bench-bubble bench-quant docs-check
 
 test:
 	PYTHONPATH=src python -m pytest -x -q
@@ -11,6 +11,12 @@ test-fast:
 
 bench-bubble:
 	PYTHONPATH=src python -m benchmarks.bubble_ratio
+
+# the rp_quant* columns (ISSUE 6): quantized-pool bubble/lane figures with
+# the proportional-shrink assertions, plus the standby-cache break-evens
+bench-quant:
+	PYTHONPATH=src python -m benchmarks.bubble_ratio
+	PYTHONPATH=src python -m benchmarks.transfer_overlap
 
 # what CI's docs job runs: relative-link checker + cli.md flag-sync tests
 docs-check:

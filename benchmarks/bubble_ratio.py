@@ -80,6 +80,28 @@ def bubble_ratios(arch: str) -> dict:
     out["rp_lora_hidden"] = simulate_plan(
         plan_l, MICROBATCHES, round_size=N_GPUS, bandwidth=PCIE_BW,
         transfer_mode="prefetch").bubble_ratio
+    # ISSUE 6: the quantized resident pool on the SAME partition — body
+    # uploads shrink to the int8/int4 code+scale payload (the replicated
+    # head still streams dense), cutting the bandwidth-bound bubble roughly
+    # in proportion to the byte cut.  The underscore keys carry the lane
+    # stall/byte totals main() uses for the proportionality assertion.
+    dense_blk = simulate_plan(plan, MICROBATCHES, round_size=N_GPUS,
+                              bandwidth=PCIE_BW, transfer_mode="block")
+    out["_dense_stall"] = dense_blk.stall_total
+    out["_dense_bytes"] = sum(c.upload_stream_bytes for c in plan.layer_costs)
+    for dt in ("int8", "int4"):
+        tag = dt[-1]
+        layers_q = layer_costs(arch, pool_dtype=dt)
+        plan_q = compile_plan(p, layers_q, n_workers=N_GPUS)
+        blk = simulate_plan(plan_q, MICROBATCHES, round_size=N_GPUS,
+                            bandwidth=PCIE_BW, transfer_mode="block")
+        out[f"rp_quant{tag}_blocked"] = blk.bubble_ratio
+        out[f"rp_quant{tag}_hidden"] = simulate_plan(
+            plan_q, MICROBATCHES, round_size=N_GPUS, bandwidth=PCIE_BW,
+            transfer_mode="prefetch").bubble_ratio
+        out[f"_quant{tag}_stall"] = blk.stall_total
+        out[f"_quant{tag}_bytes"] = sum(c.upload_stream_bytes
+                                        for c in plan_q.layer_costs)
     out["roundpipe_async"] = steady_state_bubble(
         plan.schedule(MICROBATCHES, round_size=N_GPUS, iterations=3),
         iteration=1)
@@ -120,6 +142,8 @@ def main():
     print("arch,gpipe,1f1b,looped_bfs,interleaved_1f1b,roundpipe_sync,"
           f"{sweep_cols},"
           "rp_sync_blocked,rp_sync_hidden,rp_lora_hidden,"
+          "rp_quant8_blocked,rp_quant8_hidden,"
+          "rp_quant4_blocked,rp_quant4_hidden,"
           "rp_async_executed,roundpipe_async,roundpipe_async_vsplit,"
           "sync_reduction_vs_best")
     for r in rows():
@@ -130,6 +154,8 @@ def main():
               f"{sweep},"
               f"{r['rp_sync_blocked']:.4f},{r['rp_sync_hidden']:.4f},"
               f"{r['rp_lora_hidden']:.4f},"
+              f"{r['rp_quant8_blocked']:.4f},{r['rp_quant8_hidden']:.4f},"
+              f"{r['rp_quant4_blocked']:.4f},{r['rp_quant4_hidden']:.4f},"
               f"{r['rp_async_executed']:.4f},"
               f"{r['roundpipe_async']:.4f},"
               f"{r['roundpipe_async_vsplit']:.4f},"
@@ -147,6 +173,22 @@ def main():
         assert r["roundpipe_async"] <= r["rp_async_executed"] + 1e-9, (
             f"{r['arch']}: steady-state window {r['roundpipe_async']} "
             f"above the executed chain {r['rp_async_executed']}")
+        # ISSUE 6: quantized uploads cut the bandwidth-bound bubble
+        # monotonically with the code width...
+        for mode in ("blocked", "hidden"):
+            chain = [r[f"rp_sync_{mode}"], r[f"rp_quant8_{mode}"],
+                     r[f"rp_quant4_{mode}"]]
+            assert chain[0] > chain[1] > chain[2], (
+                f"{r['arch']}: {mode} bubble not falling with pool "
+                f"quantization: {chain}")
+        # ...and the lane stall time shrinks ~proportionally to the byte
+        # cut (head-of-line blocked mode, where the lane is the bottleneck)
+        for tag in ("8", "4"):
+            stall_ratio = r[f"_quant{tag}_stall"] / r["_dense_stall"]
+            byte_ratio = r[f"_quant{tag}_bytes"] / r["_dense_bytes"]
+            assert abs(stall_ratio - byte_ratio) < 0.08, (
+                f"{r['arch']}: int{tag} stall cut {stall_ratio:.3f} not "
+                f"proportional to byte cut {byte_ratio:.3f}")
 
 
 if __name__ == "__main__":

@@ -7,7 +7,7 @@ time-units (FLOPs / device-peak); only ratios matter for bubble analysis.
 """
 from __future__ import annotations
 
-from repro.core.partition import LayerCost
+from repro.core.partition import LayerCost, quant_upload_bytes
 from repro.models.config import ModelConfig, get_config
 
 PAPER_WORKLOADS = ["qwen3-1.7b", "llama-3.1-8b", "gpt-oss-20b", "qwen3-32b",
@@ -42,7 +42,8 @@ def head_flops(cfg: ModelConfig, b: int = MICRO_B, s: int = SEQ) -> float:
 def layer_costs(arch: str, *, grad_ratio: float = 2.0,
                 b: int = MICRO_B, s: int = SEQ,
                 head_chunks: int = 1,
-                lora_rank: int | None = None) -> list[LayerCost]:
+                lora_rank: int | None = None,
+                pool_dtype: str = "none") -> list[LayerCost]:
     """LayerCost list (body layers + LM-head pseudo-layer, paper Fig. 1).
 
     ``head_chunks > 1`` splits the LM head into vocab-chunk pseudo-layers —
@@ -53,7 +54,13 @@ def layer_costs(arch: str, *, grad_ratio: float = 2.0,
     same dense uploads, but ``trainable_bytes`` (the §4.3 gradient/optimizer
     download traffic) shrinks to the rank-r adapter factors and the frozen
     head downloads nothing — the fine-tuning regime of the paper's
-    Qwen3-235B claim."""
+    Qwen3-235B claim.
+
+    ``pool_dtype`` ("int8"/"int4") streams the body layers as the quantized
+    code+scale payload of the resident-pool path (ISSUE 6): uploads shrink
+    to ``quant_upload_bytes`` while compute, residency (``weight_bytes``)
+    and gradient downloads are untouched; the replicated LM head always
+    streams dense."""
     cfg = get_config(arch)
     unit = GPU_FP16_FLOPS
     lf = layer_flops(cfg, b, s) / unit
@@ -68,9 +75,11 @@ def layer_costs(arch: str, *, grad_ratio: float = 2.0,
         lcfg = LoraConfig(rank=lora_rank,
                           target_modules=applicable_targets(cfg))
         trainable = 2 * adapter_params_per_layer(cfg, lcfg)
+    upload = quant_upload_bytes(layer_bytes // 2, pool_dtype)  # fp16 elems
     costs = [LayerCost(lf, grad_ratio * lf, weight_bytes=layer_bytes,
                        act_bytes=2 * s * b * cfg.d_model,
-                       trainable_bytes=trainable)
+                       trainable_bytes=trainable,
+                       upload_bytes=upload)
              for _ in range(cfg.n_layers)]
     for _ in range(head_chunks):
         costs.append(LayerCost(hf / head_chunks, grad_ratio * hf / head_chunks,

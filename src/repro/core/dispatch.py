@@ -100,12 +100,16 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.compat import shard_map
+from repro.core.partition import POOL_DTYPE_BITS
+from repro.kernels import ops as kops
+from repro.kernels.dequant import quantize_rows
 from repro.models import lora as lora_mod
 from repro.models import transformer as T
 from repro.models.config import ModelConfig
 from repro.models.layers import apply_norm
 from repro.optim import (apply_updates, init_opt_state, merge_trainable,
                          opt_state_specs, trainable_leaves)
+from repro.optim.compress import compress_int8, decompress_int8
 from repro.launch.mesh import axis_size
 
 AXIS = "model"
@@ -124,12 +128,14 @@ def _zeros_block(layers_local, depth):
         lambda a: jnp.zeros((depth,) + a.shape[1:], a.dtype), layers_local)
 
 
-def roundpipe_forward_backward(params, batch, worker_id, cfg: ModelConfig, *,
+def roundpipe_forward_backward(params, batch, worker_id, grad_residual=None,
+                               *, cfg: ModelConfig,
                                plan, n_workers: int, l_pad: int,
                                xent_chunk: int = 256, kv_chunk: int = 1024,
                                ring_grad_dtype=jnp.float32,
                                prefetch_program=None, lora=None,
-                               rounds=None):
+                               rounds=None, pool_dtype: str = "none",
+                               grad_compress: str = "none"):
     """Inside-shard_map body: returns (grads pytree, loss_sum, token_count).
 
     ``params['layers']`` leaves arrive LOCAL: (l_pad/N, ...) — this worker's
@@ -158,6 +164,22 @@ def roundpipe_forward_backward(params, batch, worker_id, cfg: ModelConfig, *,
     end-of-step psum).  ``None`` is the legacy single-round path with flat
     ``(B_w, ...)`` batch leaves (bit-identical to ``rounds=1`` up to the
     round axis).
+
+    ``pool_dtype`` (``"none" | "int8" | "int4"``) streams the resident pool
+    QUANTIZED (DESIGN.md §7): each worker quantizes its pool shard once per
+    step into blockwise-absmax codes + fp32 scales, the standby uploads (or
+    the whole-block gather) ship the code+scale payload instead of the
+    dense rows, and the injection block is rebuilt in compute precision by
+    the fused dequant-on-upload kernel (``kernels.ops.dequant_rows``) at
+    promote time.  ``"none"`` keeps today's dense path bit-identical.
+
+    ``grad_compress="int8"`` runs every gradient deposit through the
+    error-feedback int8 codec (``optim.compress``): the down-lane payload
+    becomes codes+scales, and the quantization error accumulates in
+    ``grad_residual`` (a fp32 tree shaped like the deposited pool, living
+    beside the Adam state) which is carried into the NEXT deposit of the
+    same row.  With compression on, the body returns a 4-tuple ending in
+    the updated residual.
     """
     n = n_workers
     frozen = lora is not None
@@ -270,6 +292,128 @@ def roundpipe_forward_backward(params, batch, worker_id, cfg: ModelConfig, *,
     leaf_offs = list(itertools.accumulate([0] + leaf_elems[:-1]))
     row_elems = sum(leaf_elems)
 
+    # ---- quantized resident pool (pool_dtype != "none") ---------------------
+    quant = pool_dtype != "none"
+    if quant and pool_dtype not in POOL_DTYPE_BITS:
+        raise ValueError(f"unknown pool_dtype {pool_dtype!r}; expected "
+                         f"none|{'|'.join(POOL_DTYPE_BITS)}")
+    if quant:
+        # one quantization pass per step over the LOCAL pool shard — the
+        # "host-side" codes+scales image whose bytes the up lane ships
+        # (plan.stage_bytes counts exactly this payload).  The adapter pool
+        # (frozen-base mode) stays full-precision: it is 100-1000x smaller
+        # and rides the whole-block path below.
+        pool_cat = jnp.concatenate(
+            [l.reshape(per, -1).astype(jnp.float32) for l in pool_leaves],
+            axis=1)                                     # (per, row_elems)
+        q_codes, q_scales = quantize_rows(
+            pool_cat, bits=POOL_DTYPE_BITS[pool_dtype])
+        code_len = q_codes.shape[1]
+        nb_scales = q_scales.shape[1]
+
+        def zeros_standby_q():
+            return (jnp.zeros((kmax, code_len), q_codes.dtype),
+                    jnp.zeros((kmax, nb_scales), jnp.float32))
+
+        def upload_slot_q(stand, slot_idx):
+            """Quantized standby fill: each ChunkUpload's plan-byte range
+            maps proportionally onto the CODE columns (endpoints are exact,
+            so chunk boundaries still partition every row); the fp32 scale
+            row rides the slot's first chunk (its 4B/block are part of the
+            plan's quantized byte total)."""
+            codes, scales = stand
+            for cu in prefetch_program.uploads[slot_idx]:
+                if cu.row < 0:          # replicated LM head: never streamed
+                    continue
+                if cu.parent_bytes <= 0:
+                    la, lb = 0, code_len
+                else:
+                    la = cu.lo * code_len // cu.parent_bytes
+                    lb = cu.hi * code_len // cu.parent_bytes
+                if la < lb:
+                    src = jax.lax.slice(q_codes[cu.pool_row], (la,), (lb,))
+                    src = jax.lax.ppermute(src, AXIS, [(cu.owner, 0)])
+                    codes = codes.at[cu.row, la:lb].set(src)
+                if cu.lo == 0:
+                    srow = jax.lax.ppermute(q_scales[cu.pool_row], AXIS,
+                                            [(cu.owner, 0)])
+                    scales = scales.at[cu.row].set(srow)
+            return codes, scales
+
+        def dequant_block(codes, scales, spec):
+            """Fused dequant-on-upload: codes+scales -> injection block in
+            compute precision (``kernels.ops.dequant_rows``), split back
+            into the pool's leaf structure with the same real-weight
+            padding rows as ``assemble_block``."""
+            flat = kops.dequant_rows(codes, scales)     # (kmax, nb*QB) fp32
+            flat = flat[:, :row_elems]
+            if spec.size < kmax:
+                pad = jnp.broadcast_to(
+                    flat[0], (kmax - spec.size,) + flat.shape[1:])
+                flat = flat.at[spec.size:].set(pad)
+            leaves = [
+                jax.lax.slice(flat, (0, off), (kmax, off + ne)).reshape(
+                    (kmax,) + l.shape[1:]).astype(l.dtype)
+                for l, off, ne in zip(pool_leaves, leaf_offs, leaf_elems)]
+            return jax.tree_util.tree_unflatten(pool_def, leaves)
+
+        def assemble_block_q(spec):
+            """Whole-block fallback, quantized: gather full code+scale rows
+            from their owners, then one fused dequant."""
+            if not spec.layers:
+                return None
+            crows, srows = [], []
+            for lid in spec.layers:
+                owner, idx = divmod(lid, per)
+                crows.append(
+                    jax.lax.ppermute(q_codes[idx], AXIS, [(owner, 0)]))
+                srows.append(
+                    jax.lax.ppermute(q_scales[idx], AXIS, [(owner, 0)]))
+            crows += [crows[0]] * (kmax - len(crows))
+            srows += [srows[0]] * (kmax - len(srows))
+            return dequant_block(jnp.stack(crows), jnp.stack(srows), spec)
+
+    # ---- error-feedback compressed gradient deposits ------------------------
+    compress = grad_compress != "none"
+    if compress and grad_compress != "int8":
+        raise ValueError(f"unknown grad_compress {grad_compress!r}; "
+                         f"expected none|int8")
+    if compress and grad_residual is None:
+        raise ValueError("grad_compress needs the grad_residual pytree "
+                         "(init_roundpipe_state puts it beside the Adam "
+                         "state)")
+
+    def deposit_compressed(pg_tree, res_tree, row, owner, idx):
+        """Error-feedback int8 deposit (DESIGN.md §7).  The tail worker
+        compresses the fully ring-reduced row PLUS the row's carried
+        residual; the code+scale payload is what crosses the down lane to
+        the pool owner, which dequantizes into its accumulator and stores
+        the fresh residual for the next deposit into this row.  (In this
+        SPMD harness the residual round-trips owner->tail->owner; the real
+        system keeps it host-side at the tail — see DESIGN.md §7.)"""
+        pg_leaves, pg_def = jax.tree_util.tree_flatten(pg_tree)
+        res_leaves = jax.tree_util.tree_flatten(res_tree)[0]
+        row_leaves = jax.tree_util.tree_flatten(row)[0]
+        new_pg, new_res = [], []
+        for pg, res, rw in zip(pg_leaves, res_leaves, row_leaves):
+            res_row = jax.lax.ppermute(res[idx], AXIS, [(owner, n - 1)])
+            codes, cscale, fresh = compress_int8(
+                rw.astype(jnp.float32), res_row)
+            codes = jax.lax.ppermute(codes, AXIS, [(n - 1, owner)])
+            cscale = jax.lax.ppermute(cscale, AXIS, [(n - 1, owner)])
+            fresh = jax.lax.ppermute(fresh, AXIS, [(n - 1, owner)])
+            deq = decompress_int8(codes, cscale, rw.shape)
+            new_pg.append(pg.at[idx].add(deq))
+            # every worker runs this SPMD block, but the ppermute delivers
+            # ``fresh`` only to the owner — everyone else receives zeros.
+            # The grad add is naturally a no-op there (deq == 0), but a
+            # bare .set would CLOBBER the non-owner's own residual row at
+            # this local index (it shadows a different layer), so gate it.
+            keep = jnp.where(worker_id == owner, fresh, res[idx])
+            new_res.append(res.at[idx].set(keep))
+        return (jax.tree_util.tree_unflatten(pg_def, new_pg),
+                jax.tree_util.tree_unflatten(pg_def, new_res))
+
     def _chunk_elem_range(cu):
         """Map the chunk's plan-byte range to an element range of the actual
         row (the cost-model byte total need not match the array dtype)."""
@@ -314,9 +458,20 @@ def roundpipe_forward_backward(params, batch, worker_id, cfg: ModelConfig, *,
     def zeros_standby():
         return [jnp.zeros((kmax,) + l.shape[1:], l.dtype) for l in pool_leaves]
 
+    # quant-aware indirection: "none" binds the original helpers so the
+    # dense trace stays bit-identical to the pre-quantization runtime
+    _upload = upload_slot_q if quant else upload_slot
+    _zeros = zeros_standby_q if quant else zeros_standby
+    _assemble = assemble_block_q if quant else assemble_block
+
+    def _promote(stand, spec):
+        if quant:
+            return dequant_block(stand[0], stand[1], spec)
+        return promote_standby(stand, spec)
+
     if prefetch_program is not None:
         # fill prologue: slot 0 has no preceding compute window to hide in
-        standby = upload_slot(zeros_standby(), 0)
+        standby = _upload(_zeros(), 0)
 
     # The runtime consumes the SAME round-stitched injection order the
     # schedule generator dispatches (plan.tick_table, asserted in tests):
@@ -336,7 +491,7 @@ def roundpipe_forward_backward(params, batch, worker_id, cfg: ModelConfig, *,
             spec = slots[entry[1]]
             if prefetch_program is not None:
                 if spec.size:
-                    ring = _ring_add(shifted, promote_standby(standby, spec))
+                    ring = _ring_add(shifted, _promote(standby, spec))
                 else:
                     ring = shifted
                 # double-buffer swap: the next tick's slot streams into the
@@ -346,10 +501,9 @@ def roundpipe_forward_backward(params, batch, worker_id, cfg: ModelConfig, *,
                 # streams while round r drains its deepest slots: the
                 # per-slot ChunkUpload tables are replayed modulo S.
                 if t + 1 < live:
-                    standby = upload_slot(zeros_standby(),
-                                          (t + 1) % s_total)
+                    standby = _upload(_zeros(), (t + 1) % s_total)
             else:
-                inj = assemble_block(spec)
+                inj = _assemble(spec)
                 ring = _ring_add(shifted, inj) if inj is not None else shifted
             if frozen:
                 # adapters are ~100-1000x smaller than the dense block: the
@@ -516,11 +670,16 @@ def roundpipe_forward_backward(params, batch, worker_id, cfg: ModelConfig, *,
             for k, lid in enumerate(slots[e_slot % s_total].layers):
                 owner, idx = divmod(lid, per)
                 row = jax.tree.map(lambda a: a[k], gbuf)
-                arriving = jax.tree.map(
-                    lambda a: jax.lax.ppermute(a, AXIS, [(n - 1, owner)]), row)
-                pool_grads = jax.tree.map(
-                    lambda pg, ar: pg.at[idx].add(ar.astype(jnp.float32)),
-                    pool_grads, arriving)
+                if compress:
+                    pool_grads, grad_residual = deposit_compressed(
+                        pool_grads, grad_residual, row, owner, idx)
+                else:
+                    arriving = jax.tree.map(
+                        lambda a: jax.lax.ppermute(a, AXIS, [(n - 1, owner)]),
+                        row)
+                    pool_grads = jax.tree.map(
+                        lambda pg, ar: pg.at[idx].add(ar.astype(jnp.float32)),
+                        pool_grads, arriving)
 
     # ---- finalize: reduce replicated-param grads ------------------------------
     loss_sum = jax.lax.psum(loss_sum, AXIS)
@@ -530,6 +689,8 @@ def roundpipe_forward_backward(params, batch, worker_id, cfg: ModelConfig, *,
         # the deposited pytree holds EXACTLY the adapter leaves: the ring
         # all-reduce already summed them, so no psum and no base entries
         grads = jax.tree.map(lambda g: g * scale, {"lora": pool_grads})
+        if compress:
+            return grads, loss_sum * scale, tok_count, grad_residual
         return grads, loss_sum * scale, tok_count
 
     embed_grad = jax.lax.psum(embed_grad, AXIS)
@@ -543,6 +704,8 @@ def roundpipe_forward_backward(params, batch, worker_id, cfg: ModelConfig, *,
     else:                                                   # tied embeddings
         grads["embed"] = grads["embed"] + head_grad.T
     grads = jax.tree.map(lambda g: g * scale, grads)
+    if compress:
+        return grads, loss_sum * scale, tok_count, grad_residual
     return grads, loss_sum * scale, tok_count
 
 
@@ -552,7 +715,7 @@ def roundpipe_async_forward_backward(params, opt_state, batch, worker_id,
                                      opt_cfg, xent_chunk: int = 256,
                                      kv_chunk: int = 1024,
                                      ring_grad_dtype=jnp.float32,
-                                     prefetch_program=None):
+                                     prefetch_program=None, lora=None):
     """Cross-step chained body (paper §4.3, DESIGN.md §6): ``steps``
     optimizer iterations executed back-to-back in ONE ring program of
     ``I*R*S + N - 1`` ticks — step ``T+1``'s round injection begins while
@@ -588,6 +751,16 @@ def roundpipe_async_forward_backward(params, opt_state, batch, worker_id,
     update (step ``I-1``'s) is applied before returning — the flush —
     so the result matches ``reference_staleness1`` over ``steps``
     iterations exactly.
+
+    ``lora`` selects the frozen-base mode: the DENSE pool is read-only
+    (every step injects the same rows, so there is no cross-step dense-
+    weight staleness at all) and only the adapter ring versions — step
+    ``T`` assembles its adapter blocks from ``v_{T-1}``'s adapter pool and
+    the in-program optimizer updates the adapter leaves alone.  Because
+    embed / LM head / final norm are frozen too, they need no parity
+    buffers; per-step embeddings are exact (they vary only with the step's
+    batch).  ``opt_state`` must cover the adapter leaves only (same shape
+    as the synchronous LoRA step's).
     """
     n = n_workers
     l_total = cfg.n_layers
@@ -602,6 +775,7 @@ def roundpipe_async_forward_backward(params, opt_state, batch, worker_id,
     rs = rounds * s_total                  # live ticks per step
     live = steps * rs
     tied = "lm_head" not in params
+    frozen = lora is not None
 
     starts_arr = jnp.array([s.start for s in slots] + [0], jnp.int32)
     sizes_arr = jnp.array([s.size for s in slots] + [0], jnp.int32)
@@ -628,25 +802,41 @@ def roundpipe_async_forward_backward(params, opt_state, batch, worker_id,
     def emb_for(p, i):                     # (R, B_w, S, D) for step i
         return T.embed_inputs(p, batch_step(i), cfg)
 
-    # parity buffers for TRACED reads: slot T % 2 holds what step T's work
-    # consumes (replicated params of v_{max(0,T-1)} and its embeddings of
-    # step T's batch).  Steps 0 and 1 both read v_0.
-    x_emb_pair = jnp.stack([emb_for(params, 0),
-                            emb_for(params, min(1, steps - 1))])
-    fnorm_pair = jax.tree.map(lambda a: jnp.stack([a, a]),
-                              params["final_norm"])
     head0 = T.lm_head_weights(params, cfg)
-    head_pair = jnp.stack([head0, head0])
-    bshape = x_emb_pair.shape[2:]          # (B_w, S, D)
+    if frozen:
+        # frozen base: embed / head / final norm never version, so traced
+        # reads need no parity selection — per-step embeddings are exact
+        # functions of the step's batch under the one frozen embed table
+        x_emb_all = jnp.stack([emb_for(params, i) for i in range(steps)])
+        bshape = x_emb_all.shape[2:]       # (B_w, S, D)
+        emb_dtype = x_emb_all.dtype
+    else:
+        # parity buffers for TRACED reads: slot T % 2 holds what step T's
+        # work consumes (replicated params of v_{max(0,T-1)} and its
+        # embeddings of step T's batch).  Steps 0 and 1 both read v_0.
+        x_emb_pair = jnp.stack([emb_for(params, 0),
+                                emb_for(params, min(1, steps - 1))])
+        fnorm_pair = jax.tree.map(lambda a: jnp.stack([a, a]),
+                                  params["final_norm"])
+        head_pair = jnp.stack([head0, head0])
+        bshape = x_emb_pair.shape[2:]      # (B_w, S, D)
+        emb_dtype = x_emb_pair.dtype
 
     # ---- tick-state ---------------------------------------------------------
     pool = params["layers"]
     ring = _zeros_block(pool, kmax)
+    # frozen-base: the traveling gradient buffer / pool accumulator shrink
+    # to ADAPTER shape and a second ring carries each slot's versioned
+    # adapter block (the sync runtime's layout, plus staleness-1)
+    grad_pool = params["lora"] if frozen else pool
+    if frozen:
+        a_ring = _zeros_block(grad_pool, kmax)
     gbuf = jax.tree.map(lambda a: a.astype(ring_grad_dtype),
-                        _zeros_block(pool, kmax))
-    pool_grads = jax.tree.map(lambda a: jnp.zeros(a.shape, jnp.float32), pool)
-    stash = jnp.zeros((l_total + 1,) + bshape, x_emb_pair.dtype)
-    act = jnp.zeros(bshape, x_emb_pair.dtype)
+                        _zeros_block(grad_pool, kmax))
+    pool_grads = jax.tree.map(lambda a: jnp.zeros(a.shape, jnp.float32),
+                              grad_pool)
+    stash = jnp.zeros((l_total + 1,) + bshape, emb_dtype)
+    act = jnp.zeros(bshape, emb_dtype)
     grad_carry = jnp.zeros(bshape, jnp.float32)
     # per-step accumulators are parity-PAIRED (leading dim 2, indexed by the
     # traced work-step): on shallow plans (sf < N-1 or S < N) a worker
@@ -657,11 +847,12 @@ def roundpipe_async_forward_backward(params, opt_state, batch, worker_id,
     # deposit is tick D_k, step k+1's first is D_k + 1).
     loss_sum = jnp.zeros((2,), jnp.float32)
     tok_count = jnp.zeros((2,), jnp.int32)
-    embed_grad = jnp.zeros((2,) + params["embed"].shape, jnp.float32)
-    head_grad = jnp.zeros((2,) + head0.shape, jnp.float32)
-    fnorm_grad = jax.tree.map(
-        lambda a: jnp.zeros((2,) + a.shape, jnp.float32),
-        params["final_norm"])
+    if not frozen:
+        embed_grad = jnp.zeros((2,) + params["embed"].shape, jnp.float32)
+        head_grad = jnp.zeros((2,) + head0.shape, jnp.float32)
+        fnorm_grad = jax.tree.map(
+            lambda a: jnp.zeros((2,) + a.shape, jnp.float32),
+            params["final_norm"])
     losses, toks, gnorms = [], [], []
 
     def block_row(block, k):
@@ -689,6 +880,9 @@ def roundpipe_async_forward_backward(params, opt_state, batch, worker_id,
 
     def inj_pool(t_step):                  # version step t_step injects
         return versions[max(0, t_step - 1)]["layers"]
+
+    def inj_apool(t_step):                 # adapter version step t_step reads
+        return versions[max(0, t_step - 1)]["lora"]
 
     def assemble_block(spec, src_pool):
         rows = []
@@ -755,6 +949,9 @@ def roundpipe_async_forward_backward(params, opt_state, batch, worker_id,
             lambda a: jax.lax.ppermute(a, AXIS, _shift_perm(n)), ring)
         gbuf = jax.tree.map(
             lambda a: jax.lax.ppermute(a, AXIS, _shift_perm(n)), gbuf)
+        if frozen:
+            a_shifted = jax.tree.map(
+                lambda a: jax.lax.ppermute(a, AXIS, _shift_perm(n)), a_ring)
         if entry is not None:
             t_inj = entry[0] // rounds     # static injection step
             spec = slots[entry[1]]
@@ -766,8 +963,17 @@ def roundpipe_async_forward_backward(params, opt_state, batch, worker_id,
             else:
                 inj = assemble_block(spec, inj_pool(t_inj))
                 ring = _ring_add(shifted, inj) if inj is not None else shifted
+            if frozen:
+                # adapters skip the standby machinery (sync-runtime
+                # rationale: far smaller than one chunk) but version like
+                # the dense async pool: step T reads v_{T-1}'s adapters
+                inj_a = assemble_block(spec, inj_apool(t_inj))
+                a_ring = _ring_add(a_shifted, inj_a) \
+                    if inj_a is not None else a_shifted
         else:
             ring = shifted
+            if frozen:
+                a_ring = a_shifted
 
         # ---- compute: worker w holds stitched global tick (t - w) -----------
         fb = t - w                                          # traced
@@ -784,13 +990,17 @@ def roundpipe_async_forward_backward(params, opt_state, batch, worker_id,
         start = starts_arr[slot_i]
         n_act = sizes_arr[slot_i]
 
-        def x_emb_cur():
-            return sel2(x_emb_pair, parity, ri)
-
         step_tr = jnp.floor_divide(g_round, rounds)
+
+        def x_emb_cur():
+            if frozen:      # exact: embed frozen, only the batch varies
+                return sel2(x_emb_all, step_tr, ri)
+            return sel2(x_emb_pair, parity, ri)
 
         def do_plain(op):
             act_, stash_ = op
+            eff_ring = lora_mod.merge_layers(ring, a_ring, lora) \
+                if frozen else ring
             x_in = jnp.where(round_start, x_emb_cur(), act_)
 
             def step_one(xc, st_, k, lw):
@@ -804,7 +1014,7 @@ def roundpipe_async_forward_backward(params, opt_state, batch, worker_id,
                 return jnp.where(active, y, xc), st_
 
             if kmax == 1:
-                return step_one(x_in, stash_, 0, block_row(ring, 0))
+                return step_one(x_in, stash_, 0, block_row(eff_ring, 0))
 
             def body(carry, inp):
                 xc, st_ = carry
@@ -812,66 +1022,107 @@ def roundpipe_async_forward_backward(params, opt_state, batch, worker_id,
                 return step_one(xc, st_, k, lw), None
 
             (y, stash_), _ = jax.lax.scan(body, (x_in, stash_),
-                                          (jnp.arange(kmax), ring))
+                                          (jnp.arange(kmax), eff_ring))
             return y, stash_
 
         act, stash = jax.lax.cond(plain_on, do_plain,
                                   lambda op: op, (act, stash))
 
-        def do_fused(op):
-            act_, ls, tc, gcarry, hg, fg, gb_, eg = op
-            x_in = jnp.where(round_start, x_emb_cur(), act_)    # Sf == 0 edge
-            labels_cur = sel2(labels, step_tr, ri)
-            fnorm_cur = jax.tree.map(
-                lambda a: jax.lax.dynamic_index_in_dim(a, parity, 0,
-                                                       keepdims=False),
-                fnorm_pair)
-            head_cur = jax.lax.dynamic_index_in_dim(head_pair, parity, 0,
-                                                    keepdims=False)
-            tot, vjp, cnt = jax.vjp(
-                lambda blk, fn, hw_, xx: fused_loss(blk, fn, hw_, xx,
-                                                    labels_cur),
-                ring, fnorm_cur, head_cur, x_in, has_aux=True)
-            gb, gf, gh, gx = vjp(jnp.float32(1.0))
-            gb_ = jax.tree.map(lambda a, d: a + d.astype(a.dtype), gb_, gb)
-            if sf == 0 and fused_spec.layers and tokens is not None:
-                eg = eg.at[parity, sel2(tokens, step_tr, ri)].add(
-                    gx.astype(jnp.float32))
-            return (act_, ls.at[parity].add(tot),
-                    tc.at[parity].add(cnt), gx.astype(jnp.float32),
-                    hg.at[parity].add(gh.astype(jnp.float32)),
-                    jax.tree.map(
-                        lambda a, d: a.at[parity].add(d.astype(jnp.float32)),
-                        fg, gf),
-                    gb_, eg)
+        if frozen:
+            # frozen base: differentiate through the adapter ring only —
+            # replicated params are constants, no parity selection needed
+            def do_fused(op):
+                act_, ls, tc, gcarry, gb_ = op
+                x_in = jnp.where(round_start, x_emb_cur(), act_)
 
-        (act, loss_sum, tok_count, grad_carry, head_grad, fnorm_grad,
-         gbuf, embed_grad) = jax.lax.cond(
-            fused_on, do_fused, lambda op: op,
+                def floss(ablk, xx):
+                    return fused_loss(
+                        lora_mod.merge_layers(ring, ablk, lora),
+                        params["final_norm"], head0, xx,
+                        sel2(labels, step_tr, ri))
+
+                tot, vjp, cnt = jax.vjp(floss, a_ring, x_in, has_aux=True)
+                ga, gx = vjp(jnp.float32(1.0))
+                gb_ = jax.tree.map(lambda a, d: a + d.astype(a.dtype),
+                                   gb_, ga)
+                return (act_, ls.at[parity].add(tot),
+                        tc.at[parity].add(cnt), gx.astype(jnp.float32), gb_)
+
+            act, loss_sum, tok_count, grad_carry, gbuf = jax.lax.cond(
+                fused_on, do_fused, lambda op: op,
+                (act, loss_sum, tok_count, grad_carry, gbuf))
+
+            def do_bwd(op):
+                gcarry, gb_ = op
+                x_in = jax.lax.dynamic_index_in_dim(
+                    stash, jnp.minimum(start, l_total), 0, keepdims=False)
+                y, vjp = jax.vjp(
+                    lambda ablk, xx: stage_fwd(
+                        lora_mod.merge_layers(ring, ablk, lora), n_act, xx),
+                    a_ring, x_in)
+                ga, gx = vjp(gcarry.astype(y.dtype))
+                gb_ = jax.tree.map(lambda a, d: a + d.astype(a.dtype),
+                                   gb_, ga)
+                return gx.astype(jnp.float32), gb_
+
+            grad_carry, gbuf = jax.lax.cond(
+                bwd_on, do_bwd, lambda op: op, (grad_carry, gbuf))
+        else:
+            def do_fused(op):
+                act_, ls, tc, gcarry, hg, fg, gb_, eg = op
+                x_in = jnp.where(round_start, x_emb_cur(), act_)  # Sf==0 edge
+                labels_cur = sel2(labels, step_tr, ri)
+                fnorm_cur = jax.tree.map(
+                    lambda a: jax.lax.dynamic_index_in_dim(a, parity, 0,
+                                                           keepdims=False),
+                    fnorm_pair)
+                head_cur = jax.lax.dynamic_index_in_dim(head_pair, parity, 0,
+                                                        keepdims=False)
+                tot, vjp, cnt = jax.vjp(
+                    lambda blk, fn, hw_, xx: fused_loss(blk, fn, hw_, xx,
+                                                        labels_cur),
+                    ring, fnorm_cur, head_cur, x_in, has_aux=True)
+                gb, gf, gh, gx = vjp(jnp.float32(1.0))
+                gb_ = jax.tree.map(lambda a, d: a + d.astype(a.dtype), gb_, gb)
+                if sf == 0 and fused_spec.layers and tokens is not None:
+                    eg = eg.at[parity, sel2(tokens, step_tr, ri)].add(
+                        gx.astype(jnp.float32))
+                return (act_, ls.at[parity].add(tot),
+                        tc.at[parity].add(cnt), gx.astype(jnp.float32),
+                        hg.at[parity].add(gh.astype(jnp.float32)),
+                        jax.tree.map(
+                            lambda a, d: a.at[parity].add(
+                                d.astype(jnp.float32)),
+                            fg, gf),
+                        gb_, eg)
+
             (act, loss_sum, tok_count, grad_carry, head_grad, fnorm_grad,
-             gbuf, embed_grad))
+             gbuf, embed_grad) = jax.lax.cond(
+                fused_on, do_fused, lambda op: op,
+                (act, loss_sum, tok_count, grad_carry, head_grad, fnorm_grad,
+                 gbuf, embed_grad))
 
-        def do_bwd(op):
-            gcarry, gb_, eg = op
-            x_in = jax.lax.dynamic_index_in_dim(
-                stash, jnp.minimum(start, l_total), 0, keepdims=False)
-            y, vjp = jax.vjp(lambda blk, xx: stage_fwd(blk, n_act, xx),
-                             ring, x_in)
-            gb, gx = vjp(gcarry.astype(y.dtype))
-            gb_ = jax.tree.map(lambda a, d: a + d.astype(a.dtype), gb_, gb)
+            def do_bwd(op):
+                gcarry, gb_, eg = op
+                x_in = jax.lax.dynamic_index_in_dim(
+                    stash, jnp.minimum(start, l_total), 0, keepdims=False)
+                y, vjp = jax.vjp(lambda blk, xx: stage_fwd(blk, n_act, xx),
+                                 ring, x_in)
+                gb, gx = vjp(gcarry.astype(y.dtype))
+                gb_ = jax.tree.map(lambda a, d: a + d.astype(a.dtype), gb_, gb)
 
-            def embed_bwd(e):
-                if tokens is None:
-                    return e
-                return e.at[parity, sel2(tokens, step_tr, ri)].add(
-                    gx.astype(jnp.float32))
+                def embed_bwd(e):
+                    if tokens is None:
+                        return e
+                    return e.at[parity, sel2(tokens, step_tr, ri)].add(
+                        gx.astype(jnp.float32))
 
-            eg = jax.lax.cond(jnp.logical_and(start == 0, n_act > 0),
-                              embed_bwd, lambda e: e, eg)
-            return gx.astype(jnp.float32), gb_, eg
+                eg = jax.lax.cond(jnp.logical_and(start == 0, n_act > 0),
+                                  embed_bwd, lambda e: e, eg)
+                return gx.astype(jnp.float32), gb_, eg
 
-        grad_carry, gbuf, embed_grad = jax.lax.cond(
-            bwd_on, do_bwd, lambda op: op, (grad_carry, gbuf, embed_grad))
+            grad_carry, gbuf, embed_grad = jax.lax.cond(
+                bwd_on, do_bwd, lambda op: op, (grad_carry, gbuf, embed_grad))
 
         # ---- gradient deposit -----------------------------------------------
         g = t - (n - 1)                    # global stitched slot exiting now
@@ -892,28 +1143,46 @@ def roundpipe_async_forward_backward(params, opt_state, batch, worker_id,
             loss_k = jax.lax.psum(loss_sum[p_k], AXIS)
             tok_k = jax.lax.psum(tok_count[p_k], AXIS)
             scale = 1.0 / jnp.maximum(tok_k.astype(jnp.float32), 1.0)
-            eg = jax.lax.psum(embed_grad[p_k], AXIS)
-            hg = jax.lax.psum(head_grad[p_k], AXIS)
-            fg = jax.tree.map(lambda x: jax.lax.psum(x[p_k], AXIS),
-                              fnorm_grad)
-            grads = {"embed": eg, "layers": pool_grads, "final_norm": fg}
-            if not tied:
-                grads["lm_head"] = hg
+            if frozen:
+                # adapter-only update: the deposited pytree holds exactly
+                # the adapter leaves (already ring-reduced, rows disjoint
+                # across shards -> psum for the global clip norm)
+                grads = {"lora": jax.tree.map(lambda x: x * scale,
+                                              pool_grads)}
+                gnorm = jnp.sqrt(jax.lax.psum(
+                    sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(grads["lora"])), AXIS))
+                mask = lora_mod.param_mask(params)
+                new_tr, opt, _ = apply_updates(
+                    opt, grads, opt_cfg,
+                    param_like=trainable_leaves(params, mask),
+                    grad_norm=gnorm)
+                # frozen leaves are identical across versions, so merging
+                # into v_0 reconstructs v_{k+1} exactly
+                new_params = merge_trainable(params, new_tr, mask)
             else:
-                grads["embed"] = grads["embed"] + hg.T
-            grads = jax.tree.map(lambda x: x * scale, grads)
-            # global clip norm: pool rows are disjoint across shards (psum);
-            # replicated grads are identical everywhere (count once)
-            pool_sq = jax.lax.psum(
-                sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
-                    for x in jax.tree.leaves(grads["layers"])), AXIS)
-            rep_sq = sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
-                         for key, v in grads.items() if key != "layers"
-                         for x in jax.tree.leaves(v))
-            gnorm = jnp.sqrt(pool_sq + rep_sq)
-            new_params, opt, _ = apply_updates(opt, grads, opt_cfg,
-                                               param_like=params,
-                                               grad_norm=gnorm)
+                eg = jax.lax.psum(embed_grad[p_k], AXIS)
+                hg = jax.lax.psum(head_grad[p_k], AXIS)
+                fg = jax.tree.map(lambda x: jax.lax.psum(x[p_k], AXIS),
+                                  fnorm_grad)
+                grads = {"embed": eg, "layers": pool_grads, "final_norm": fg}
+                if not tied:
+                    grads["lm_head"] = hg
+                else:
+                    grads["embed"] = grads["embed"] + hg.T
+                grads = jax.tree.map(lambda x: x * scale, grads)
+                # global clip norm: pool rows are disjoint across shards
+                # (psum); replicated grads are identical everywhere (once)
+                pool_sq = jax.lax.psum(
+                    sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(grads["layers"])), AXIS)
+                rep_sq = sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                             for key, v in grads.items() if key != "layers"
+                             for x in jax.tree.leaves(v))
+                gnorm = jnp.sqrt(pool_sq + rep_sq)
+                new_params, opt, _ = apply_updates(opt, grads, opt_cfg,
+                                                   param_like=params,
+                                                   grad_norm=gnorm)
             versions.append(new_params)
             losses.append(loss_k * scale)
             toks.append(tok_k)
@@ -925,25 +1194,28 @@ def roundpipe_async_forward_backward(params, opt_state, batch, worker_id,
             # and step k+2 (which reuses slot p_k) starts no earlier than
             # tick (k+2)*R*S > D_k
             pool_grads = jax.tree.map(
-                lambda a: jnp.zeros(a.shape, jnp.float32), pool)
-            embed_grad = embed_grad.at[p_k].set(0.0)
-            head_grad = head_grad.at[p_k].set(0.0)
-            fnorm_grad = jax.tree.map(lambda a: a.at[p_k].set(0.0),
-                                      fnorm_grad)
+                lambda a: jnp.zeros(a.shape, jnp.float32), grad_pool)
             loss_sum = loss_sum.at[p_k].set(0.0)
             tok_count = tok_count.at[p_k].set(0)
-            # publish v_{k+1} into the parity slot step k+2 will read; its
-            # previous occupant (v_{k-1}) had its last reader retire at this
-            # very tick — constraint (1), double-buffered form
-            nxt = k + 2
-            if nxt < steps:
-                x_emb_pair = x_emb_pair.at[nxt % 2].set(
-                    emb_for(new_params, nxt))
-                fnorm_pair = jax.tree.map(
-                    lambda pair, v: pair.at[nxt % 2].set(v),
-                    fnorm_pair, new_params["final_norm"])
-                head_pair = head_pair.at[nxt % 2].set(
-                    T.lm_head_weights(new_params, cfg))
+            if not frozen:
+                embed_grad = embed_grad.at[p_k].set(0.0)
+                head_grad = head_grad.at[p_k].set(0.0)
+                fnorm_grad = jax.tree.map(lambda a: a.at[p_k].set(0.0),
+                                          fnorm_grad)
+                # publish v_{k+1} into the parity slot step k+2 will read;
+                # its previous occupant (v_{k-1}) had its last reader retire
+                # at this very tick — constraint (1), double-buffered form.
+                # (Frozen mode: replicated params never version, nothing to
+                # publish — the adapter versions ride the list above.)
+                nxt = k + 2
+                if nxt < steps:
+                    x_emb_pair = x_emb_pair.at[nxt % 2].set(
+                        emb_for(new_params, nxt))
+                    fnorm_pair = jax.tree.map(
+                        lambda pair, v: pair.at[nxt % 2].set(v),
+                        fnorm_pair, new_params["final_norm"])
+                    head_pair = head_pair.at[nxt % 2].set(
+                        T.lm_head_weights(new_params, cfg))
 
         # ---- standby upload for tick t+1 (after any version publish) --------
         if prefetch_program is not None and t + 1 < len(tick_entries):
@@ -987,7 +1259,9 @@ def resolve_plan(cfg: ModelConfig, step_cfg, n_workers: int):
     if isinstance(partition, ExecutionPlan):
         return partition
     return plan_from_config(cfg, n_workers, partition=partition,
-                            lora=getattr(step_cfg, "lora", None))
+                            lora=getattr(step_cfg, "lora", None),
+                            pool_dtype=getattr(step_cfg, "pool_dtype",
+                                               "none"))
 
 
 def pool_rows(cfg: ModelConfig, n_workers: int) -> int:
@@ -1022,7 +1296,8 @@ def pad_pool(params, cfg: ModelConfig, n_workers: int):
 
 def _build_mapped(cfg: ModelConfig, mesh, plan, *, xent_chunk: int,
                   kv_chunk: int, ring_grad_dtype, prefetch_program=None,
-                  lora=None, rounds=None):
+                  lora=None, rounds=None, pool_dtype: str = "none",
+                  grad_compress: str = "none"):
     """The shard_map'ed plan executor over PADDED params.
 
     Returns ``(mapped, l_pad, pspecs, grads_specs)`` where
@@ -1032,6 +1307,10 @@ def _build_mapped(cfg: ModelConfig, mesh, plan, *, xent_chunk: int,
     With ``rounds`` the batch leaves must carry a leading round axis
     ``(rounds, B, ...)``; dim 0 stays replicated (each worker sees every
     round of its resident group) while dim 1 shards over `model`.
+    With ``grad_compress`` the call becomes
+    ``mapped(padded_params, batch, grad_residual) ->
+    (padded_grads, loss, tokens, new_residual)`` — the error-feedback
+    residual (a fp32 tree shaped like the deposited pool) threads through.
     """
     n = axis_size(mesh, AXIS)
     if plan.n_workers != n:
@@ -1057,15 +1336,18 @@ def _build_mapped(cfg: ModelConfig, mesh, plan, *, xent_chunk: int,
         roundpipe_forward_backward, cfg=cfg, plan=plan, n_workers=n,
         l_pad=l_pad, xent_chunk=xent_chunk, kv_chunk=kv_chunk,
         ring_grad_dtype=ring_grad_dtype, prefetch_program=prefetch_program,
-        lora=lora, rounds=rounds)
+        lora=lora, rounds=rounds, pool_dtype=pool_dtype,
+        grad_compress=grad_compress)
     if lora is not None:
         grads_specs = {"lora": pspecs["lora"]}
     elif "lm_head" in abstract:
         grads_specs = dict(pspecs)
     else:
         grads_specs = {k: pspecs[k] for k in ("embed", "layers", "final_norm")}
+    # the error-feedback residual shards like the pool it shadows
+    res_specs = pspecs["lora"] if lora is not None else pspecs["layers"]
 
-    def mapped(padded_params, batch):
+    def mapped(padded_params, batch, grad_residual=None):
         if rounds is None:
             bspecs = jax.tree.map(
                 lambda leaf: P(AXIS, *([None] * (leaf.ndim - 1))), batch)
@@ -1073,6 +1355,14 @@ def _build_mapped(cfg: ModelConfig, mesh, plan, *, xent_chunk: int,
             bspecs = jax.tree.map(
                 lambda leaf: P(None, AXIS, *([None] * (leaf.ndim - 2))),
                 batch)
+        if grad_compress != "none":
+            f = shard_map(
+                body, mesh, axis_names={AXIS},
+                in_specs=(pspecs, bspecs, P(AXIS), res_specs),
+                out_specs=(grads_specs, P(), P(), res_specs),
+                check_vma=False)
+            return f(padded_params, batch, jnp.arange(n, dtype=jnp.int32),
+                     grad_residual)
         f = shard_map(
             body, mesh, axis_names={AXIS},
             in_specs=(pspecs, bspecs, P(AXIS)),
@@ -1087,7 +1377,8 @@ def build_roundpipe_grads_fn(cfg: ModelConfig, mesh, plan, *,
                              xent_chunk: int = 256, kv_chunk: int = 1024,
                              ring_grad_dtype=jnp.float32,
                              prefetch_program=None, lora=None,
-                             n_microbatches=None):
+                             n_microbatches=None, pool_dtype: str = "none",
+                             grad_compress: str = "none"):
     """shard_map'ed ``f(params, batch) -> (grads, loss, tokens)`` executing
     ``plan`` on UNPADDED params (reference-comparison API): pads the pool on
     the way in and slices the gradient rows back out.  ``prefetch_program``
@@ -1097,15 +1388,27 @@ def build_roundpipe_grads_fn(cfg: ModelConfig, mesh, plan, *,
     ``M = R*N`` of the worker count) selects the multi-round steady-state
     path — the flat batch splits into ``R`` leading round groups and the
     returned grads are accumulated over all ``M`` micro-batches (the
-    full-batch token-mean, same normalization as the single-round path)."""
+    full-batch token-mean, same normalization as the single-round path).
+    ``pool_dtype`` streams the resident pool quantized (int8/int4 codes +
+    scales, fused dequant at promote time); ``grad_compress="int8"``
+    switches the call to ``f(params, batch, residual) -> (grads, loss,
+    tokens, new_residual)`` with an UNPADDED pool-shaped fp32 residual."""
     rounds = None if n_microbatches is None else plan.rounds_for(n_microbatches)
     mapped, l_pad, _, _ = _build_mapped(
         cfg, mesh, plan, xent_chunk=xent_chunk, kv_chunk=kv_chunk,
         ring_grad_dtype=ring_grad_dtype, prefetch_program=prefetch_program,
-        lora=lora, rounds=rounds)
+        lora=lora, rounds=rounds, pool_dtype=pool_dtype,
+        grad_compress=grad_compress)
     n = axis_size(mesh, AXIS)
 
-    def grads_fn(params, batch):
+    def pad_rows(tree):
+        if l_pad == cfg.n_layers:
+            return tree
+        return jax.tree.map(
+            lambda a: jnp.pad(a, [(0, l_pad - cfg.n_layers)]
+                              + [(0, 0)] * (a.ndim - 1)), tree)
+
+    def grads_fn(params, batch, grad_residual=None):
         if rounds is not None:
             def split(x):
                 if x.shape[0] % n_microbatches:
@@ -1114,11 +1417,20 @@ def build_roundpipe_grads_fn(cfg: ModelConfig, mesh, plan, *,
                         f"n_microbatches {n_microbatches}")
                 return x.reshape(rounds, x.shape[0] // rounds, *x.shape[1:])
             batch = jax.tree.map(split, batch)
-        grads, loss, tokens = mapped(pad_pool(params, cfg, n), batch)
+        padded = pad_pool(params, cfg, n)
+        if grad_compress != "none":
+            grads, loss, tokens, res = mapped(padded, batch,
+                                              pad_rows(grad_residual))
+            if l_pad != cfg.n_layers:
+                res = jax.tree.map(lambda a: a[:cfg.n_layers], res)
+        else:
+            grads, loss, tokens = mapped(padded, batch)
         if l_pad != cfg.n_layers:
             grads = {k: jax.tree.map(lambda a: a[:cfg.n_layers], v)
                      if k in ("layers", "lora") else v
                      for k, v in grads.items()}
+        if grad_compress != "none":
+            return grads, loss, tokens, res
         return grads, loss, tokens
 
     return grads_fn
@@ -1126,7 +1438,7 @@ def build_roundpipe_grads_fn(cfg: ModelConfig, mesh, plan, *,
 
 def build_roundpipe_train_step(cfg: ModelConfig, mesh, step_cfg,
                                global_batch: int, seq_len: int, *,
-                               plan=None):
+                               plan=None, round_major: bool = False):
     """Compile the full roundpipe train step for ``plan`` (auto-derived from
     ``step_cfg.partition`` / the cost model when None).
 
@@ -1143,6 +1455,18 @@ def build_roundpipe_train_step(cfg: ModelConfig, mesh, step_cfg,
     executed as ``R`` stitched rounds per step (``plan.tick_table``),
     gradients accumulated across rounds before the single optimizer
     update.  ``None`` keeps the legacy one-round-per-step path.
+
+    ``round_major=True`` (multi-round only) changes the compiled batch
+    contract to the data pipeline's round-major layout ``(R, G/R, ...)``
+    (``DataConfig.rounds``): the step consumes the batch as-is — no
+    in-step reshape — and ``batch_shardings`` reflect the leading round
+    axis.  The default keeps the flat ``(G, ...)`` contract with the
+    legacy reshape.
+
+    ``step_cfg.pool_dtype`` ("int8"/"int4") streams the resident pool
+    quantized with fused dequant-on-upload; ``step_cfg.grad_compress``
+    ("int8") runs deposits through the error-feedback codec, with the
+    residual carried in ``state["opt"]["grad_residual"]``.
 
     Returns ``(step, state_shardings, batch_shardings, plan)`` — the returned
     plan is the exact object the step executes, so callers can simulate it
@@ -1168,11 +1492,17 @@ def build_roundpipe_train_step(cfg: ModelConfig, mesh, step_cfg,
         program = plan.prefetch_program(
             chunk_limit=getattr(step_cfg, "prefetch_chunk_limit", None))
     lora = getattr(step_cfg, "lora", None)
+    pool_dtype = getattr(step_cfg, "pool_dtype", "none")
+    grad_compress = getattr(step_cfg, "grad_compress", "none")
+    if round_major and rounds is None:
+        raise ValueError("round_major=True requires the multi-round path "
+                         "(set step_cfg.n_microbatches)")
 
     mapped, l_pad, pspecs, _ = _build_mapped(
         cfg, mesh, plan, xent_chunk=step_cfg.xent_chunk,
         kv_chunk=step_cfg.kv_chunk, ring_grad_dtype=step_cfg.accum_dtype,
-        prefetch_program=program, lora=lora, rounds=rounds)
+        prefetch_program=program, lora=lora, rounds=rounds,
+        pool_dtype=pool_dtype, grad_compress=grad_compress)
     if lora is None:
         ospecs = opt_state_specs(pspecs, step_cfg.opt)
     else:
@@ -1181,6 +1511,11 @@ def build_roundpipe_train_step(cfg: ModelConfig, mesh, step_cfg,
         ospecs = opt_state_specs(
             trainable_leaves(pspecs, lora_mod.param_mask(pspecs)),
             step_cfg.opt)
+    if grad_compress != "none":
+        # the error-feedback residual lives beside the Adam state, sharded
+        # like the pool it shadows (adapter pool under LoRA)
+        ospecs = dict(ospecs, grad_residual=(
+            pspecs["lora"] if lora is not None else pspecs["layers"]))
     state_specs = {"params": pspecs, "opt": ospecs}
 
     batch_abs = {}
@@ -1191,28 +1526,48 @@ def build_roundpipe_train_step(cfg: ModelConfig, mesh, step_cfg,
         batch_abs["tokens"] = jax.ShapeDtypeStruct((global_batch, seq_len),
                                                    jnp.int32)
     batch_abs["labels"] = jax.ShapeDtypeStruct((global_batch, seq_len), jnp.int32)
-    bspecs = jax.tree.map(
-        lambda leaf: P(AXIS, *([None] * (leaf.ndim - 1))), batch_abs)
+    if round_major:
+        # pipeline-native layout: the round split happened at emission time
+        batch_abs = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(
+                (rounds, s.shape[0] // rounds) + s.shape[1:], s.dtype),
+            batch_abs)
+        bspecs = jax.tree.map(
+            lambda leaf: P(None, AXIS, *([None] * (leaf.ndim - 2))),
+            batch_abs)
+    else:
+        bspecs = jax.tree.map(
+            lambda leaf: P(AXIS, *([None] * (leaf.ndim - 1))), batch_abs)
 
     def train_step(state, batch):
-        if rounds is not None:
+        if rounds is not None and not round_major:
             # flat (G, ...) -> (R, G/R, ...): round r owns micro-batch
-            # groups r*N..(r+1)*N-1 of the step (leading round axis)
+            # groups r*N..(r+1)*N-1 of the step (leading round axis).
+            # round_major batches arrive pre-shaped — no reshape at all.
             batch = jax.tree.map(
                 lambda x: x.reshape(rounds, x.shape[0] // rounds,
                                     *x.shape[1:]), batch)
-        grads, loss, tokens = mapped(state["params"], batch)
+        if grad_compress != "none":
+            opt_in = dict(state["opt"])
+            residual = opt_in.pop("grad_residual")
+            grads, loss, tokens, new_residual = mapped(
+                state["params"], batch, residual)
+        else:
+            opt_in = state["opt"]
+            grads, loss, tokens = mapped(state["params"], batch)
         if lora is None:
             new_params, new_opt, metrics = apply_updates(
-                state["opt"], grads, step_cfg.opt, param_like=state["params"])
+                opt_in, grads, step_cfg.opt, param_like=state["params"])
         else:
             # update the adapter leaves only; the frozen base passes through
             # bit-identical (no master copy, no moments, no decay)
             mask = lora_mod.param_mask(state["params"])
             trainable = trainable_leaves(state["params"], mask)
             new_tr, new_opt, metrics = apply_updates(
-                state["opt"], grads, step_cfg.opt, param_like=trainable)
+                opt_in, grads, step_cfg.opt, param_like=trainable)
             new_params = merge_trainable(state["params"], new_tr, mask)
+        if grad_compress != "none":
+            new_opt = dict(new_opt, grad_residual=new_residual)
         metrics = dict(metrics, loss=loss, tokens=tokens)
         return {"params": new_params, "opt": new_opt}, metrics
 
@@ -1254,8 +1609,15 @@ def build_roundpipe_async_train_step(cfg: ModelConfig, mesh, step_cfg,
     program per sub-step (staleness-0) — bit-identical to calling
     ``build_roundpipe_train_step``'s step ``steps_per_call`` times.
 
-    Frozen-base LoRA is not supported yet (the in-program optimizer
-    updates the dense pool); pass ``step_cfg.lora=None``.
+    ``step_cfg.lora`` selects the frozen-base variant: the in-program
+    optimizer updates the ADAPTER pool only, versioned staleness-1, while
+    the dense pool is read-only for the whole program (no cross-step dense
+    staleness at all — injections of any step may stream it freely).  The
+    result matches ``reference_staleness1`` restricted to the trainable
+    adapter leaves; the base passes through bit-identical.
+
+    The quantized resident pool (``step_cfg.pool_dtype``) and compressed
+    deposits (``step_cfg.grad_compress``) are synchronous-only for now.
 
     Returns ``(multi_step, state_shardings, batch_shardings, plan)``.
     """
@@ -1263,11 +1625,15 @@ def build_roundpipe_async_train_step(cfg: ModelConfig, mesh, step_cfg,
 
     if steps_per_call < 1:
         raise ValueError(f"steps_per_call must be >= 1, got {steps_per_call}")
-    if getattr(step_cfg, "lora", None) is not None:
+    if getattr(step_cfg, "pool_dtype", "none") != "none":
         raise ValueError(
-            "async optimizer + frozen-base LoRA is not supported: the "
-            "in-program host optimizer updates the dense pool — drop "
-            "StepConfig.lora or use the synchronous step")
+            "async optimizer + quantized pool is not supported yet: use "
+            "the synchronous step for pool_dtype != 'none'")
+    if getattr(step_cfg, "grad_compress", "none") != "none":
+        raise ValueError(
+            "async optimizer + compressed deposits is not supported yet: "
+            "use the synchronous step for grad_compress != 'none'")
+    lora = getattr(step_cfg, "lora", None)
     n = axis_size(mesh, AXIS)
     if global_batch % n:
         raise ValueError("global batch must divide the model axis")
@@ -1311,14 +1677,24 @@ def build_roundpipe_async_train_step(cfg: ModelConfig, mesh, step_cfg,
     l_pad = pool_rows(cfg, n)
 
     abstract = T.abstract_params(cfg)
+    if lora is not None:
+        abstract = dict(abstract, lora=lora_mod.adapter_abstract(cfg, lora))
     pspecs = roundpipe_param_specs(cfg, abstract)
-    ospecs = opt_state_specs(pspecs, step_cfg.opt)
+    if lora is None:
+        ospecs = opt_state_specs(pspecs, step_cfg.opt)
+    else:
+        # frozen base: the in-program optimizer state covers the adapter
+        # leaves only (the dense pool never updates inside the program)
+        ospecs = opt_state_specs(
+            trainable_leaves(pspecs, lora_mod.param_mask(pspecs)),
+            step_cfg.opt)
     state_specs = {"params": pspecs, "opt": ospecs}
     body = functools.partial(
         roundpipe_async_forward_backward, cfg=cfg, plan=plan, n_workers=n,
         l_pad=l_pad, steps=steps_per_call, rounds=rounds, opt_cfg=step_cfg.opt,
         xent_chunk=step_cfg.xent_chunk, kv_chunk=step_cfg.kv_chunk,
-        ring_grad_dtype=step_cfg.accum_dtype, prefetch_program=program)
+        ring_grad_dtype=step_cfg.accum_dtype, prefetch_program=program,
+        lora=lora)
 
     batch_abs = {}
     if cfg.frontend:
@@ -1372,7 +1748,11 @@ def init_roundpipe_state(key, cfg: ModelConfig, step_cfg,
 
     With ``step_cfg.lora`` the params gain a fresh adapter pool (zero-``B``,
     so step 0 computes exactly the base model) and the optimizer state
-    covers the adapter leaves only."""
+    covers the adapter leaves only.
+
+    With ``step_cfg.grad_compress`` the optimizer state carries the
+    error-feedback residual ``opt["grad_residual"]`` — fp32 zeros shaped
+    like the (padded) deposited pool."""
     params = T.init_params(key, cfg)
     lora = getattr(step_cfg, "lora", None)
     if lora is not None:
@@ -1386,4 +1766,8 @@ def init_roundpipe_state(key, cfg: ModelConfig, step_cfg,
         opt = init_opt_state(
             trainable_leaves(params, lora_mod.param_mask(params)),
             step_cfg.opt)
+    if getattr(step_cfg, "grad_compress", "none") != "none":
+        pool = params["lora"] if lora is not None else params["layers"]
+        opt = dict(opt, grad_residual=jax.tree.map(
+            lambda a: jnp.zeros(a.shape, jnp.float32), pool))
     return {"params": params, "opt": opt}

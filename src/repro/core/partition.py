@@ -37,12 +37,50 @@ class LayerCost:
     # deposit and the §4.3 optimizer-copy traffic.  None = every parameter
     # trains (downloads equal uploads, the full-fine-tune default).
     trainable_bytes: int | None = None
+    # Quantized-pool accounting: ``upload_bytes`` is the bytes that actually
+    # cross the up lane when the resident pool streams as a code+scale
+    # payload (dequantized on-device at promote-standby time).  None = the
+    # pool streams in compute precision (upload equals ``weight_bytes``).
+    # ``weight_bytes`` keeps the on-device / memory-cap semantics either way.
+    upload_bytes: int | None = None
 
     @property
     def download_bytes(self) -> int:
         """Per-step gradient/optimizer download traffic for this layer."""
         return self.weight_bytes if self.trainable_bytes is None \
             else self.trainable_bytes
+
+    @property
+    def upload_stream_bytes(self) -> int:
+        """Per-visit weight upload traffic: the quantized payload when the
+        pool is quantized, else the dense block."""
+        return self.weight_bytes if self.upload_bytes is None \
+            else self.upload_bytes
+
+
+# One fp32 scale per QUANT_BLOCK elements — must match
+# ``repro.kernels.dequant.QUANT_BLOCK`` (kept as a literal so the cost-model
+# layer stays jax-free).
+QUANT_BLOCK = 256
+POOL_DTYPE_BITS = {"int8": 8, "int4": 4}
+
+
+def quant_upload_bytes(n_elems: int, pool_dtype: str) -> int | None:
+    """Bytes of the code+scale payload for ``n_elems`` pool elements.
+
+    int8: one code byte per element; int4: two codes per byte; both plus one
+    fp32 scale per :data:`QUANT_BLOCK`-element block.  Codes are counted at
+    the block-padded length — exactly what the dispatch runtime ships.
+    ``pool_dtype`` of ``None``/``"none"`` returns None (dense streaming).
+    """
+    if pool_dtype in (None, "none"):
+        return None
+    if pool_dtype not in POOL_DTYPE_BITS:
+        raise ValueError(f"unknown pool_dtype {pool_dtype!r}; "
+                         f"expected none|{'|'.join(POOL_DTYPE_BITS)}")
+    nblocks = -(-n_elems // QUANT_BLOCK)
+    code_bytes = nblocks * QUANT_BLOCK * POOL_DTYPE_BITS[pool_dtype] // 8
+    return code_bytes + 4 * nblocks
 
 
 @dataclasses.dataclass(frozen=True)

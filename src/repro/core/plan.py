@@ -37,7 +37,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Sequence
 
-from .partition import LayerCost, Partition, auto_partition
+from .partition import (LayerCost, Partition, auto_partition,
+                        quant_upload_bytes)
 from .schedule import Schedule, roundpipe_schedule
 from .transfer import WindowPlan, plan_stage_transfers
 
@@ -139,7 +140,7 @@ class PrefetchProgram:
                 spans[cu.layer].append((cu.lo, cu.hi))
             for l, ranges in spans.items():
                 ranges.sort()
-                want = int(plan.layer_costs[l].weight_bytes)
+                want = int(plan.layer_costs[l].upload_stream_bytes)
                 pos = 0
                 for lo, hi in ranges:
                     if lo != pos:
@@ -211,12 +212,15 @@ class ExecutionPlan:
         """Per-slot weight UPLOAD bytes (body layers + head when fused
         carries it) — what the two-resource simulator charges against the
         host->GPU direction of the link.  Frozen-base (LoRA) plans upload
-        the same dense blocks; only downloads shrink."""
+        the same dense blocks; only downloads shrink.  Quantized-pool plans
+        (``LayerCost.upload_bytes`` set) charge the code+scale payload the
+        uploader actually streams instead of the dense block."""
         out = []
         for s in self.stages:
-            b = sum(int(self.layer_costs[l].weight_bytes) for l in s.layers)
+            b = sum(int(self.layer_costs[l].upload_stream_bytes)
+                    for l in s.layers)
             if s.includes_head:
-                b += int(self.layer_costs[-1].weight_bytes)
+                b += int(self.layer_costs[-1].upload_stream_bytes)
             out.append(b)
         return tuple(out)
 
@@ -337,14 +341,14 @@ class ExecutionPlan:
         m = n_windows or self.n_workers
         plans = []
         for stage in self.stages:
-            names = {f"layer{l}": int(self.layer_costs[l].weight_bytes)
+            names = {f"layer{l}": int(self.layer_costs[l].upload_stream_bytes)
                      for l in stage.layers}
             down = None
             if include_downloads and stage.kind != "F":
                 down = {f"layer{l}": int(self.layer_costs[l].download_bytes)
                         for l in stage.layers}
             if stage.includes_head:
-                names["lm_head"] = int(self.layer_costs[-1].weight_bytes)
+                names["lm_head"] = int(self.layer_costs[-1].upload_stream_bytes)
                 if down is not None:
                     down["lm_head"] = int(self.layer_costs[-1].download_bytes)
             plans.append(plan_stage_transfers(
@@ -377,10 +381,10 @@ class ExecutionPlan:
                     if parent in row_of:
                         row, layer = row_of[parent]
                         owner, pool_row = divmod(layer, per)
-                        pbytes = int(self.layer_costs[layer].weight_bytes)
+                        pbytes = int(self.layer_costs[layer].upload_stream_bytes)
                     else:                     # replicated LM head: budget only
                         row = layer = owner = pool_row = -1
-                        pbytes = int(self.layer_costs[-1].weight_bytes)
+                        pbytes = int(self.layer_costs[-1].upload_stream_bytes)
                     table.append(ChunkUpload(
                         slot=stage.slot, window=w, name=c.name, layer=layer,
                         row=row, owner=owner, pool_row=pool_row,
@@ -511,7 +515,8 @@ def uniform_partition(n_layers: int, *, fwd_cost: float = 1.0,
 
 def default_layer_costs(cfg, *, head_stage: bool = True,
                         grad_ratio: float = 2.0,
-                        lora=None) -> list[LayerCost]:
+                        lora=None,
+                        pool_dtype: str = "none") -> list[LayerCost]:
     """Cost model derived from the architecture: per-layer cost proportional
     to its parameter count (flops proxy at fixed batch), head pseudo-layer
     proportional to ``d_model * vocab_size``.  Weight bytes assume bf16.
@@ -520,7 +525,12 @@ def default_layer_costs(cfg, *, head_stage: bool = True,
     frozen-base split byte accounting: uploads stay dense (the ring still
     carries full blocks) but ``trainable_bytes`` — the gradient-deposit and
     optimizer-copy download traffic — shrinks to the adapter factors, and
-    the frozen LM head downloads nothing."""
+    the frozen LM head downloads nothing.
+
+    ``pool_dtype`` (``"int8"`` | ``"int4"``) switches body-layer uploads to
+    the quantized code+scale payload (``LayerCost.upload_bytes``); the
+    replicated LM head is never ring-streamed, so its budget entry stays at
+    the dense bytes either way."""
     import numpy as np
 
     from repro.models import transformer as T
@@ -534,8 +544,9 @@ def default_layer_costs(cfg, *, head_stage: bool = True,
     if lora is not None:
         from repro.models.lora import adapter_params_per_layer
         trainable = 2 * adapter_params_per_layer(cfg, lora)
+    upload = quant_upload_bytes(layer_params, pool_dtype)
     out = [LayerCost(1.0, grad_ratio, weight_bytes=2 * layer_params,
-                     trainable_bytes=trainable)
+                     trainable_bytes=trainable, upload_bytes=upload)
            for _ in range(cfg.n_layers)]
     if head_stage:
         head_params = cfg.d_model * cfg.vocab_size
@@ -550,7 +561,8 @@ def plan_from_config(cfg, n_workers: int, *,
                      partition: Partition | None = None,
                      head_stage: bool | None = None,
                      mem_cap_bytes: float = float("inf"),
-                     lora=None) -> ExecutionPlan:
+                     lora=None,
+                     pool_dtype: str = "none") -> ExecutionPlan:
     """The default plan for ``StepConfig(strategy="roundpipe")``: build the
     architecture's cost model, auto-partition it (paper §4.4) unless an
     explicit :class:`Partition` is given, and compile.
@@ -564,11 +576,16 @@ def plan_from_config(cfg, n_workers: int, *,
     model so ``stage_download_bytes`` (and the two-resource simulation)
     reflect adapter-only gradient traffic; the partition itself is
     unchanged — compute costs and uploads are identical either way.
+
+    ``pool_dtype`` likewise only changes byte accounting
+    (``stage_bytes`` / prefetch budgets charge the quantized payload);
+    the partition still packs against dense ``weight_bytes`` memory.
     """
     if head_stage is None:
         head_stage = True if partition is None else \
             partition.bwd_stages[0][-1] == cfg.n_layers
-    costs = default_layer_costs(cfg, head_stage=head_stage, lora=lora)
+    costs = default_layer_costs(cfg, head_stage=head_stage, lora=lora,
+                                pool_dtype=pool_dtype)
     if partition is None:
         partition = auto_partition(
             costs, n_devices=n_workers,

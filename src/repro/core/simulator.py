@@ -111,14 +111,19 @@ class SimResult:
 def _list_schedule(schedule: Schedule, stage_bytes=None, *,
                    bandwidth: float = 0.0,
                    transfer_mode: str = "prefetch",
-                   download_bytes=None) -> SimResult:
+                   download_bytes=None,
+                   standby_cache: bool = False) -> SimResult:
     """List-schedule the tasks: fixed per-device order, dep-gated start times.
 
     With ``stage_bytes`` and ``bandwidth``, the first task of every
     contiguous same-stage run on a device additionally waits on that
     device's transfer lane (see module docstring).  A contiguous run is one
     slot visit — in RoundPipe each slot visits a device once per round, so
-    each visit re-streams the slot's weights.
+    each visit re-streams the slot's weights.  ``standby_cache=True``
+    models a device that pins each slot's weights after the first visit:
+    repeat visits of a stage already seen on that device charge zero upload
+    bytes (the memory-for-bandwidth trade a multi-round step can make when
+    the standby buffers fit residency).
 
     ``download_bytes[slot]`` adds the return direction on the same link:
     a slot visit's gradient bytes occupy the lane after the visit produces
@@ -126,7 +131,8 @@ def _list_schedule(schedule: Schedule, stage_bytes=None, *,
     visit's upload (everything queues at the boundary); in prefetch mode
     the next upload streams during the finishing visit's compute window —
     before its gradients exist — so the upload keeps lane priority and the
-    download fills in behind it.
+    download fills in behind it.  Downloads are never cached: gradients
+    are fresh every visit.
     """
     per_dev: dict[int, list[StageTask]] = defaultdict(list)
     for t in schedule.tasks:
@@ -138,6 +144,7 @@ def _list_schedule(schedule: Schedule, stage_bytes=None, *,
     transfer_busy = [0.0] * schedule.n_devices
     transfer_stall = [0.0] * schedule.n_devices
     download_busy = [0.0] * schedule.n_devices
+    resident: dict[int, set] = defaultdict(set)   # device -> cached stages
     finish: dict = {}
     start: dict = {}
     dev_of: dict = {}
@@ -168,7 +175,9 @@ def _list_schedule(schedule: Schedule, stage_bytes=None, *,
                 new_group = ptr[d] == 0 or tasks[ptr[d] - 1].stage != t.stage
                 if new_group and ptr[d] > 0 and transfer_mode == "block":
                     settle_download(d, tasks[ptr[d] - 1].stage)
-                if stage_bytes is not None and bandwidth > 0 and new_group:
+                cached = standby_cache and t.stage in resident[d]
+                if stage_bytes is not None and bandwidth > 0 and new_group \
+                        and not cached:
                     dur = stage_bytes[t.stage] / bandwidth
                     if transfer_mode == "block":
                         # head-of-line: lane starts only on compute demand
@@ -186,6 +195,7 @@ def _list_schedule(schedule: Schedule, stage_bytes=None, *,
                     settle_download(d, tasks[ptr[d] - 1].stage)
                 if new_group:
                     group_open[d] = begin
+                    resident[d].add(t.stage)
                 start[t.key] = begin
                 finish[t.key] = begin + t.duration
                 dev_of[t.key] = d
@@ -214,26 +224,31 @@ def simulate(schedule: Schedule) -> SimResult:
 
 def simulate_transfers(schedule: Schedule, stage_bytes, *, bandwidth: float,
                        transfer_mode: str = "prefetch",
-                       download_bytes=None) -> SimResult:
+                       download_bytes=None,
+                       standby_cache: bool = False) -> SimResult:
     """Two-resource simulation: ``stage_bytes[slot]`` weight bytes must cross
     a per-device link of ``bandwidth`` bytes/time-unit before each slot visit
     (see module docstring for the block/prefetch lane policies).
     ``download_bytes[slot]`` (optional) charges each visit's gradient
-    deposit on the same lane after the visit completes."""
+    deposit on the same lane after the visit completes.  ``standby_cache``
+    waives the upload charge on repeat visits of a stage already streamed
+    to that device (weights pinned across rounds)."""
     if transfer_mode not in ("block", "prefetch"):
         raise ValueError(f"unknown transfer_mode {transfer_mode!r}")
     if bandwidth <= 0:
         raise ValueError("bandwidth must be positive")
     return _list_schedule(schedule, stage_bytes, bandwidth=bandwidth,
                           transfer_mode=transfer_mode,
-                          download_bytes=download_bytes)
+                          download_bytes=download_bytes,
+                          standby_cache=standby_cache)
 
 
 def simulate_plan(plan, n_microbatches: int | None = None, *,
                   round_size: int | None = None,
                   iterations: int = 1,
                   bandwidth: float | None = None,
-                  transfer_mode: str = "prefetch") -> SimResult:
+                  transfer_mode: str = "prefetch",
+                  standby_cache: bool = False) -> SimResult:
     """Validate and simulate an :class:`~repro.core.plan.ExecutionPlan`.
 
     The schedule is generated from the *same* compiled plan the dispatch
@@ -261,6 +276,11 @@ def simulate_plan(plan, n_microbatches: int | None = None, *,
     and each backward slot's ``plan.stage_download_bytes`` fills the return
     direction of the lane after the visit — adapter-sized under a
     frozen-base LoRA plan, weight-sized under full fine-tuning.
+
+    ``standby_cache=True`` charges each slot's upload only on its FIRST
+    visit to a device: a multi-round (or multi-iteration) step that can
+    afford to pin the standby blocks stops re-streaming them, trading
+    device memory for the up lane.  Downloads still post every visit.
     """
     from .schedule import validate
 
@@ -272,7 +292,8 @@ def simulate_plan(plan, n_microbatches: int | None = None, *,
         return simulate(sched)
     return simulate_transfers(sched, plan.stage_bytes, bandwidth=bandwidth,
                               transfer_mode=transfer_mode,
-                              download_bytes=plan.stage_download_bytes)
+                              download_bytes=plan.stage_download_bytes,
+                              standby_cache=standby_cache)
 
 
 def steady_state_bubble(schedule: Schedule, iteration: int = 1) -> float:

@@ -22,6 +22,17 @@ class DataConfig:
     seed: int = 0
     pad_id: int = 0
     ignore_index: int = -100
+    # > 0: emit batches in RoundPipe's round-major layout (R, B/R, S) —
+    # round r owns samples r*B/R..(r+1)*B/R-1 of the same stream, exactly
+    # the split the compiled step used to perform with an in-step reshape
+    # (sample-identical to the flat layout by construction).  0 = flat (B, S).
+    rounds: int = 0
+
+    def __post_init__(self):
+        if self.rounds and self.global_batch % self.rounds:
+            raise ValueError(
+                f"global_batch {self.global_batch} not divisible by "
+                f"rounds {self.rounds}")
 
 
 class SyntheticLMDataset:
@@ -35,7 +46,9 @@ class SyntheticLMDataset:
         self._probs = probs / probs.sum()
 
     def batch(self, step: int) -> dict:
-        """Returns {tokens (B,S) int32, labels (B,S) int32} for ``step``."""
+        """Returns {tokens, labels} int32 for ``step``: (B, S) flat, or the
+        round-major (R, B/R, S) when ``cfg.rounds`` is set (same samples in
+        the same order — only the leading axis is factored)."""
         cfg = self.cfg
         rng = np.random.default_rng(np.random.SeedSequence([cfg.seed, step]))
         toks = rng.choice(cfg.vocab_size - 1, p=self._probs,
@@ -47,13 +60,23 @@ class SyntheticLMDataset:
         labels = toks[:, 1:].astype(np.int32)
         # don't predict across document starts
         labels = np.where(tokens == cfg.pad_id, cfg.ignore_index, labels)
-        return {"tokens": tokens, "labels": labels}
+        out = {"tokens": tokens, "labels": labels}
+        if cfg.rounds:
+            out = {k: v.reshape(cfg.rounds, cfg.global_batch // cfg.rounds,
+                                cfg.seq_len) for k, v in out.items()}
+        return out
 
     def host_shard(self, step: int, host_index: int, n_hosts: int) -> dict:
-        """The per-host slice of the global batch (multi-host loading)."""
+        """The per-host slice of the global batch (multi-host loading).
+        Round-major batches slice the PER-ROUND batch dim — every host sees
+        every round, holding its slice of each round's samples (the dim the
+        step shards over the mesh)."""
         b = self.batch(step)
-        per = self.cfg.global_batch // n_hosts
+        dim = 1 if self.cfg.rounds else 0
+        per = b["tokens"].shape[dim] // n_hosts
         sl = slice(host_index * per, (host_index + 1) * per)
+        if self.cfg.rounds:
+            return {k: v[:, sl] for k, v in b.items()}
         return {k: v[sl] for k, v in b.items()}
 
 

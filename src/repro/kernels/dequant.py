@@ -1,0 +1,123 @@
+"""Fused dequant-on-upload (Pallas): rebuild the standby buffer in compute
+precision straight from the quantized stream.
+
+The resident pool crosses PCIe as blockwise-absmax codes (int8, or two int4
+nibbles per byte for the frozen-base LoRA path) plus one fp32 scale per
+``QUANT_BLOCK`` elements.  The kernel fuses the widen-and-rescale into the
+standby promote, so the quantized payload never round-trips through a
+separately materialised fp32 copy: codes stream VMEM-block by VMEM-block and
+leave as compute-precision rows.
+
+Quantization itself (host master -> codes) happens once per step on the pool
+shard and is pure jnp — it is not on the per-tick critical path.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+QUANT_BLOCK = 256      # elements per scale (matches optim.compress.BLOCK)
+INT8_QMAX = 127.0
+INT4_QMAX = 7.0        # symmetric signed nibbles in [-7, 7]
+
+
+# ---------------------------------------------------------------------------
+# Quantize (pure jnp — once per step, off the tick loop)
+# ---------------------------------------------------------------------------
+
+def quantize_rows(rows, *, bits: int = 8, block: int = QUANT_BLOCK):
+    """rows: (R, E) float -> (codes, scales).
+
+    codes: (R, ceil(E/block)*block) int8 for ``bits=8``, or the int4-packed
+    (R, ceil(E/block)*block // 2) uint8 pair-of-nibbles layout for ``bits=4``.
+    scales: (R, ceil(E/block)) fp32, per-block absmax / qmax, clamped >=1e-12
+    so all-zero blocks stay exact.
+    """
+    if bits not in (8, 4):
+        raise ValueError(f"unsupported pool quantization bits: {bits}")
+    r, e = rows.shape
+    nb = -(-e // block)
+    flat = jnp.pad(rows.astype(jnp.float32), ((0, 0), (0, nb * block - e)))
+    blocks = flat.reshape(r, nb, block)
+    qmax = INT8_QMAX if bits == 8 else INT4_QMAX
+    scale = jnp.maximum(jnp.max(jnp.abs(blocks), axis=2) / qmax, 1e-12)
+    codes = jnp.clip(jnp.round(blocks / scale[..., None]),
+                     -qmax, qmax).astype(jnp.int8)
+    codes = codes.reshape(r, nb * block)
+    if bits == 4:
+        codes = pack_int4(codes)
+    return codes, scale
+
+
+def pack_int4(codes):
+    """int8 codes in [-8, 7], even last dim -> uint8 nibble pairs.
+
+    Element 2i lands in the low nibble of byte i, element 2i+1 in the high
+    nibble — the order :func:`unpack_int4` (and the kernel) restores."""
+    u = (codes.astype(jnp.int32) & 0xF).astype(jnp.uint8)
+    lo, hi = u[..., 0::2], u[..., 1::2]
+    return lo | (hi << 4)
+
+
+def _widen_nibble(n):
+    """[0, 15] nibble -> signed int32 in [-8, 7] (two's complement)."""
+    n = n.astype(jnp.int32)
+    return n - 16 * (n >> 3)
+
+
+def unpack_int4(packed):
+    """uint8 nibble pairs -> int8 codes, inverse of :func:`pack_int4`."""
+    p = packed.astype(jnp.int32)
+    lo, hi = _widen_nibble(p & 0xF), _widen_nibble((p >> 4) & 0xF)
+    pair = jnp.stack([lo, hi], axis=-1)
+    return pair.reshape(*packed.shape[:-1], packed.shape[-1] * 2).astype(jnp.int8)
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernels: codes + scales -> compute-precision rows
+# ---------------------------------------------------------------------------
+
+def _dequant8_kernel(codes_ref, scale_ref, out_ref, *, out_dtype):
+    # codes (1, block), scale (1, 1): widen, rescale, cast — one fused pass
+    x = codes_ref[...].astype(jnp.float32) * scale_ref[...].astype(jnp.float32)
+    out_ref[...] = x.astype(out_dtype)
+
+
+def _dequant4_kernel(packed_ref, scale_ref, out_ref, *, out_dtype):
+    p = packed_ref[...].astype(jnp.int32)                  # (1, block // 2)
+    lo, hi = _widen_nibble(p & 0xF), _widen_nibble((p >> 4) & 0xF)
+    pair = jnp.stack([lo, hi], axis=-1)                    # (1, block//2, 2)
+    vals = pair.reshape(p.shape[0], p.shape[1] * 2).astype(jnp.float32)
+    out_ref[...] = (vals * scale_ref[...].astype(jnp.float32)).astype(out_dtype)
+
+
+def dequant_rows(codes, scales, *, block: int = QUANT_BLOCK,
+                 out_dtype=jnp.float32, interpret: bool = False):
+    """(codes, scales) from :func:`quantize_rows` -> (R, nb*block) rows.
+
+    codes int8 selects the 8-bit kernel; uint8 the packed-int4 kernel (the
+    storage dtype IS the format tag).  Grid is (rows, blocks): each program
+    dequantizes one scale-block of one row.
+    """
+    r, nb = scales.shape
+    packed = codes.dtype == jnp.uint8
+    code_cols = block // 2 if packed else block
+    if codes.shape != (r, nb * code_cols):
+        raise ValueError(f"codes {codes.shape} do not match scales {scales.shape} "
+                         f"with block={block}")
+    kernel = functools.partial(
+        _dequant4_kernel if packed else _dequant8_kernel, out_dtype=out_dtype)
+    return pl.pallas_call(
+        kernel,
+        grid=(r, nb),
+        in_specs=[
+            pl.BlockSpec((1, code_cols), lambda ri, bi: (ri, bi)),
+            pl.BlockSpec((1, 1), lambda ri, bi: (ri, bi)),
+        ],
+        out_specs=pl.BlockSpec((1, block), lambda ri, bi: (ri, bi)),
+        out_shape=jax.ShapeDtypeStruct((r, nb * block), out_dtype),
+        interpret=interpret,
+    )(codes, scales)

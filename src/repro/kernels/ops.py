@@ -13,6 +13,7 @@ import jax.numpy as jnp
 
 from . import ref
 from .decode_attention import decode_attention as _decode_pallas
+from .dequant import dequant_rows as _dequant_pallas
 from .flash_attention import flash_attention as _flash_pallas
 from .fused_xent import fused_xent as _xent_pallas
 from .rwkv_scan import rwkv_scan as _rwkv_pallas
@@ -52,6 +53,21 @@ def fused_xent(x, w, labels, *, use_pallas=_ON_TPU, interpret=not _ON_TPU,
     if use_pallas:
         return _xent_pallas(x, w, labels, block_t, block_v, interpret)
     return ref.fused_xent_ref(x, w, labels)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "out_dtype",
+                                             "use_pallas", "interpret"))
+def dequant_rows(codes, scales, *, block=256, out_dtype=jnp.float32,
+                 use_pallas=_ON_TPU, interpret=not _ON_TPU):
+    """Fused dequant-on-upload: blockwise-absmax codes + scales -> rows.
+
+    ``codes.dtype`` tags the format: int8 = one code per element, uint8 = two
+    int4 nibbles per byte (the frozen-base LoRA pool).  Output is the standby
+    row in compute precision — no intermediate fp32 materialization pass."""
+    if use_pallas:
+        return _dequant_pallas(codes, scales, block=block, out_dtype=out_dtype,
+                               interpret=interpret)
+    return ref.dequant_rows_ref(codes, scales, block=block).astype(out_dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("use_pallas", "interpret", "chunk"))

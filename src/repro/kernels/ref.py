@@ -59,6 +59,19 @@ def fused_xent_ref(x, w, labels):
     return lse - gold
 
 
+def dequant_rows_ref(codes, scales, *, block=256):
+    """(R, nb*block) int8 codes or (R, nb*block//2) uint8 nibble pairs, with
+    (R, nb) fp32 per-block scales -> (R, nb*block) fp32 rows."""
+    if codes.dtype == jnp.uint8:
+        p = codes.astype(jnp.int32)
+        lo, hi = p & 0xF, (p >> 4) & 0xF
+        lo, hi = lo - 16 * (lo >> 3), hi - 16 * (hi >> 3)
+        codes = jnp.stack([lo, hi], axis=-1).reshape(codes.shape[0], -1)
+    r, nb = scales.shape
+    blocks = codes.reshape(r, nb, block).astype(jnp.float32)
+    return (blocks * scales[..., None]).reshape(r, nb * block)
+
+
 def rwkv_scan_ref(r, k, v, w, u, s0):
     """r,k,v,w: (B,S,H,N) fp32; u: (H,N); s0: (B,H,N,N).
     y_t = r_t · (diag(u) k_t v_t^T + S_{t-1});  S_t = diag(w_t) S_{t-1} + k_t v_t^T

@@ -65,6 +65,15 @@ class StepConfig:
     # (N-1)/(R*S+N-1) -> 0), accumulating gradients across rounds.  None ->
     # the legacy one-round (M = N) path.
     n_microbatches: Optional[int] = None
+    # roundpipe only: stream the resident pool QUANTIZED ("int8"/"int4"
+    # per-block absmax codes + fp32 scales) and dequantize on-device at
+    # promote-standby time (kernels/dequant.py).  Host master weights stay
+    # fp32; "none" streams the dense pool bit-identically to before.
+    pool_dtype: str = "none"
+    # roundpipe only: run gradient deposits through the int8 error-feedback
+    # codec (optim/compress.py) — the residual lives beside the Adam state
+    # in ``state["opt"]["grad_residual"]``.  "none" = exact fp32 deposits.
+    grad_compress: str = "none"
     opt: OptConfig = dataclasses.field(default_factory=OptConfig)
 
 
@@ -142,7 +151,8 @@ def _dp_size(mesh):
 # ---------------------------------------------------------------------------
 
 def build_train_step(cfg: ModelConfig, mesh, step_cfg: StepConfig,
-                     global_batch: int, seq_len: int):
+                     global_batch: int, seq_len: int, *,
+                     round_major: bool = False):
     """Returns (train_step, state_shardings, batch_shardings).
 
     train_step(state, batch) -> (state, metrics); state donated.
@@ -152,12 +162,19 @@ def build_train_step(cfg: ModelConfig, mesh, step_cfg: StepConfig,
     the staleness-1 async roundpipe regime chains K steps per call and so
     lives behind ``repro.core.dispatch.build_roundpipe_async_train_step``
     (see ``StepConfig.async_optimizer``).
+
+    ``round_major=True`` (roundpipe multi-round only) compiles the step
+    against the data pipeline's round-major ``(R, G/R, ...)`` batch layout
+    (``DataConfig.rounds``) so no in-step reshape runs.
     """
     if step_cfg.strategy == "roundpipe":
         from repro.core.dispatch import build_roundpipe_train_step
         step, state_sh, batch_sh, _plan = build_roundpipe_train_step(
-            cfg, mesh, step_cfg, global_batch, seq_len)
+            cfg, mesh, step_cfg, global_batch, seq_len,
+            round_major=round_major)
         return step, state_sh, batch_sh
+    if round_major:
+        raise ValueError("round_major batches are a roundpipe-only layout")
     if step_cfg.lora is not None:
         raise ValueError(
             "StepConfig.lora requires strategy='roundpipe' — the frozen-base "

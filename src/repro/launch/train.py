@@ -49,6 +49,19 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--lora-alpha", type=float, default=16.0)
     ap.add_argument("--lora-targets", default="attn,mlp",
                     help="comma-separated module paths the adapters decorate")
+    ap.add_argument("--pool-dtype", default="none",
+                    choices=["none", "int8", "int4"],
+                    help="roundpipe only: stream the resident pool QUANTIZED "
+                         "(blockwise-absmax codes + fp32 scales, fused "
+                         "dequant-on-upload at promote time).  Host master "
+                         "weights stay full precision; int4 targets the "
+                         "frozen-base LoRA pool.  Sync steps only")
+    ap.add_argument("--grad-compress", default="none",
+                    choices=["none", "int8"],
+                    help="roundpipe only: int8 error-feedback compressed "
+                         "gradient deposits (optim/compress.py); the "
+                         "residual rides in the optimizer state.  Sync "
+                         "steps only")
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
     ap.add_argument("--ckpt-every", "--save-every", type=int, default=50,
@@ -62,7 +75,9 @@ def build_parser() -> argparse.ArgumentParser:
                          "--async-steps optimizer steps chain back-to-back "
                          "in one ring program (fill/drain paid once per "
                          "chain).  Errors for strategies that cannot "
-                         "support it and for --lora-rank")
+                         "support it.  Combines with --lora-rank: the "
+                         "frozen base makes the dense pool read-only, so "
+                         "only the adapter ring versions staleness-1")
     ap.add_argument("--async-steps", type=int, default=4,
                     help="roundpipe + --async-opt only: optimizer steps "
                          "chained per program call (the I of the "
@@ -123,11 +138,23 @@ def run_training(args) -> dict:
             f"--async-opt is not supported under --strategy {args.strategy}: "
             f"the staleness-1 update needs either the gspmd in-step pending-"
             f"grad path or the roundpipe cross-step chained program")
-    if async_rp and lora_cfg is not None:
+    # --async-opt + --lora-rank is allowed: the frozen base never updates,
+    # so the dense pool is read-only across the chain and only the adapter
+    # ring needs staleness-1 versioning (proven against the staleness-1
+    # LoRA oracle in roundpipe_subprocess.py async-lora)
+    if args.pool_dtype != "none" and args.strategy != "roundpipe":
+        raise SystemExit("--pool-dtype requires --strategy roundpipe")
+    if args.grad_compress != "none" and args.strategy != "roundpipe":
+        raise SystemExit("--grad-compress requires --strategy roundpipe")
+    if async_rp and args.pool_dtype != "none":
         raise SystemExit(
-            "--async-opt cannot combine with --lora-rank: the chained "
-            "program's in-program optimizer updates the dense pool, not "
-            "the frozen-base adapter ring — drop one of the two flags")
+            "--async-opt cannot combine with --pool-dtype: the quantized "
+            "pool is synchronous-only for now — drop one of the two flags")
+    if async_rp and args.grad_compress != "none":
+        raise SystemExit(
+            "--async-opt cannot combine with --grad-compress: compressed "
+            "deposits are synchronous-only for now — drop one of the two "
+            "flags")
     if async_rp and args.async_steps < 1:
         raise SystemExit("--async-steps must be >= 1")
     if async_rp and args.steps % args.async_steps:
@@ -146,9 +173,10 @@ def run_training(args) -> dict:
         if args.partition == "uniform":
             plan = plan_from_config(
                 cfg, n_model, partition=uniform_partition(cfg.n_layers),
-                lora=lora_cfg)
+                lora=lora_cfg, pool_dtype=args.pool_dtype)
         else:
-            plan = plan_from_config(cfg, n_model, lora=lora_cfg)
+            plan = plan_from_config(cfg, n_model, lora=lora_cfg,
+                                    pool_dtype=args.pool_dtype)
         m_sim = microbatches or n_model
         r_sim = plan.rounds_for(m_sim)
         sim = simulate_plan(plan, m_sim, round_size=n_model)
@@ -170,6 +198,14 @@ def run_training(args) -> dict:
             print(f"LoRA r={lora_cfg.rank}: upload {up / 2**20:.1f} MiB/step, "
                   f"grad download {down / 2**20:.3f} MiB/step "
                   f"(full fine-tune would download {full_down / 2**20:.1f} MiB)")
+        if args.pool_dtype != "none":
+            dense = plan_from_config(cfg, n_model, partition=plan.partition,
+                                     lora=lora_cfg)
+            q_up = sum(plan.stage_bytes) * r_sim
+            d_up = sum(dense.stage_bytes) * r_sim
+            print(f"quantized pool ({args.pool_dtype}): upload "
+                  f"{q_up / 2**20:.1f} MiB/step ({q_up / d_up:.3f}x of the "
+                  f"dense {d_up / 2**20:.1f} MiB)")
     step_cfg = StepConfig(strategy=args.strategy, grad_accum=1,
                           async_optimizer=args.async_opt,
                           sequence_parallel=n_model > 1,
@@ -178,8 +214,17 @@ def run_training(args) -> dict:
                           partition=plan,
                           lora=lora_cfg,
                           n_microbatches=microbatches,
+                          pool_dtype=args.pool_dtype,
+                          grad_compress=args.grad_compress,
                           opt=OptConfig(lr=args.lr))
-    data = SyntheticLMDataset(DataConfig(cfg.vocab_size, args.seq, args.batch))
+    # round-major pipeline (DataConfig.rounds): multi-round synchronous
+    # roundpipe consumes (R, G/R, ...) batches straight from the dataset —
+    # the compiled step drops its in-step reshape (sample-identical split)
+    rounds_data = 0
+    if args.strategy == "roundpipe" and microbatches and not async_rp:
+        rounds_data = plan.rounds_for(microbatches)
+    data = SyntheticLMDataset(DataConfig(cfg.vocab_size, args.seq, args.batch,
+                                         rounds=rounds_data))
 
     resumed_from = latest_step(args.ckpt_dir)
     if resumed_from is not None:
@@ -196,8 +241,9 @@ def run_training(args) -> dict:
                 cfg, mesh, step_cfg, args.batch, args.seq,
                 steps_per_call=args.async_steps, plan=plan)
         else:
-            step, state_sh, _ = build_train_step(cfg, mesh, step_cfg,
-                                                 args.batch, args.seq)
+            step, state_sh, _ = build_train_step(
+                cfg, mesh, step_cfg, args.batch, args.seq,
+                round_major=rounds_data > 0)
         if args.strategy == "roundpipe":
             from repro.core.dispatch import init_roundpipe_state
             init = lambda: jax.device_put(

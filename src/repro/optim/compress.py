@@ -8,6 +8,8 @@ optimizer state.  Used by ``train_step`` when ``compress_pod_grads=True``.
 """
 from __future__ import annotations
 
+import math
+
 import jax
 import jax.numpy as jnp
 
@@ -32,8 +34,11 @@ def compress_int8(g, residual=None):
 
 
 def decompress_int8(codes, scale, shape):
+    # shape is a static python tuple: size it eagerly so the slice stays
+    # concrete under jit tracing (jnp.prod would stage a tracer here)
+    n = math.prod(int(s) for s in shape)
     deq = codes.astype(jnp.float32) * scale[:, None]
-    return deq.reshape(-1)[: int(jnp.prod(jnp.array(shape)))].reshape(shape)
+    return deq.reshape(-1)[:n].reshape(shape)
 
 
 def psum_compressed(g, axis_name, residual=None):

@@ -27,6 +27,21 @@ mode:
              BIT-identical to the legacy single-round path
   rounds-lora — the same R-sweep with a frozen base: R-round accumulated
              adapter grads vs the merged-dense full-batch reference
+  quant    — quantized resident pool with fused dequant-on-upload on the
+             uneven 7-layer/4-worker auto plan: the int8 ring must match a
+             single-program reference on the int8-DEQUANTIZED weights
+             near-exactly (and the fp32 reference within quantization
+             tolerance), the chunked code+scale prefetch path must be
+             BIT-identical to the whole-block quant gather, the int4
+             frozen-base LoRA ring must match merged-dense references on
+             the dequantized and fp32 bases, and error-feedback int8
+             deposits (grad_compress) must converge to the exact grads as
+             the residual telescopes over repeated steps
+  async-lora — cross-step staleness-1 chained program with a FROZEN base:
+             the dense pool is read-only (bit-identical across the chain)
+             while the adapter ring versions staleness-1; the final
+             adapter pool must allclose reference_staleness1 restricted to
+             the adapters (and separate from the staleness-0 trajectory)
   async    — cross-step staleness-1 chained program (paper §4.3) on the
              uneven 7-layer/4-worker auto plan: I optimizer steps executed
              back-to-back in ONE ring program (fill/drain paid once per
@@ -64,9 +79,9 @@ LORA_CFG = None  # set in main() for mode == "lora"
 
 
 def make_plan(mode: str, cfg, n_workers: int):
-    if mode in ("prefetch", "rounds", "async"):
+    if mode in ("prefetch", "rounds", "async", "quant"):
         return plan_from_config(cfg, n_workers)
-    if mode in ("lora", "rounds-lora"):
+    if mode in ("lora", "rounds-lora", "async-lora"):
         return plan_from_config(cfg, n_workers, lora=LORA_CFG)
     if mode == "uniform":
         part = uniform_partition(cfg.n_layers)
@@ -93,12 +108,13 @@ def main():
     arch = sys.argv[1] if len(sys.argv) > 1 else "qwen3-1.7b"
     mode = sys.argv[2] if len(sys.argv) > 2 else "uniform"
     n_layers = int(sys.argv[3]) if len(sys.argv) > 3 else \
-        (6 if mode == "uneven" else 8)
+        (6 if mode == "uneven" else
+         7 if mode in ("quant", "async-lora") else 8)
     cfg = smoke_config(get_config(arch))
     cfg = dataclasses.replace(cfg, n_layers=n_layers, name=cfg.name + "-rp")
     n_model = 4
     mesh = jax.make_mesh((2, n_model), ("data", "model"))
-    if mode in ("lora", "rounds-lora"):
+    if mode in ("lora", "rounds-lora", "quant", "async-lora"):
         from repro.models.lora import LoraConfig
         LORA_CFG = LoraConfig(rank=4, alpha=8.0)
 
@@ -118,6 +134,9 @@ def main():
     if mode == "async":
         run_async(cfg, mesh, plan, params, b, s)
         return
+    if mode == "async-lora":
+        run_async_lora(cfg, mesh, plan, params, b, s)
+        return
     if cfg.frontend:
         batch = {"embeds": jax.random.normal(key, (b, s, cfg.d_model), jnp.float32)}
     else:
@@ -127,6 +146,9 @@ def main():
 
     if mode == "lora":
         run_lora(cfg, mesh, plan, params, batch, b, s)
+        return
+    if mode == "quant":
+        run_quant(cfg, mesh, plan, params, batch, b, s)
         return
 
     # ---- reference loss & grads (single program, no pipeline) ---------------
@@ -501,6 +523,344 @@ def run_async(cfg, mesh, plan, params, b, s):
             assert err_host < 5e-3, err_host
             np.testing.assert_allclose(np.asarray(host.losses),
                                        np.asarray(ref_losses), rtol=1e-4)
+    print("ROUNDPIPE_DISPATCH_OK")
+
+
+def _dequantize_pool(layers_tree, bits):
+    """What the dispatch runtime's quantize->ship->dequant round trip does
+    to the pool, replicated host-side: per layer row, flatten + concat the
+    leaves (dispatch's pool_cat layout — blocks SPAN leaf boundaries),
+    blockwise-absmax quantize, fused dequant, split back."""
+    from repro.kernels import ops as kops
+    from repro.kernels.dequant import quantize_rows
+
+    leaves, tdef = jax.tree_util.tree_flatten(layers_tree)
+    rows = leaves[0].shape[0]
+    cat = jnp.concatenate(
+        [l.reshape(rows, -1).astype(jnp.float32) for l in leaves], axis=1)
+    codes, scales = quantize_rows(cat, bits=bits)
+    flat = kops.dequant_rows(codes, scales)[:, :cat.shape[1]]
+    out, off = [], 0
+    for l in leaves:
+        ne = int(np.prod(l.shape[1:]))
+        out.append(flat[:, off:off + ne].reshape(l.shape).astype(l.dtype))
+        off += ne
+    return jax.tree_util.tree_unflatten(tdef, out)
+
+
+def _worst_rel_tree(ref_tree, got_tree, label=""):
+    worst = 0.0
+    for (ka, va), (kb, vb) in zip(
+            jax.tree_util.tree_flatten_with_path(ref_tree)[0],
+            jax.tree_util.tree_flatten_with_path(got_tree)[0]):
+        assert ka == kb
+        rv = np.asarray(va, np.float32)
+        gv = np.asarray(vb, np.float32)
+        err = np.abs(gv - rv).max() / (np.abs(rv).max() + 1e-6)
+        if err > worst:
+            worst = err
+    return worst
+
+
+def run_quant(cfg, mesh, plan, params, batch, b, s):
+    """Quantized resident pool + error-feedback deposits (ISSUE 6 tentpole).
+
+    * byte accounting: the int8 / int4 plans' stage upload budgets shrink
+      to the code+scale payload (~0.508x / ~0.258x of the dense bf16
+      bytes on body stages; the replicated LM head stays dense)
+    * int8 ring vs the single-program reference on the int8-DEQUANTIZED
+      weights: tight (the ring is bit-faithful to deq(quant(W))), plus a
+      quantization-tolerance check against the fp32 reference
+    * chunked code+scale prefetch (forced row splits) vs the whole-block
+      quant gather: BIT-identical standby reassembly
+    * int4 frozen-base LoRA vs merged-dense references on the dequantized
+      base (tight) and the fp32 base (tolerance)
+    * grad_compress="int8": single-shot deposits stay within the codec's
+      worst-case bar, and the K-step mean with the carried residual
+      converges BELOW the single-shot error (the error-feedback property)
+    """
+    from repro.core.partition import quant_upload_bytes
+    from repro.models import lora
+
+    n = plan.n_workers
+
+    # ---- plan byte accounting ----------------------------------------------
+    q8_plan = plan_from_config(cfg, n, pool_dtype="int8")
+    q4_plan = plan_from_config(cfg, n, lora=LORA_CFG, pool_dtype="int4")
+    dense_up = sum(plan.stage_bytes)
+    q8_up = sum(q8_plan.stage_bytes)
+    q4_up = sum(q4_plan.stage_bytes)
+    assert 0 < q4_up < q8_up < dense_up, (q4_up, q8_up, dense_up)
+    body = int(plan.layer_costs[0].weight_bytes)
+    assert int(q8_plan.layer_costs[0].upload_stream_bytes) == \
+        quant_upload_bytes(body // 2, "int8")
+    print(f"upload bytes/step: dense {dense_up}  int8 {q8_up} "
+          f"({q8_up / dense_up:.3f}x)  int4 {q4_up} ({q4_up / dense_up:.3f}x)")
+
+    # ---- int8 ring vs dequantized-weights reference (tight) ----------------
+    params_dq8 = dict(params, layers=_dequantize_pool(params["layers"], 8))
+
+    def ref_loss8(p):
+        return T.loss_fn(p, batch, cfg, remat=False, xent_chunk=8, kv_chunk=8)
+
+    dq_l, dq_g = jax.value_and_grad(ref_loss8)(params_dq8)
+    fp_l, fp_g = jax.value_and_grad(ref_loss8)(params)
+
+    qfn = build_roundpipe_grads_fn(cfg, mesh, q8_plan, xent_chunk=8,
+                                   kv_chunk=8, pool_dtype="int8")
+    with mesh:
+        q_g, q_loss, q_tokens = jax.jit(qfn)(params, batch)
+    assert int(q_tokens) == b * s
+    np.testing.assert_allclose(float(q_loss), float(dq_l), rtol=1e-4)
+    tight = _worst_rel_tree(dq_g, q_g)
+    print(f"int8 ring vs dequantized-weights reference: worst rel {tight:.2e}")
+    assert tight < 5e-3, tight
+    # quantization-tolerance bar vs the fp32 reference (DESIGN.md §7)
+    loose = _worst_rel_tree(fp_g, q_g)
+    print(f"int8 ring vs fp32 reference: worst rel {loose:.2e} "
+          f"(loss {float(q_loss):.6f} vs {float(fp_l):.6f})")
+    np.testing.assert_allclose(float(q_loss), float(fp_l), rtol=5e-2)
+    assert loose < 0.25, loose
+
+    # ---- chunked code+scale prefetch == whole-block quant gather, bitwise --
+    biggest = max(int(c.upload_stream_bytes)
+                  for c in q8_plan.layer_costs[:q8_plan.n_layers])
+    program = q8_plan.prefetch_program(chunk_limit=max(1, biggest // 3))
+    n_chunks = sum(1 for t in program.uploads for cu in t if cu.row >= 0)
+    assert n_chunks > q8_plan.n_layers, "row chunk splitting did not engage"
+    pf_fn = build_roundpipe_grads_fn(cfg, mesh, q8_plan, xent_chunk=8,
+                                     kv_chunk=8, pool_dtype="int8",
+                                     prefetch_program=program)
+    with mesh:
+        pf_g, pf_loss, _ = jax.jit(pf_fn)(params, batch)
+    assert np.asarray(pf_loss).tobytes() == np.asarray(q_loss).tobytes()
+    for (ka, va), (kb, vb) in zip(
+            jax.tree_util.tree_flatten_with_path(q_g)[0],
+            jax.tree_util.tree_flatten_with_path(pf_g)[0]):
+        assert ka == kb
+        np.testing.assert_array_equal(
+            np.asarray(va), np.asarray(vb),
+            err_msg=f"quant prefetch not bit-identical to whole-block at "
+                    f"{jax.tree_util.keystr(ka)}")
+    print(f"quant prefetch bit-identical to whole-block "
+          f"({n_chunks} code-chunk uploads)")
+
+    # ---- int4 frozen-base LoRA ---------------------------------------------
+    adapters = lora.init_adapters(jax.random.PRNGKey(3), params["layers"],
+                                  LORA_CFG, dtype=jnp.float32)
+    adapters = jax.tree.map(
+        lambda a: jax.random.normal(jax.random.PRNGKey(4), a.shape, a.dtype)
+        * 0.05, adapters)
+    params_dq4 = dict(params, layers=_dequantize_pool(params["layers"], 4))
+
+    def lora_ref(base):
+        def f(ad):
+            merged = lora.merge_params(base, ad, LORA_CFG)
+            return T.loss_fn(merged, batch, cfg, remat=False, xent_chunk=8,
+                             kv_chunk=8)
+        return jax.value_and_grad(f)(adapters)
+
+    dq4_l, dq4_g = lora_ref(params_dq4)
+    fp4_l, fp4_g = lora_ref(params)
+    l4fn = build_roundpipe_grads_fn(cfg, mesh, q4_plan, xent_chunk=8,
+                                    kv_chunk=8, lora=LORA_CFG,
+                                    pool_dtype="int4")
+    with mesh:
+        l4_g, l4_loss, _ = jax.jit(l4fn)(dict(params, lora=adapters), batch)
+    assert set(l4_g) == {"lora"}, set(l4_g)
+    np.testing.assert_allclose(float(l4_loss), float(dq4_l), rtol=1e-4)
+    tight4 = _worst_rel_tree(dq4_g, l4_g["lora"])
+    print(f"int4 LoRA ring vs dequantized-base reference: "
+          f"worst rel {tight4:.2e}")
+    assert tight4 < 5e-3, tight4
+    # tolerance vs the fp32 base is dominated by how well the BASE weights
+    # quantize (random smoke init is the worst case — real checkpoints are
+    # far smoother): the binding check is the loss bar; the adapter-grad
+    # gap is printed for the record with only a sanity ceiling
+    loose4 = _worst_rel_tree(fp4_g, l4_g["lora"])
+    print(f"int4 LoRA ring vs fp32-base reference: worst rel {loose4:.2e} "
+          f"(loss {float(l4_loss):.6f} vs {float(fp4_l):.6f})")
+    np.testing.assert_allclose(float(l4_loss), float(fp4_l), rtol=1e-1)
+    assert loose4 < 2.5, loose4
+
+    # ---- error-feedback compressed deposits --------------------------------
+    exact_fn = build_roundpipe_grads_fn(cfg, mesh, plan, xent_chunk=8,
+                                        kv_chunk=8)
+    cfn = build_roundpipe_grads_fn(cfg, mesh, plan, xent_chunk=8, kv_chunk=8,
+                                   grad_compress="int8")
+    with mesh:
+        ex_g, ex_loss, _ = jax.jit(exact_fn)(params, batch)
+        jcfn = jax.jit(cfn)
+        residual = jax.tree.map(
+            lambda a: jnp.zeros(a.shape, jnp.float32), params["layers"])
+        sums, k_steps = None, 4
+        for _ in range(k_steps):
+            c_g, c_loss, _, residual = jcfn(params, batch, residual)
+            sums = c_g if sums is None else jax.tree.map(
+                jnp.add, sums, c_g)
+            if sums is c_g:
+                first_err = _worst_rel_tree(ex_g["layers"], c_g["layers"])
+    mean_g = jax.tree.map(lambda a: a / k_steps, sums)
+    mean_err = _worst_rel_tree(ex_g["layers"], mean_g["layers"])
+    # forward compute is untouched: deposits happen after the loss
+    assert np.asarray(c_loss).tobytes() == np.asarray(ex_loss).tobytes()
+    # replicated grads never cross the down lane, so they see no codec
+    # error — but the compressed build is a structurally different XLA
+    # program (extra residual I/O, three deposit hops, quantize ops), so
+    # fusion/scheduling may reorder their independent float math by last
+    # bits.  Hold them to reassociation-level tolerance, not bit equality.
+    rep_err = max(_worst_rel_tree(ex_g[k], c_g[k])
+                  for k in ("embed", "final_norm"))
+    assert rep_err < 1e-5, rep_err
+    res_norm = float(sum(
+        jnp.abs(l).sum() for l in jax.tree_util.tree_leaves(residual)))
+    print(f"compressed deposits: single-shot worst rel {first_err:.2e}, "
+          f"{k_steps}-step mean {mean_err:.2e}, residual L1 {res_norm:.3e}")
+    assert first_err < 8e-3, first_err           # int8 codec worst case
+    assert mean_err < first_err / 2, (mean_err, first_err)
+    assert res_norm > 0.0
+
+    # ---- quant pool + compressed deposits compose --------------------------
+    qc_fn = build_roundpipe_grads_fn(cfg, mesh, q8_plan, xent_chunk=8,
+                                     kv_chunk=8, pool_dtype="int8",
+                                     grad_compress="int8")
+    residual = jax.tree.map(
+        lambda a: jnp.zeros(a.shape, jnp.float32), params["layers"])
+    with mesh:
+        qc_g, qc_loss, _, residual = jax.jit(qc_fn)(params, batch, residual)
+    assert np.asarray(qc_loss).tobytes() == np.asarray(q_loss).tobytes()
+    both = _worst_rel_tree(dq_g["layers"], qc_g["layers"])
+    print(f"int8 pool + int8 deposits vs dequantized reference: "
+          f"worst rel {both:.2e}")
+    assert both < 1.5e-2, both
+    print("ROUNDPIPE_DISPATCH_OK")
+
+
+def run_async_lora(cfg, mesh, plan, params, b, s):
+    """Cross-step staleness-1 async optimizer with a FROZEN base (satellite
+    of ISSUE 6): the dense pool is read-only for the whole chained program
+    — there is no cross-step dense-weight staleness, which is exactly why
+    the launcher's --async-opt + --lora-rank refusal could be lifted — and
+    only the adapter ring versions staleness-1.  The final adapter pool
+    must allclose ``reference_staleness1`` restricted to the adapters, the
+    dense pool must come back BIT-identical, and the trajectory must
+    separate from the staleness-0 (synchronous) oracle."""
+    import functools
+
+    from repro.core.consistency import reference_staleness1
+    from repro.core.dispatch import (build_roundpipe_async_train_step,
+                                     pad_pool)
+    from repro.launch.steps import StepConfig
+    from repro.models import lora as lora_mod
+    from repro.optim import OptConfig, init_opt_state, trainable_leaves
+    from repro.optim.adam import apply_updates
+
+    n = plan.n_workers
+    ocfg = OptConfig(lr=1e-2)            # big enough that staleness shows
+    key = jax.random.PRNGKey(7)
+    lcfg = LORA_CFG
+
+    adapters = lora_mod.init_adapters(jax.random.PRNGKey(3),
+                                      params["layers"], lcfg,
+                                      dtype=jnp.float32)
+    adapters = jax.tree.map(
+        lambda a: jax.random.normal(jax.random.PRNGKey(4), a.shape, a.dtype)
+        * 0.05, adapters)
+    params_l = dict(params, lora=adapters)
+
+    def fresh_state(sh):
+        padded = jax.tree.map(lambda x: jnp.array(x, copy=True),
+                              pad_pool(params_l, cfg, n))
+        opt = init_opt_state(
+            trainable_leaves(padded, lora_mod.param_mask(padded)), ocfg)
+        return jax.device_put({"params": padded, "opt": opt}, sh)
+
+    def worst_rel(a_tree, b_tree):
+        return _worst_rel_tree(b_tree, a_tree)
+
+    for rounds, steps, prefetch in ((1, 3, False), (2, 2, True)):
+        m = rounds * n
+        kb = jax.random.fold_in(key, rounds)
+        batches = {
+            "tokens": jax.random.randint(kb, (steps, b, s), 0,
+                                         cfg.vocab_size),
+            "labels": jax.random.randint(jax.random.fold_in(kb, 1),
+                                         (steps, b, s), 0, cfg.vocab_size)}
+
+        def batch_of(t):
+            return jax.tree.map(lambda x: x[t], batches)
+
+        def loss_of(ad, t):
+            merged = lora_mod.merge_params(params, ad, lcfg)
+            return T.loss_fn(merged, batch_of(t), cfg, remat=False,
+                             xent_chunk=8, kv_chunk=8)
+
+        # ---- staleness-1 oracle over the adapters only ---------------------
+        ref_losses = []
+        opt_cell = {"opt": init_opt_state(adapters, ocfg)}
+
+        def device_fn(weights, t):
+            loss, grads = jax.value_and_grad(
+                functools.partial(loss_of, t=t))(weights[0])
+            ref_losses.append(float(loss))
+            return [grads]
+
+        def optimizer_fn(opt_w, staged, t):
+            new_a, opt_cell["opt"], _ = apply_updates(
+                opt_cell["opt"], staged[0], ocfg, param_like=adapters)
+            return [new_a]
+
+        ref_final = reference_staleness1(1, device_fn, optimizer_fn,
+                                         [adapters], steps)[0]
+
+        # staleness-0 oracle, for distinguishability
+        a_sync, opt_sync = adapters, init_opt_state(adapters, ocfg)
+        for t in range(steps):
+            _, grads = jax.value_and_grad(
+                functools.partial(loss_of, t=t))(a_sync)
+            a_sync, opt_sync, _ = apply_updates(opt_sync, grads, ocfg,
+                                                param_like=adapters)
+
+        # ---- the chained frozen-base program -------------------------------
+        step_cfg = StepConfig(strategy="roundpipe", grad_accum=1,
+                              partition=plan, n_microbatches=m,
+                              prefetch=prefetch, kv_chunk=8, xent_chunk=8,
+                              lora=lcfg, opt=ocfg)
+        multi, state_sh, _, _ = build_roundpipe_async_train_step(
+            cfg, mesh, step_cfg, b, s, steps_per_call=steps, plan=plan)
+        state0 = fresh_state(state_sh)
+        with mesh:
+            state1, metrics = multi(state0, batches)
+
+        # frozen base: the dense pool and replicated params are READ-ONLY
+        p0 = pad_pool(params_l, cfg, n)
+        for name in ("layers", "embed", "final_norm"):
+            if name not in state1["params"]:
+                continue
+            for (ka, va), (kb_, vb) in zip(
+                    jax.tree_util.tree_flatten_with_path(p0[name])[0],
+                    jax.tree_util.tree_flatten_with_path(
+                        state1["params"][name])[0]):
+                assert ka == kb_
+                np.testing.assert_array_equal(
+                    np.asarray(va), np.asarray(vb),
+                    err_msg=f"frozen {name} mutated at "
+                            f"{jax.tree_util.keystr(ka)}")
+
+        got = jax.tree.map(lambda a: a[:cfg.n_layers],
+                           state1["params"]["lora"])
+        err_s1 = worst_rel(got, ref_final)
+        err_s0 = worst_rel(got, a_sync)
+        sep = worst_rel(ref_final, a_sync)
+        print(f"R={rounds} I={steps} prefetch={prefetch}: adapter err vs "
+              f"staleness-1 {err_s1:.2e}, vs staleness-0 {err_s0:.2e} "
+              f"(oracle separation {sep:.2e})")
+        np.testing.assert_allclose(np.asarray(metrics["loss"]),
+                                   np.asarray(ref_losses), rtol=1e-4)
+        assert err_s1 < 5e-3, err_s1
+        assert sep > 10 * max(err_s1, 1e-9), (sep, err_s1)
+        assert err_s0 > 5 * err_s1, (err_s0, err_s1)
+        assert int(metrics["step"]) == steps
     print("ROUNDPIPE_DISPATCH_OK")
 
 

@@ -84,3 +84,39 @@ def test_pure_dp_variant_compiles():
             step.lower(state, batch).compile()
             print("COMPILED")
     """)
+
+
+def test_roundpipe_round_major_matches_flat():
+    """ISSUE 6 satellite: compiling against the pipeline's round-major
+    (R, G/R, S) batches (no in-step reshape) must be numerically identical
+    to the flat path reshaping the same stream in-step."""
+    run_py("""
+        import numpy as np
+        from repro.core.dispatch import init_roundpipe_state
+        from repro.data import DataConfig, SyntheticLMDataset
+        cfg = smoke_config(get_config("qwen3-1.7b"))
+        scfg = StepConfig(strategy="roundpipe", n_microbatches=8,
+                          kv_chunk=8, xent_chunk=8)
+        B, S = 8, 16
+        with mesh:
+            step_f, ssh, _ = build_train_step(cfg, mesh, scfg, B, S)
+            step_r, _, _ = build_train_step(cfg, mesh, scfg, B, S,
+                                            round_major=True)
+            state = jax.device_put(
+                init_roundpipe_state(jax.random.PRNGKey(0), cfg, scfg,
+                                     n_workers=4), ssh)
+            R = 2      # 8 microbatches / 4 workers
+            flat = SyntheticLMDataset(DataConfig(cfg.vocab_size, S, B, seed=3))
+            rm = SyntheticLMDataset(DataConfig(cfg.vocab_size, S, B, seed=3,
+                                               rounds=R))
+            sf = jax.tree.map(jnp.copy, state)       # real copy: steps donate
+            sr = state
+            for step in range(2):
+                sf, mf = step_f(sf, flat.batch(step))
+                sr, mr = step_r(sr, rm.batch(step))
+                assert np.asarray(mf["loss"]).tobytes() == \\
+                    np.asarray(mr["loss"]).tobytes(), (mf, mr)
+            for a, b in zip(jax.tree.leaves(sf), jax.tree.leaves(sr)):
+                np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+            print("ROUND_MAJOR_OK")
+    """)

@@ -103,3 +103,24 @@ def test_dispatch_lora_matches_merged_dense():
     must hold ONLY adapter leaves, and the compiled LoRA plan's download
     bytes must be strictly below the full-fine-tune plan's."""
     _run("qwen3-1.7b", "lora", n_layers=7)
+
+
+def test_dispatch_quant_pool_matches_reference():
+    """Quantized resident pool (ISSUE 6 tentpole): int8 per-block-absmax
+    streaming with fused dequant-on-upload must track dequantize(quantize(W))
+    run dense to ~float tolerance (the codec IS the only perturbation), the
+    chunked code+scale prefetch must be BIT-identical to the whole-block
+    quant gather, the 4-bit packed frozen base must track its dequantized
+    reference under LoRA, plan byte accounting must match
+    quant_upload_bytes exactly, and the error-feedback int8 deposit must
+    telescope (mean error halves vs single-shot over K=4 repeats)."""
+    _run("qwen3-1.7b", "quant", n_layers=7)
+
+
+def test_dispatch_async_lora_matches_staleness1():
+    """Async + frozen-base LoRA (ISSUE 6 satellite): the dense pool never
+    versions (base frozen), so only the adapter ring carries staleness-1
+    state — the chained program must per-leaf allclose the staleness-1
+    oracle run over adapters with a merged-dense device fn, separate from
+    staleness-0, and return base leaves bit-identical to init."""
+    _run("qwen3-1.7b", "async-lora", n_layers=7)
