@@ -1,0 +1,79 @@
+#!/usr/bin/env python3
+"""Static single-definition gate for the ring machine (CI docs job, no jax).
+
+The schedule-IR refactor's structural guarantee: every ring helper —
+upload/promote/stage/ring-hop/deposit and the accumulator families — is
+defined EXACTLY once, in ``src/repro/core/ring.py``.  Before the refactor
+the sync and async dispatch bodies each carried their own copy of these
+helpers; this gate makes that regression impossible to reintroduce
+silently.
+
+Mechanically: parse ring.py, collect every function/method it defines
+(its public surface plus internals, minus dunders), then AST-walk every
+other module under ``src/repro/core/`` and fail if any of those names is
+defined again — a second ``def stage_fwd`` anywhere in the core layer is
+a duplicated ring helper, wherever it hides (nested function, method,
+lambda-free redefinition).
+
+Usage: python scripts/check_ring_dedup.py [repo_root]   (exit 1 on dupes)
+"""
+from __future__ import annotations
+
+import ast
+import sys
+from pathlib import Path
+
+
+def defined_names(tree: ast.AST):
+    """Every (name, lineno) bound by def/async def anywhere in the tree."""
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            yield node.name, node.lineno
+
+
+def main() -> int:
+    root = Path(sys.argv[1]) if len(sys.argv) > 1 else \
+        Path(__file__).resolve().parents[1]
+    core = root / "src" / "repro" / "core"
+    ring = core / "ring.py"
+    if not ring.is_file():
+        print(f"::error::{ring} missing — the ring machine moved?")
+        return 1
+
+    # the gate covers ring.py's SURFACE: module-level functions and direct
+    # methods of its classes — not nested closure names like a scan `body`,
+    # which are anonymous implementation detail and collide by accident
+    ring_tree = ast.parse(ring.read_text())
+    helpers = set()
+    for node in ring_tree.body:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            helpers.add(node.name)
+        elif isinstance(node, ast.ClassDef):
+            for sub in node.body:
+                if isinstance(sub, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    helpers.add(sub.name)
+    helpers = {h for h in helpers if not h.startswith("__")}
+    if not helpers:
+        print("::error::ring.py defines no helpers — parse problem?")
+        return 1
+
+    problems = []
+    for mod in sorted(core.glob("*.py")):
+        if mod == ring:
+            continue
+        for name, lineno in defined_names(ast.parse(mod.read_text())):
+            if name in helpers:
+                problems.append(
+                    f"{mod.relative_to(root)}:{lineno}: '{name}' duplicates "
+                    f"a ring helper (defined once in src/repro/core/ring.py)")
+
+    for p in problems:
+        print(f"::error::{p}")
+    if not problems:
+        print(f"ring dedup OK: {len(helpers)} helper names defined only in "
+              f"ring.py")
+    return 1 if problems else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

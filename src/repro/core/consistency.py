@@ -209,7 +209,8 @@ class AsyncTrainer:
         return self.master
 
 
-def verify_async_ticks(plan, rounds: int = 1, iterations: int = 1) -> None:
+def verify_async_ticks(plan, rounds: int = 1, iterations: int = 1,
+                       program=None) -> None:
     """Certify that a cross-step tick table satisfies the five §4.3
     constraints, by deterministic replay through a real
     :class:`ConsistencyProtocol`.
@@ -230,6 +231,13 @@ def verify_async_ticks(plan, rounds: int = 1, iterations: int = 1) -> None:
     site per step, replayed strictly in step order).  Raises ``ValueError``
     naming the first violated constraint — e.g. when ``R·S < N - 1`` and
     step T's injection would overtake step T-2's gradient drain.
+
+    ``program`` (a :class:`~repro.core.schedule.TickProgram`) additionally
+    cross-checks the generated IR against the replay: every record's
+    ``entry``/``inject_step``/``deposit``/``update_step``/``upload``
+    annotation must name exactly the event the protocol replay derives at
+    that tick — the certification gate a generated schedule passes before
+    the dispatch drivers execute it.
     """
     n, s = plan.n_workers, plan.n_slots
     rs = rounds * s
@@ -243,26 +251,60 @@ def verify_async_ticks(plan, rounds: int = 1, iterations: int = 1) -> None:
             f"layer {layer} step {step} is not yet permitted "
             f"(rounds={rounds}, iterations={iterations}, N={n}, S={s})")
 
+    def drift(tick, field, got, want):
+        raise ValueError(
+            f"tick program drift at tick {tick}: record.{field} = {got!r} "
+            f"but the protocol replay derives {want!r} "
+            f"(rounds={rounds}, iterations={iterations}, N={n}, S={s})")
+
+    if program is not None:
+        if (program.n_workers, program.n_slots) != (n, s) or \
+                (program.rounds, program.iterations) != (rounds, iterations):
+            raise ValueError(
+                f"tick program shape ({program.n_workers}, {program.n_slots},"
+                f" R={program.rounds}, I={program.iterations}) does not match"
+                f" plan ({n}, {s}, R={rounds}, I={iterations})")
+        if len(program.records) != len(table):
+            raise ValueError(
+                f"tick program has {len(program.records)} records, the "
+                f"stitched table has {len(table)} ticks")
+
     for t, entry in enumerate(table):
+        rec = program.records[t] if program is not None else None
+        if rec is not None and rec.entry != entry:
+            drift(t, "entry", rec.entry, entry)
         if entry is not None:                      # injection (master upload)
             g_round, slot = entry
             step, r = divmod(g_round, rounds)
+            if rec is not None and rec.inject_step != step:
+                drift(t, "inject_step", rec.inject_step, step)
             for lid in plan.stages[slot].layers:
                 if r == 0 and not proto.may_param_upload(lid, step):
                     fail(2, "param upload", lid, step, t)
                 if r == rounds - 1:
                     proto.after_param_upload(lid, step)
+        elif rec is not None and rec.inject_step is not None:
+            drift(t, "inject_step", rec.inject_step, None)
+        if rec is not None:                        # standby upload for t+1
+            nxt = table[t + 1] if t + 1 < len(table) else None
+            want_up = None if nxt is None else (nxt[1], nxt[0] // rounds)
+            if rec.upload != want_up:
+                drift(t, "upload", rec.upload, want_up)
         g = t - (n - 1)                            # gradient deposit (exit)
+        dep_slot = None
+        upd_step = None
         if 0 <= g < iterations * rs:
             step, within = divmod(g, rs)
             r, slot = divmod(within, s)
             if plan.stages[slot].kind != "F":
+                dep_slot = slot
                 for lid in plan.stages[slot].layers:
                     if r == 0 and not proto.may_grad_download(lid, step):
                         fail(4, "grad download", lid, step, t)
                     if r == rounds - 1:
                         proto.after_grad_download(lid, step)
             if within == rs - 1:                   # D_step: host update site
+                upd_step = step
                 for lid in range(plan.n_layers):
                     if not proto.may_g_copy(lid, step):
                         fail(3, "G-copy", lid, step, t)
@@ -276,6 +318,11 @@ def verify_async_ticks(plan, rounds: int = 1, iterations: int = 1) -> None:
                     if not proto.may_p_copy(lid, step, double_buffered=True):
                         fail(1, "P-copy", lid, step, t)
                     proto.after_p_copy(lid, step)
+        if rec is not None:
+            if rec.deposit != dep_slot:
+                drift(t, "deposit", rec.deposit, dep_slot)
+            if rec.update_step != upd_step:
+                drift(t, "update_step", rec.update_step, upd_step)
     if last_update != iterations - 1:
         raise ValueError(f"only {last_update + 1} of {iterations} optimizer "
                          f"updates were reached by the tick table")

@@ -92,40 +92,42 @@ recomputation from per-worker stashed boundaries (§2.1.1).
 from __future__ import annotations
 
 import functools
-import itertools
-import math
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.compat import shard_map
-from repro.core.partition import POOL_DTYPE_BITS
-from repro.kernels import ops as kops
-from repro.kernels.dequant import quantize_rows
+from repro.core.ring import (AXIS, ParityAccum, RingMachine, StepAccum,
+                             block_row, gbuf_add, ring_add, zeros_block)
 from repro.models import lora as lora_mod
 from repro.models import transformer as T
 from repro.models.config import ModelConfig
-from repro.models.layers import apply_norm
 from repro.optim import (apply_updates, init_opt_state, merge_trainable,
                          opt_state_specs, trainable_leaves)
-from repro.optim.compress import compress_int8, decompress_int8
 from repro.launch.mesh import axis_size
 
-AXIS = "model"
 
-
-def _shift_perm(n):
-    return [(i, (i + 1) % n) for i in range(n - 1)]  # open ring: N-1 drops off
-
-
-def _ring_add(tree_a, tree_b):
-    return jax.tree.map(jnp.add, tree_a, tree_b)
-
-
-def _zeros_block(layers_local, depth):
-    return jax.tree.map(
-        lambda a: jnp.zeros((depth,) + a.shape[1:], a.dtype), layers_local)
+def _check_program(program, plan, rounds: int, iterations: int):
+    """Validate an externally supplied tick program against the plan before
+    a driver unrolls it: shape fields must match and the injection order
+    must be exactly the plan's round-stitched tick_table (the drivers
+    contain no scheduling arithmetic — a wrong program would silently
+    execute a wrong schedule)."""
+    if (program.n_workers != plan.n_workers
+            or program.n_slots != plan.n_slots
+            or program.rounds != rounds
+            or program.iterations != iterations):
+        raise ValueError(
+            f"tick program shaped (N={program.n_workers}, "
+            f"S={program.n_slots}, R={program.rounds}, "
+            f"I={program.iterations}) does not match plan "
+            f"(N={plan.n_workers}, S={plan.n_slots}) at R={rounds}, "
+            f"I={iterations}")
+    if program.entries != plan.tick_table(rounds, iterations):
+        raise ValueError("tick program injection order does not match the "
+                         "plan's round-stitched tick_table")
+    return program
 
 
 def roundpipe_forward_backward(params, batch, worker_id, grad_residual=None,
@@ -135,8 +137,16 @@ def roundpipe_forward_backward(params, batch, worker_id, grad_residual=None,
                                ring_grad_dtype=jnp.float32,
                                prefetch_program=None, lora=None,
                                rounds=None, pool_dtype: str = "none",
-                               grad_compress: str = "none"):
-    """Inside-shard_map body: returns (grads pytree, loss_sum, token_count).
+                               grad_compress: str = "none",
+                               tick_program=None):
+    """Synchronous driver: unrolls a :class:`~repro.core.schedule.TickProgram`
+    over the shared :class:`~repro.core.ring.RingMachine` (source pool = the
+    live pool, accumulators = the per-step family) and returns
+    (grads pytree, loss_sum, token_count).
+
+    ``tick_program`` optionally supplies the generated schedule IR to
+    execute (validated against the plan); ``None`` generates
+    ``plan.tick_program(rounds or 1)`` — the same records either way.
 
     ``params['layers']`` leaves arrive LOCAL: (l_pad/N, ...) — this worker's
     pool shard (zero-padded rows beyond ``cfg.n_layers``).  ``batch`` arrives
@@ -186,7 +196,6 @@ def roundpipe_forward_backward(params, batch, worker_id, grad_residual=None,
     multi = rounds is not None
     r_total = rounds if multi else 1
     l_total = cfg.n_layers
-    per = l_pad // n
     # worker id from a P(AXIS)-sharded iota input rather than axis_index —
     # the latter lowers to PartitionId, unsupported under partial-auto SPMD
     # on older JAX (see repro.compat).
@@ -200,6 +209,14 @@ def roundpipe_forward_backward(params, batch, worker_id, grad_residual=None,
     live = r_total * s_total               # ticks with a slot on the ring
 
     pool = params["layers"]
+    rm = RingMachine(cfg=cfg, plan=plan, n_workers=n, l_pad=l_pad,
+                     worker_id=worker_id, pool_template=pool,
+                     xent_chunk=xent_chunk, kv_chunk=kv_chunk,
+                     prefetch_program=prefetch_program, pool_dtype=pool_dtype)
+    A = StepAccum                          # per-step accumulator family
+    pslot = None                           # ignored by the per-step family
+    program = (_check_program(tick_program, plan, r_total, 1)
+               if tick_program is not None else plan.tick_program(r_total))
     head_w = T.lm_head_weights(params, cfg)
     tokens = batch.get("tokens")
     labels = batch["labels"]
@@ -218,162 +235,36 @@ def roundpipe_forward_backward(params, batch, worker_id, grad_residual=None,
     sizes_arr = jnp.array([s.size for s in slots] + [0], jnp.int32)
 
     # ---- tick-state ---------------------------------------------------------
-    ring = _zeros_block(pool, kmax)                        # traveling weights
+    ring = zeros_block(pool, kmax)                         # traveling weights
     # traveling gradients: fp32 for exactness; bf16 (§Perf C1b) halves the
     # dominant dispatch traffic (hop count <= N keeps the error ~2^-8).
     # Frozen-base mode: the buffer is ADAPTER-shaped — the ring traffic and
     # the deposit shrink to trainable size, base grads never exist.
     grad_pool = params["lora"] if frozen else pool
     if frozen:
-        a_ring = _zeros_block(grad_pool, kmax)             # traveling adapters
+        a_ring = zeros_block(grad_pool, kmax)              # traveling adapters
     gbuf = jax.tree.map(lambda a: a.astype(ring_grad_dtype),
-                        _zeros_block(grad_pool, kmax))
+                        zeros_block(grad_pool, kmax))
     pool_grads = jax.tree.map(lambda a: jnp.zeros(a.shape, jnp.float32),
                               grad_pool)
     stash = jnp.zeros((l_total + 1,) + bshape, x_emb.dtype)  # row L = scratch
     act = jnp.zeros(bshape, x_emb.dtype)
     grad_carry = jnp.zeros(bshape, jnp.float32)
-    loss_sum = jnp.float32(0.0)
-    tok_count = jnp.int32(0)
+    loss_sum = A.zeros((), jnp.float32)
+    tok_count = A.zeros((), jnp.int32)
     if not frozen:
-        embed_grad = jnp.zeros(params["embed"].shape, jnp.float32)
-        head_grad = jnp.zeros(head_w.shape, jnp.float32)
-        fnorm_grad = jax.tree.map(lambda a: jnp.zeros(a.shape, jnp.float32),
-                                  params["final_norm"])
+        embed_grad = A.zeros(params["embed"].shape, jnp.float32)
+        head_grad = A.zeros(head_w.shape, jnp.float32)
+        fnorm_grad = A.tree_zeros(params["final_norm"], jnp.float32)
 
-    def block_row(block, k):
-        return jax.tree.map(lambda a: a[k], block)
-
-    if kmax == 1:
-        # fast path: single-layer blocks — no scan wrapper, the seed
-        # runtime's exact per-tick compute shape (MoE archs compile slowly
-        # under an extra scan level around each vjp)
-        def stage_fwd(block, n_active, x):
-            y = T.layer_forward(x, block_row(block, 0), cfg,
-                                kv_chunk=kv_chunk)
-            return jnp.where(n_active > 0, y, x)
-    else:
-        def stage_fwd(block, n_active, x):
-            """Fold a padded block over x; inactive rows are identity."""
-            def body(xc, inp):
-                k, lw = inp
-                y = T.layer_forward(xc, lw, cfg, kv_chunk=kv_chunk)
-                return jnp.where(k < n_active, y, xc), None
-            out, _ = jax.lax.scan(body, x, (jnp.arange(kmax), block))
-            return out
-
-    def fused_loss(block, fnorm, hw, x, labels_cur):
-        if fused_spec.size:                    # static: fused body block
-            x = stage_fwd(block, fused_spec.size, x)
-        h = apply_norm(x, fnorm, cfg.norm_kind, cfg.norm_eps)
-        tot, cnt = T.chunked_softmax_xent(h, hw, labels_cur,
-                                          chunk=xent_chunk)
-        return tot, cnt                        # cnt rides as vjp aux
-
-    def assemble_block(spec, src_pool=pool):
-        """Gather slot ``spec``'s layers from their pool owners to worker 0
-        (static plumbing).  Padding rows repeat the first layer so every ring
-        row holds real weights (finite jacobians for the masked lanes).
-        ``src_pool`` defaults to the dense layer pool; the frozen-base mode
-        reuses the same plumbing for the adapter pool."""
-        rows = []
-        for lid in spec.layers:
-            owner, idx = divmod(lid, per)
-            inj = jax.tree.map(lambda a: a[idx], src_pool)
-            rows.append(jax.lax.ppermute(inj, AXIS, [(owner, 0)]))
-        if not rows:
-            return None
-        rows += [rows[0]] * (kmax - len(rows))
-        return jax.tree.map(lambda *xs: jnp.stack(xs), *rows)
-
-    # ---- chunked double-buffered uploader (prefetch_program path) -----------
-    pool_leaves, pool_def = jax.tree_util.tree_flatten(pool)
-    leaf_elems = [int(math.prod(l.shape[1:])) for l in pool_leaves]
-    leaf_offs = list(itertools.accumulate([0] + leaf_elems[:-1]))
-    row_elems = sum(leaf_elems)
-
-    # ---- quantized resident pool (pool_dtype != "none") ---------------------
+    # ---- codec selection (one quantization pass per step, qpair per call) ---
     quant = pool_dtype != "none"
-    if quant and pool_dtype not in POOL_DTYPE_BITS:
-        raise ValueError(f"unknown pool_dtype {pool_dtype!r}; expected "
-                         f"none|{'|'.join(POOL_DTYPE_BITS)}")
+    pool_leaves = jax.tree_util.tree_flatten(pool)[0]
     if quant:
-        # one quantization pass per step over the LOCAL pool shard — the
-        # "host-side" codes+scales image whose bytes the up lane ships
-        # (plan.stage_bytes counts exactly this payload).  The adapter pool
-        # (frozen-base mode) stays full-precision: it is 100-1000x smaller
-        # and rides the whole-block path below.
-        pool_cat = jnp.concatenate(
-            [l.reshape(per, -1).astype(jnp.float32) for l in pool_leaves],
-            axis=1)                                     # (per, row_elems)
-        q_codes, q_scales = quantize_rows(
-            pool_cat, bits=POOL_DTYPE_BITS[pool_dtype])
-        code_len = q_codes.shape[1]
-        nb_scales = q_scales.shape[1]
+        # the adapter pool (frozen-base mode) stays full-precision: it is
+        # 100-1000x smaller and rides the whole-block path below
+        qpair = rm.quantize_pool(pool)
 
-        def zeros_standby_q():
-            return (jnp.zeros((kmax, code_len), q_codes.dtype),
-                    jnp.zeros((kmax, nb_scales), jnp.float32))
-
-        def upload_slot_q(stand, slot_idx):
-            """Quantized standby fill: each ChunkUpload's plan-byte range
-            maps proportionally onto the CODE columns (endpoints are exact,
-            so chunk boundaries still partition every row); the fp32 scale
-            row rides the slot's first chunk (its 4B/block are part of the
-            plan's quantized byte total)."""
-            codes, scales = stand
-            for cu in prefetch_program.uploads[slot_idx]:
-                if cu.row < 0:          # replicated LM head: never streamed
-                    continue
-                if cu.parent_bytes <= 0:
-                    la, lb = 0, code_len
-                else:
-                    la = cu.lo * code_len // cu.parent_bytes
-                    lb = cu.hi * code_len // cu.parent_bytes
-                if la < lb:
-                    src = jax.lax.slice(q_codes[cu.pool_row], (la,), (lb,))
-                    src = jax.lax.ppermute(src, AXIS, [(cu.owner, 0)])
-                    codes = codes.at[cu.row, la:lb].set(src)
-                if cu.lo == 0:
-                    srow = jax.lax.ppermute(q_scales[cu.pool_row], AXIS,
-                                            [(cu.owner, 0)])
-                    scales = scales.at[cu.row].set(srow)
-            return codes, scales
-
-        def dequant_block(codes, scales, spec):
-            """Fused dequant-on-upload: codes+scales -> injection block in
-            compute precision (``kernels.ops.dequant_rows``), split back
-            into the pool's leaf structure with the same real-weight
-            padding rows as ``assemble_block``."""
-            flat = kops.dequant_rows(codes, scales)     # (kmax, nb*QB) fp32
-            flat = flat[:, :row_elems]
-            if spec.size < kmax:
-                pad = jnp.broadcast_to(
-                    flat[0], (kmax - spec.size,) + flat.shape[1:])
-                flat = flat.at[spec.size:].set(pad)
-            leaves = [
-                jax.lax.slice(flat, (0, off), (kmax, off + ne)).reshape(
-                    (kmax,) + l.shape[1:]).astype(l.dtype)
-                for l, off, ne in zip(pool_leaves, leaf_offs, leaf_elems)]
-            return jax.tree_util.tree_unflatten(pool_def, leaves)
-
-        def assemble_block_q(spec):
-            """Whole-block fallback, quantized: gather full code+scale rows
-            from their owners, then one fused dequant."""
-            if not spec.layers:
-                return None
-            crows, srows = [], []
-            for lid in spec.layers:
-                owner, idx = divmod(lid, per)
-                crows.append(
-                    jax.lax.ppermute(q_codes[idx], AXIS, [(owner, 0)]))
-                srows.append(
-                    jax.lax.ppermute(q_scales[idx], AXIS, [(owner, 0)]))
-            crows += [crows[0]] * (kmax - len(crows))
-            srows += [srows[0]] * (kmax - len(srows))
-            return dequant_block(jnp.stack(crows), jnp.stack(srows), spec)
-
-    # ---- error-feedback compressed gradient deposits ------------------------
     compress = grad_compress != "none"
     if compress and grad_compress != "int8":
         raise ValueError(f"unknown grad_compress {grad_compress!r}; "
@@ -383,115 +274,47 @@ def roundpipe_forward_backward(params, batch, worker_id, grad_residual=None,
                          "(init_roundpipe_state puts it beside the Adam "
                          "state)")
 
-    def deposit_compressed(pg_tree, res_tree, row, owner, idx):
-        """Error-feedback int8 deposit (DESIGN.md §7).  The tail worker
-        compresses the fully ring-reduced row PLUS the row's carried
-        residual; the code+scale payload is what crosses the down lane to
-        the pool owner, which dequantizes into its accumulator and stores
-        the fresh residual for the next deposit into this row.  (In this
-        SPMD harness the residual round-trips owner->tail->owner; the real
-        system keeps it host-side at the tail — see DESIGN.md §7.)"""
-        pg_leaves, pg_def = jax.tree_util.tree_flatten(pg_tree)
-        res_leaves = jax.tree_util.tree_flatten(res_tree)[0]
-        row_leaves = jax.tree_util.tree_flatten(row)[0]
-        new_pg, new_res = [], []
-        for pg, res, rw in zip(pg_leaves, res_leaves, row_leaves):
-            res_row = jax.lax.ppermute(res[idx], AXIS, [(owner, n - 1)])
-            codes, cscale, fresh = compress_int8(
-                rw.astype(jnp.float32), res_row)
-            codes = jax.lax.ppermute(codes, AXIS, [(n - 1, owner)])
-            cscale = jax.lax.ppermute(cscale, AXIS, [(n - 1, owner)])
-            fresh = jax.lax.ppermute(fresh, AXIS, [(n - 1, owner)])
-            deq = decompress_int8(codes, cscale, rw.shape)
-            new_pg.append(pg.at[idx].add(deq))
-            # every worker runs this SPMD block, but the ppermute delivers
-            # ``fresh`` only to the owner — everyone else receives zeros.
-            # The grad add is naturally a no-op there (deq == 0), but a
-            # bare .set would CLOBBER the non-owner's own residual row at
-            # this local index (it shadows a different layer), so gate it.
-            keep = jnp.where(worker_id == owner, fresh, res[idx])
-            new_res.append(res.at[idx].set(keep))
-        return (jax.tree_util.tree_unflatten(pg_def, new_pg),
-                jax.tree_util.tree_unflatten(pg_def, new_res))
-
-    def _chunk_elem_range(cu):
-        """Map the chunk's plan-byte range to an element range of the actual
-        row (the cost-model byte total need not match the array dtype)."""
-        if cu.parent_bytes <= 0:
-            return 0, row_elems
-        return (cu.lo * row_elems // cu.parent_bytes,
-                cu.hi * row_elems // cu.parent_bytes)
-
-    def upload_slot(stand, slot_idx):
-        """Stream slot ``slot_idx``'s chunks into the standby leaves, one
-        ppermute per (chunk x overlapped leaf), in LPT window order.  The
-        chunk byte-ranges partition each row, so the union of writes equals
-        the whole-block gather exactly."""
-        stand = list(stand)
-        for cu in prefetch_program.uploads[slot_idx]:
-            if cu.row < 0:          # replicated LM head: never ring-resident
-                continue
-            a, b = _chunk_elem_range(cu)
-            for i, (off, ne) in enumerate(zip(leaf_offs, leaf_elems)):
-                la, lb = max(a - off, 0), min(b - off, ne)
-                if la >= lb:
-                    continue
-                src = jax.lax.slice(
-                    pool_leaves[i][cu.pool_row].reshape(-1), (la,), (lb,))
-                src = jax.lax.ppermute(src, AXIS, [(cu.owner, 0)])
-                flat = stand[i].reshape(kmax, -1)
-                stand[i] = flat.at[cu.row, la:lb].set(src).reshape(
-                    stand[i].shape)
-        return stand
-
-    def promote_standby(stand, spec):
-        """Standby -> injection block: replicate row 0 into padding rows
-        (same real-weight padding as ``assemble_block``)."""
-        leaves = []
-        for l in stand:
-            if spec.size < kmax:
-                pad = jnp.broadcast_to(l[0], (kmax - spec.size,) + l.shape[1:])
-                l = l.at[spec.size:].set(pad)
-            leaves.append(l)
-        return jax.tree_util.tree_unflatten(pool_def, leaves)
-
-    def zeros_standby():
-        return [jnp.zeros((kmax,) + l.shape[1:], l.dtype) for l in pool_leaves]
-
-    # quant-aware indirection: "none" binds the original helpers so the
+    # quant-aware indirection: "none" binds the dense machine methods so the
     # dense trace stays bit-identical to the pre-quantization runtime
-    _upload = upload_slot_q if quant else upload_slot
-    _zeros = zeros_standby_q if quant else zeros_standby
-    _assemble = assemble_block_q if quant else assemble_block
+    def _upload(stand, slot_idx):
+        if quant:
+            return rm.upload_slot_q(stand, slot_idx, qpair)
+        return rm.upload_slot(stand, slot_idx, pool_leaves)
+
+    def _zeros():
+        return rm.zeros_standby_q(qpair) if quant else rm.zeros_standby()
+
+    def _assemble(spec):
+        if quant:
+            return rm.assemble_block_q(spec, qpair)
+        return rm.assemble_block(spec, pool)
 
     def _promote(stand, spec):
         if quant:
-            return dequant_block(stand[0], stand[1], spec)
-        return promote_standby(stand, spec)
+            return rm.dequant_block(stand[0], stand[1], spec)
+        return rm.promote_standby(stand, spec)
 
     if prefetch_program is not None:
         # fill prologue: slot 0 has no preceding compute window to hide in
         standby = _upload(_zeros(), 0)
 
-    # The runtime consumes the SAME round-stitched injection order the
-    # schedule generator dispatches (plan.tick_table, asserted in tests):
-    # tick t injects slot t % S of round t // S; the N-1 drain ticks (None
-    # entries) are paid once per step, not once per round.
-    tick_entries = plan.tick_table(r_total)
-    for t, entry in enumerate(tick_entries):
+    # The driver consumes the GENERATED schedule IR — the same round-stitched
+    # injection order the schedule generator dispatches (program.entries ==
+    # plan.tick_table, asserted in tests): tick t injects slot t % S of
+    # round t // S; the N-1 drain ticks (None entries) are paid once per
+    # step, not once per round.
+    for rec in program.records:
+        t, entry = rec.t, rec.entry
         # ---- ring plumbing (static per tick) --------------------------------
-        shifted = jax.tree.map(
-            lambda a: jax.lax.ppermute(a, AXIS, _shift_perm(n)), ring)
-        gbuf = jax.tree.map(
-            lambda a: jax.lax.ppermute(a, AXIS, _shift_perm(n)), gbuf)
+        shifted = rm.shift(ring)
+        gbuf = rm.shift(gbuf)
         if frozen:
-            a_shifted = jax.tree.map(
-                lambda a: jax.lax.ppermute(a, AXIS, _shift_perm(n)), a_ring)
+            a_shifted = rm.shift(a_ring)
         if entry is not None:
             spec = slots[entry[1]]
             if prefetch_program is not None:
                 if spec.size:
-                    ring = _ring_add(shifted, _promote(standby, spec))
+                    ring = ring_add(shifted, _promote(standby, spec))
                 else:
                     ring = shifted
                 # double-buffer swap: the next tick's slot streams into the
@@ -500,17 +323,17 @@ def roundpipe_forward_backward(params, batch, worker_id, grad_residual=None,
                 # tick-boundary burst).  Round r+1's slot-0 upload therefore
                 # streams while round r drains its deepest slots: the
                 # per-slot ChunkUpload tables are replayed modulo S.
-                if t + 1 < live:
-                    standby = _upload(_zeros(), (t + 1) % s_total)
+                if rec.upload is not None:
+                    standby = _upload(_zeros(), rec.upload[0])
             else:
                 inj = _assemble(spec)
-                ring = _ring_add(shifted, inj) if inj is not None else shifted
+                ring = ring_add(shifted, inj) if inj is not None else shifted
             if frozen:
                 # adapters are ~100-1000x smaller than the dense block: the
                 # whole-block gather is already far below one chunk upload,
                 # so they skip the standby machinery even under prefetch
-                inj_a = assemble_block(spec, params["lora"])
-                a_ring = _ring_add(a_shifted, inj_a) \
+                inj_a = rm.assemble_block(spec, params["lora"])
+                a_ring = ring_add(a_shifted, inj_a) \
                     if inj_a is not None else a_shifted
         else:
             ring = shifted
@@ -582,15 +405,14 @@ def roundpipe_forward_backward(params, batch, worker_id, grad_residual=None,
                 labels_cur = round_leaf(labels, ri)
 
                 def floss(ablk, xx):
-                    return fused_loss(lora_mod.merge_layers(ring, ablk, lora),
-                                      params["final_norm"], head_w, xx,
-                                      labels_cur)
+                    return rm.fused_loss(
+                        lora_mod.merge_layers(ring, ablk, lora),
+                        params["final_norm"], head_w, xx, labels_cur)
 
                 tot, vjp, cnt = jax.vjp(floss, a_ring, x_in, has_aux=True)
                 ga, gx = vjp(jnp.float32(1.0))
-                gb_ = jax.tree.map(lambda a, d: a + d.astype(a.dtype),
-                                   gb_, ga)
-                return (act_, ls + tot, tc + cnt,
+                gb_ = gbuf_add(gb_, ga)
+                return (act_, A.add(ls, tot, pslot), A.add(tc, cnt, pslot),
                         gx.astype(jnp.float32), gb_)
 
             act, loss_sum, tok_count, grad_carry, gbuf = jax.lax.cond(
@@ -602,12 +424,11 @@ def roundpipe_forward_backward(params, batch, worker_id, grad_residual=None,
                 x_in = jax.lax.dynamic_index_in_dim(
                     stash, jnp.minimum(start, l_total), 0, keepdims=False)
                 y, vjp = jax.vjp(
-                    lambda ablk, xx: stage_fwd(
+                    lambda ablk, xx: rm.stage_fwd(
                         lora_mod.merge_layers(ring, ablk, lora), n_act, xx),
                     a_ring, x_in)
                 ga, gx = vjp(gcarry.astype(y.dtype))
-                gb_ = jax.tree.map(lambda a, d: a + d.astype(a.dtype),
-                                   gb_, ga)
+                gb_ = gbuf_add(gb_, ga)
                 return gx.astype(jnp.float32), gb_
 
             grad_carry, gbuf = jax.lax.cond(
@@ -619,18 +440,18 @@ def roundpipe_forward_backward(params, batch, worker_id, grad_residual=None,
                                  act_)                      # Sf == 0 edge
                 labels_cur = round_leaf(labels, ri)
                 tot, vjp, cnt = jax.vjp(
-                    lambda blk, fn, hw_, xx: fused_loss(blk, fn, hw_, xx,
-                                                        labels_cur),
+                    lambda blk, fn, hw_, xx: rm.fused_loss(blk, fn, hw_, xx,
+                                                           labels_cur),
                     ring, params["final_norm"], head_w, x_in, has_aux=True)
                 gb, gf, gh, gx = vjp(jnp.float32(1.0))
-                gb_ = jax.tree.map(lambda a, d: a + d.astype(a.dtype), gb_, gb)
+                gb_ = gbuf_add(gb_, gb)
                 if sf == 0 and fused_spec.layers and tokens is not None:
-                    eg = eg.at[round_leaf(tokens, ri)].add(
-                        gx.astype(jnp.float32))
-                return (act_, ls + tot, tc + cnt, gx.astype(jnp.float32),
-                        hg + gh.astype(jnp.float32),
-                        jax.tree.map(lambda a, d: a + d.astype(jnp.float32),
-                                     fg, gf),
+                    eg = A.token_add(eg, round_leaf(tokens, ri),
+                                     gx.astype(jnp.float32), pslot)
+                return (act_, A.add(ls, tot, pslot), A.add(tc, cnt, pslot),
+                        gx.astype(jnp.float32),
+                        A.add_f32(hg, gh, pslot),
+                        A.tree_add_f32(fg, gf, pslot),
                         gb_, eg)
 
             (act, loss_sum, tok_count, grad_carry, head_grad, fnorm_grad,
@@ -643,16 +464,16 @@ def roundpipe_forward_backward(params, batch, worker_id, grad_residual=None,
                 gcarry, gb_, eg = op
                 x_in = jax.lax.dynamic_index_in_dim(
                     stash, jnp.minimum(start, l_total), 0, keepdims=False)
-                y, vjp = jax.vjp(lambda blk, xx: stage_fwd(blk, n_act, xx),
+                y, vjp = jax.vjp(lambda blk, xx: rm.stage_fwd(blk, n_act, xx),
                                  ring, x_in)
                 gb, gx = vjp(gcarry.astype(y.dtype))
-                gb_ = jax.tree.map(lambda a, d: a + d.astype(a.dtype), gb_, gb)
+                gb_ = gbuf_add(gb_, gb)
 
                 def embed_bwd(e):
                     if tokens is None:
                         return e                              # frontend stub
-                    return e.at[round_leaf(tokens, ri)].add(
-                        gx.astype(jnp.float32))
+                    return A.token_add(e, round_leaf(tokens, ri),
+                                       gx.astype(jnp.float32), pslot)
 
                 eg = jax.lax.cond(jnp.logical_and(start == 0, n_act > 0),
                                   embed_bwd, lambda e: e, eg)
@@ -663,23 +484,18 @@ def roundpipe_forward_backward(params, batch, worker_id, grad_residual=None,
 
         # ---- gradient deposit: slot exits the ring at worker N-1 -------------
         # Round r's wave for slot j exits at tick r*S + j + N - 1; the
-        # .at[idx].add below SUMS successive rounds' contributions into the
-        # same pool row — the cross-round gradient accumulation.
-        e_slot = t - (n - 1)
-        if 0 <= e_slot < live and slots[e_slot % s_total].kind != "F":
-            for k, lid in enumerate(slots[e_slot % s_total].layers):
-                owner, idx = divmod(lid, per)
-                row = jax.tree.map(lambda a: a[k], gbuf)
+        # .at[idx].add inside the machine SUMS successive rounds'
+        # contributions into the same pool row — the cross-round gradient
+        # accumulation.
+        if rec.deposit is not None:
+            for k, lid in enumerate(slots[rec.deposit].layers):
+                owner, idx = divmod(lid, rm.per)
+                row = block_row(gbuf, k)
                 if compress:
-                    pool_grads, grad_residual = deposit_compressed(
+                    pool_grads, grad_residual = rm.deposit_ef(
                         pool_grads, grad_residual, row, owner, idx)
                 else:
-                    arriving = jax.tree.map(
-                        lambda a: jax.lax.ppermute(a, AXIS, [(n - 1, owner)]),
-                        row)
-                    pool_grads = jax.tree.map(
-                        lambda pg, ar: pg.at[idx].add(ar.astype(jnp.float32)),
-                        pool_grads, arriving)
+                    pool_grads = rm.deposit_plain(pool_grads, row, owner, idx)
 
     # ---- finalize: reduce replicated-param grads ------------------------------
     loss_sum = jax.lax.psum(loss_sum, AXIS)
@@ -715,7 +531,10 @@ def roundpipe_async_forward_backward(params, opt_state, batch, worker_id,
                                      opt_cfg, xent_chunk: int = 256,
                                      kv_chunk: int = 1024,
                                      ring_grad_dtype=jnp.float32,
-                                     prefetch_program=None, lora=None):
+                                     prefetch_program=None, lora=None,
+                                     pool_dtype: str = "none",
+                                     grad_compress: str = "none",
+                                     tick_program=None):
     """Cross-step chained body (paper §4.3, DESIGN.md §6): ``steps``
     optimizer iterations executed back-to-back in ONE ring program of
     ``I*R*S + N - 1`` ticks — step ``T+1``'s round injection begins while
@@ -761,10 +580,24 @@ def roundpipe_async_forward_backward(params, opt_state, batch, worker_id,
     buffers; per-step embeddings are exact (they vary only with the step's
     batch).  ``opt_state`` must cover the adapter leaves only (same shape
     as the synchronous LoRA step's).
+
+    ``pool_dtype`` streams the resident pool QUANTIZED under chaining
+    (DESIGN.md §7/§8): the codes+scales image versions exactly like the
+    dense pool — step ``T`` injects the quantization of ``v_{T-1}`` — and
+    each ``D_k`` update tick folds a re-quantization of the fresh
+    ``v_{k+1}`` pool into the same tick that publishes it, so the program
+    still runs ONE quantization pass per step.  ``grad_compress="int8"``
+    runs every deposit through the error-feedback codec with the residual
+    carried in ``opt_state["grad_residual"]`` ACROSS the chained steps
+    (the residual telescopes from step to step exactly as it does across
+    synchronous calls).
+
+    ``tick_program`` optionally supplies the generated schedule IR
+    (validated against the plan); ``None`` generates
+    ``plan.tick_program(rounds, steps)``.
     """
     n = n_workers
     l_total = cfg.n_layers
-    per = l_pad // n
     w = worker_id[0]
 
     slots = plan.stages
@@ -797,7 +630,20 @@ def roundpipe_async_forward_backward(params, opt_state, batch, worker_id,
     # since injection ticks are static.  Appended at each deposit-complete
     # tick D_k below, in step order (constraint 5).
     versions = [params]
-    opt = opt_state
+    quant = pool_dtype != "none"
+    compress = grad_compress != "none"
+    if compress and grad_compress != "int8":
+        raise ValueError(f"unknown grad_compress {grad_compress!r}; "
+                         f"expected none|int8")
+    if compress:
+        # the error-feedback residual rides beside the Adam state; pop it so
+        # the in-program apply_updates sees a clean optimizer dict, thread
+        # it through every deposit, and re-attach it before returning —
+        # the residual telescopes across the chained steps.
+        opt = dict(opt_state)
+        grad_residual = opt.pop("grad_residual")
+    else:
+        opt = opt_state
 
     def emb_for(p, i):                     # (R, B_w, S, D) for step i
         return T.embed_inputs(p, batch_step(i), cfg)
@@ -824,59 +670,42 @@ def roundpipe_async_forward_backward(params, opt_state, batch, worker_id,
 
     # ---- tick-state ---------------------------------------------------------
     pool = params["layers"]
-    ring = _zeros_block(pool, kmax)
+    rm = RingMachine(cfg=cfg, plan=plan, n_workers=n, l_pad=l_pad,
+                     worker_id=worker_id, pool_template=pool,
+                     xent_chunk=xent_chunk, kv_chunk=kv_chunk,
+                     prefetch_program=prefetch_program, pool_dtype=pool_dtype)
+    # per-step accumulators are parity-PAIRED (leading dim 2, indexed by the
+    # traced work-step, see ring.ParityAccum): on shallow plans (sf < N-1 or
+    # S < N) a worker starts step k+1's fused/backward work before step k's
+    # deposit-complete tick D_k, so a single accumulator would leak early
+    # step-k+1 contributions into step k's snapshot.  Pool deposits need no
+    # pairing — waves exit the ring strictly in step order (step k's last
+    # deposit is tick D_k, step k+1's first is D_k + 1).
+    A = ParityAccum
+    program = (_check_program(tick_program, plan, rounds, steps)
+               if tick_program is not None
+               else plan.tick_program(rounds, steps))
+    ring = zeros_block(pool, kmax)
     # frozen-base: the traveling gradient buffer / pool accumulator shrink
     # to ADAPTER shape and a second ring carries each slot's versioned
     # adapter block (the sync runtime's layout, plus staleness-1)
     grad_pool = params["lora"] if frozen else pool
     if frozen:
-        a_ring = _zeros_block(grad_pool, kmax)
+        a_ring = zeros_block(grad_pool, kmax)
     gbuf = jax.tree.map(lambda a: a.astype(ring_grad_dtype),
-                        _zeros_block(grad_pool, kmax))
+                        zeros_block(grad_pool, kmax))
     pool_grads = jax.tree.map(lambda a: jnp.zeros(a.shape, jnp.float32),
                               grad_pool)
     stash = jnp.zeros((l_total + 1,) + bshape, emb_dtype)
     act = jnp.zeros(bshape, emb_dtype)
     grad_carry = jnp.zeros(bshape, jnp.float32)
-    # per-step accumulators are parity-PAIRED (leading dim 2, indexed by the
-    # traced work-step): on shallow plans (sf < N-1 or S < N) a worker
-    # starts step k+1's fused/backward work before step k's
-    # deposit-complete tick D_k, so a single accumulator would leak early
-    # step-k+1 contributions into step k's snapshot.  Pool deposits need no
-    # pairing — waves exit the ring strictly in step order (step k's last
-    # deposit is tick D_k, step k+1's first is D_k + 1).
-    loss_sum = jnp.zeros((2,), jnp.float32)
-    tok_count = jnp.zeros((2,), jnp.int32)
+    loss_sum = A.zeros((), jnp.float32)
+    tok_count = A.zeros((), jnp.int32)
     if not frozen:
-        embed_grad = jnp.zeros((2,) + params["embed"].shape, jnp.float32)
-        head_grad = jnp.zeros((2,) + head0.shape, jnp.float32)
-        fnorm_grad = jax.tree.map(
-            lambda a: jnp.zeros((2,) + a.shape, jnp.float32),
-            params["final_norm"])
+        embed_grad = A.zeros(params["embed"].shape, jnp.float32)
+        head_grad = A.zeros(head0.shape, jnp.float32)
+        fnorm_grad = A.tree_zeros(params["final_norm"], jnp.float32)
     losses, toks, gnorms = [], [], []
-
-    def block_row(block, k):
-        return jax.tree.map(lambda a: a[k], block)
-
-    if kmax == 1:
-        def stage_fwd(block, n_active, x):
-            y = T.layer_forward(x, block_row(block, 0), cfg, kv_chunk=kv_chunk)
-            return jnp.where(n_active > 0, y, x)
-    else:
-        def stage_fwd(block, n_active, x):
-            def body(xc, inp):
-                k, lw = inp
-                y = T.layer_forward(xc, lw, cfg, kv_chunk=kv_chunk)
-                return jnp.where(k < n_active, y, xc), None
-            out, _ = jax.lax.scan(body, x, (jnp.arange(kmax), block))
-            return out
-
-    def fused_loss(block, fnorm, hw, x, labels_cur):
-        if fused_spec.size:
-            x = stage_fwd(block, fused_spec.size, x)
-        h = apply_norm(x, fnorm, cfg.norm_kind, cfg.norm_eps)
-        tot, cnt = T.chunked_softmax_xent(h, hw, labels_cur, chunk=xent_chunk)
-        return tot, cnt
 
     def inj_pool(t_step):                  # version step t_step injects
         return versions[max(0, t_step - 1)]["layers"]
@@ -884,91 +713,60 @@ def roundpipe_async_forward_backward(params, opt_state, batch, worker_id,
     def inj_apool(t_step):                 # adapter version step t_step reads
         return versions[max(0, t_step - 1)]["lora"]
 
-    def assemble_block(spec, src_pool):
-        rows = []
-        for lid in spec.layers:
-            owner, idx = divmod(lid, per)
-            inj = jax.tree.map(lambda a: a[idx], src_pool)
-            rows.append(jax.lax.ppermute(inj, AXIS, [(owner, 0)]))
-        if not rows:
-            return None
-        rows += [rows[0]] * (kmax - len(rows))
-        return jax.tree.map(lambda *xs: jnp.stack(xs), *rows)
+    # quantized chaining: the codes+scales image versions like the dense
+    # pool — q_versions[k] is the quantization of versions[k]'s pool, with
+    # each re-quantization folded into the D_k tick that publishes v_{k+1}
+    # (one quantization pass per step, DESIGN.md §8).  Frozen-base mode:
+    # the dense pool is read-only, so one image serves every step.
+    if quant:
+        q_versions = [rm.quantize_pool(pool)]
 
-    # ---- chunked double-buffered uploader (per-version pool leaves) ---------
-    pool_leaves0, pool_def = jax.tree_util.tree_flatten(pool)
-    leaf_elems = [int(math.prod(l.shape[1:])) for l in pool_leaves0]
-    leaf_offs = list(itertools.accumulate([0] + leaf_elems[:-1]))
-    row_elems = sum(leaf_elems)
+        def inj_qpool(t_step):
+            if frozen:
+                return q_versions[0]
+            return q_versions[max(0, t_step - 1)]
 
-    def _chunk_elem_range(cu):
-        if cu.parent_bytes <= 0:
-            return 0, row_elems
-        return (cu.lo * row_elems // cu.parent_bytes,
-                cu.hi * row_elems // cu.parent_bytes)
+    def _upload_for(t_step, slot_idx):
+        """Fill a fresh standby for ``slot_idx`` from the pool version step
+        ``t_step`` injects, through the selected codec."""
+        if quant:
+            qp = inj_qpool(t_step)
+            return rm.upload_slot_q(rm.zeros_standby_q(qp), slot_idx, qp)
+        return rm.upload_slot(
+            rm.zeros_standby(), slot_idx,
+            jax.tree_util.tree_flatten(inj_pool(t_step))[0])
 
-    def upload_slot(stand, slot_idx, pool_leaves):
-        stand = list(stand)
-        for cu in prefetch_program.uploads[slot_idx]:
-            if cu.row < 0:
-                continue
-            a, b = _chunk_elem_range(cu)
-            for i, (off, ne) in enumerate(zip(leaf_offs, leaf_elems)):
-                la, lb = max(a - off, 0), min(b - off, ne)
-                if la >= lb:
-                    continue
-                src = jax.lax.slice(
-                    pool_leaves[i][cu.pool_row].reshape(-1), (la,), (lb,))
-                src = jax.lax.ppermute(src, AXIS, [(cu.owner, 0)])
-                flat = stand[i].reshape(kmax, -1)
-                stand[i] = flat.at[cu.row, la:lb].set(src).reshape(
-                    stand[i].shape)
-        return stand
-
-    def promote_standby(stand, spec):
-        leaves = []
-        for l in stand:
-            if spec.size < kmax:
-                pad = jnp.broadcast_to(l[0], (kmax - spec.size,) + l.shape[1:])
-                l = l.at[spec.size:].set(pad)
-            leaves.append(l)
-        return jax.tree_util.tree_unflatten(pool_def, leaves)
-
-    def zeros_standby():
-        return [jnp.zeros((kmax,) + l.shape[1:], l.dtype)
-                for l in pool_leaves0]
-
-    tick_entries = plan.tick_table(rounds, steps)
     if prefetch_program is not None:
-        standby = upload_slot(zeros_standby(), 0,
-                              jax.tree_util.tree_flatten(inj_pool(0))[0])
+        standby = _upload_for(0, 0)
 
-    for t, entry in enumerate(tick_entries):
+    for rec in program.records:
+        t, entry = rec.t, rec.entry
         # ---- ring plumbing (static per tick) --------------------------------
-        shifted = jax.tree.map(
-            lambda a: jax.lax.ppermute(a, AXIS, _shift_perm(n)), ring)
-        gbuf = jax.tree.map(
-            lambda a: jax.lax.ppermute(a, AXIS, _shift_perm(n)), gbuf)
+        shifted = rm.shift(ring)
+        gbuf = rm.shift(gbuf)
         if frozen:
-            a_shifted = jax.tree.map(
-                lambda a: jax.lax.ppermute(a, AXIS, _shift_perm(n)), a_ring)
+            a_shifted = rm.shift(a_ring)
         if entry is not None:
-            t_inj = entry[0] // rounds     # static injection step
+            t_inj = rec.inject_step        # static injection step
             spec = slots[entry[1]]
             if prefetch_program is not None:
                 if spec.size:
-                    ring = _ring_add(shifted, promote_standby(standby, spec))
+                    promoted = (rm.dequant_block(standby[0], standby[1], spec)
+                                if quant
+                                else rm.promote_standby(standby, spec))
+                    ring = ring_add(shifted, promoted)
                 else:
                     ring = shifted
             else:
-                inj = assemble_block(spec, inj_pool(t_inj))
-                ring = _ring_add(shifted, inj) if inj is not None else shifted
+                inj = (rm.assemble_block_q(spec, inj_qpool(t_inj)) if quant
+                       else rm.assemble_block(spec, inj_pool(t_inj)))
+                ring = ring_add(shifted, inj) if inj is not None else shifted
             if frozen:
                 # adapters skip the standby machinery (sync-runtime
                 # rationale: far smaller than one chunk) but version like
                 # the dense async pool: step T reads v_{T-1}'s adapters
-                inj_a = assemble_block(spec, inj_apool(t_inj))
-                a_ring = _ring_add(a_shifted, inj_a) \
+                inj_a = rm.assemble_block(spec, inj_apool(t_inj))
+                a_ring = ring_add(a_shifted, inj_a) \
                     if inj_a is not None else a_shifted
         else:
             ring = shifted
@@ -1036,17 +834,16 @@ def roundpipe_async_forward_backward(params, opt_state, batch, worker_id,
                 x_in = jnp.where(round_start, x_emb_cur(), act_)
 
                 def floss(ablk, xx):
-                    return fused_loss(
+                    return rm.fused_loss(
                         lora_mod.merge_layers(ring, ablk, lora),
                         params["final_norm"], head0, xx,
                         sel2(labels, step_tr, ri))
 
                 tot, vjp, cnt = jax.vjp(floss, a_ring, x_in, has_aux=True)
                 ga, gx = vjp(jnp.float32(1.0))
-                gb_ = jax.tree.map(lambda a, d: a + d.astype(a.dtype),
-                                   gb_, ga)
-                return (act_, ls.at[parity].add(tot),
-                        tc.at[parity].add(cnt), gx.astype(jnp.float32), gb_)
+                gb_ = gbuf_add(gb_, ga)
+                return (act_, A.add(ls, tot, parity),
+                        A.add(tc, cnt, parity), gx.astype(jnp.float32), gb_)
 
             act, loss_sum, tok_count, grad_carry, gbuf = jax.lax.cond(
                 fused_on, do_fused, lambda op: op,
@@ -1057,12 +854,11 @@ def roundpipe_async_forward_backward(params, opt_state, batch, worker_id,
                 x_in = jax.lax.dynamic_index_in_dim(
                     stash, jnp.minimum(start, l_total), 0, keepdims=False)
                 y, vjp = jax.vjp(
-                    lambda ablk, xx: stage_fwd(
+                    lambda ablk, xx: rm.stage_fwd(
                         lora_mod.merge_layers(ring, ablk, lora), n_act, xx),
                     a_ring, x_in)
                 ga, gx = vjp(gcarry.astype(y.dtype))
-                gb_ = jax.tree.map(lambda a, d: a + d.astype(a.dtype),
-                                   gb_, ga)
+                gb_ = gbuf_add(gb_, ga)
                 return gx.astype(jnp.float32), gb_
 
             grad_carry, gbuf = jax.lax.cond(
@@ -1079,21 +875,18 @@ def roundpipe_async_forward_backward(params, opt_state, batch, worker_id,
                 head_cur = jax.lax.dynamic_index_in_dim(head_pair, parity, 0,
                                                         keepdims=False)
                 tot, vjp, cnt = jax.vjp(
-                    lambda blk, fn, hw_, xx: fused_loss(blk, fn, hw_, xx,
-                                                        labels_cur),
+                    lambda blk, fn, hw_, xx: rm.fused_loss(blk, fn, hw_, xx,
+                                                           labels_cur),
                     ring, fnorm_cur, head_cur, x_in, has_aux=True)
                 gb, gf, gh, gx = vjp(jnp.float32(1.0))
-                gb_ = jax.tree.map(lambda a, d: a + d.astype(a.dtype), gb_, gb)
+                gb_ = gbuf_add(gb_, gb)
                 if sf == 0 and fused_spec.layers and tokens is not None:
-                    eg = eg.at[parity, sel2(tokens, step_tr, ri)].add(
-                        gx.astype(jnp.float32))
-                return (act_, ls.at[parity].add(tot),
-                        tc.at[parity].add(cnt), gx.astype(jnp.float32),
-                        hg.at[parity].add(gh.astype(jnp.float32)),
-                        jax.tree.map(
-                            lambda a, d: a.at[parity].add(
-                                d.astype(jnp.float32)),
-                            fg, gf),
+                    eg = A.token_add(eg, sel2(tokens, step_tr, ri),
+                                     gx.astype(jnp.float32), parity)
+                return (act_, A.add(ls, tot, parity),
+                        A.add(tc, cnt, parity), gx.astype(jnp.float32),
+                        A.add_f32(hg, gh, parity),
+                        A.tree_add_f32(fg, gf, parity),
                         gb_, eg)
 
             (act, loss_sum, tok_count, grad_carry, head_grad, fnorm_grad,
@@ -1106,16 +899,16 @@ def roundpipe_async_forward_backward(params, opt_state, batch, worker_id,
                 gcarry, gb_, eg = op
                 x_in = jax.lax.dynamic_index_in_dim(
                     stash, jnp.minimum(start, l_total), 0, keepdims=False)
-                y, vjp = jax.vjp(lambda blk, xx: stage_fwd(blk, n_act, xx),
+                y, vjp = jax.vjp(lambda blk, xx: rm.stage_fwd(blk, n_act, xx),
                                  ring, x_in)
                 gb, gx = vjp(gcarry.astype(y.dtype))
-                gb_ = jax.tree.map(lambda a, d: a + d.astype(a.dtype), gb_, gb)
+                gb_ = gbuf_add(gb_, gb)
 
                 def embed_bwd(e):
                     if tokens is None:
                         return e
-                    return e.at[parity, sel2(tokens, step_tr, ri)].add(
-                        gx.astype(jnp.float32))
+                    return A.token_add(e, sel2(tokens, step_tr, ri),
+                                       gx.astype(jnp.float32), parity)
 
                 eg = jax.lax.cond(jnp.logical_and(start == 0, n_act > 0),
                                   embed_bwd, lambda e: e, eg)
@@ -1125,23 +918,22 @@ def roundpipe_async_forward_backward(params, opt_state, batch, worker_id,
                 bwd_on, do_bwd, lambda op: op, (grad_carry, gbuf, embed_grad))
 
         # ---- gradient deposit -----------------------------------------------
-        g = t - (n - 1)                    # global stitched slot exiting now
-        if 0 <= g < live and slots[g % s_total].kind != "F":
-            for k, lid in enumerate(slots[g % s_total].layers):
-                owner, idx = divmod(lid, per)
-                row = jax.tree.map(lambda a: a[k], gbuf)
-                arriving = jax.tree.map(
-                    lambda a: jax.lax.ppermute(a, AXIS, [(n - 1, owner)]), row)
-                pool_grads = jax.tree.map(
-                    lambda pg, ar: pg.at[idx].add(ar.astype(jnp.float32)),
-                    pool_grads, arriving)
+        if rec.deposit is not None:
+            for k, lid in enumerate(slots[rec.deposit].layers):
+                owner, idx = divmod(lid, rm.per)
+                row = block_row(gbuf, k)
+                if compress:
+                    pool_grads, grad_residual = rm.deposit_ef(
+                        pool_grads, grad_residual, row, owner, idx)
+                else:
+                    pool_grads = rm.deposit_plain(pool_grads, row, owner, idx)
 
         # ---- D_k: step k's grads fully drained -> host optimizer update -----
-        if g >= 0 and (g + 1) % rs == 0:
-            k = g // rs                    # static step index, in order
+        if rec.update_step is not None:
+            k = rec.update_step            # static step index, in order
             p_k = k % 2                    # step k's accumulator parity slot
-            loss_k = jax.lax.psum(loss_sum[p_k], AXIS)
-            tok_k = jax.lax.psum(tok_count[p_k], AXIS)
+            loss_k = jax.lax.psum(A.read(loss_sum, p_k), AXIS)
+            tok_k = jax.lax.psum(A.read(tok_count, p_k), AXIS)
             scale = 1.0 / jnp.maximum(tok_k.astype(jnp.float32), 1.0)
             if frozen:
                 # adapter-only update: the deposited pytree holds exactly
@@ -1161,10 +953,10 @@ def roundpipe_async_forward_backward(params, opt_state, batch, worker_id,
                 # into v_0 reconstructs v_{k+1} exactly
                 new_params = merge_trainable(params, new_tr, mask)
             else:
-                eg = jax.lax.psum(embed_grad[p_k], AXIS)
-                hg = jax.lax.psum(head_grad[p_k], AXIS)
-                fg = jax.tree.map(lambda x: jax.lax.psum(x[p_k], AXIS),
-                                  fnorm_grad)
+                eg = jax.lax.psum(A.read(embed_grad, p_k), AXIS)
+                hg = jax.lax.psum(A.read(head_grad, p_k), AXIS)
+                fg = jax.tree.map(lambda x: jax.lax.psum(x, AXIS),
+                                  A.tree_read(fnorm_grad, p_k))
                 grads = {"embed": eg, "layers": pool_grads, "final_norm": fg}
                 if not tied:
                     grads["lm_head"] = hg
@@ -1184,6 +976,11 @@ def roundpipe_async_forward_backward(params, opt_state, batch, worker_id,
                                                    param_like=params,
                                                    grad_norm=gnorm)
             versions.append(new_params)
+            if quant and not frozen:
+                # requantization folded into D_k: v_{k+1}'s codes+scales are
+                # produced here, so staleness-1 injection reads quantized
+                # versions exactly like the dense version list
+                q_versions.append(rm.quantize_pool(new_params["layers"]))
             losses.append(loss_k * scale)
             toks.append(tok_k)
             gnorms.append(gnorm)
@@ -1195,13 +992,12 @@ def roundpipe_async_forward_backward(params, opt_state, batch, worker_id,
             # tick (k+2)*R*S > D_k
             pool_grads = jax.tree.map(
                 lambda a: jnp.zeros(a.shape, jnp.float32), grad_pool)
-            loss_sum = loss_sum.at[p_k].set(0.0)
-            tok_count = tok_count.at[p_k].set(0)
+            loss_sum = A.reset(loss_sum, p_k)
+            tok_count = A.reset(tok_count, p_k)
             if not frozen:
-                embed_grad = embed_grad.at[p_k].set(0.0)
-                head_grad = head_grad.at[p_k].set(0.0)
-                fnorm_grad = jax.tree.map(lambda a: a.at[p_k].set(0.0),
-                                          fnorm_grad)
+                embed_grad = A.reset(embed_grad, p_k)
+                head_grad = A.reset(head_grad, p_k)
+                fnorm_grad = A.tree_reset(fnorm_grad, p_k)
                 # publish v_{k+1} into the parity slot step k+2 will read;
                 # its previous occupant (v_{k-1}) had its last reader retire
                 # at this very tick — constraint (1), double-buffered form.
@@ -1218,14 +1014,11 @@ def roundpipe_async_forward_backward(params, opt_state, batch, worker_id,
                         T.lm_head_weights(new_params, cfg))
 
         # ---- standby upload for tick t+1 (after any version publish) --------
-        if prefetch_program is not None and t + 1 < len(tick_entries):
-            nxt_entry = tick_entries[t + 1]
-            if nxt_entry is not None:
-                nxt_step = nxt_entry[0] // rounds
-                standby = upload_slot(
-                    zeros_standby(), nxt_entry[1] % s_total,
-                    jax.tree_util.tree_flatten(inj_pool(nxt_step))[0])
+        if prefetch_program is not None and rec.upload is not None:
+            standby = _upload_for(rec.upload[1], rec.upload[0])
 
+    if compress:
+        opt = dict(opt, grad_residual=grad_residual)
     metrics = {"loss": jnp.stack(losses), "tokens": jnp.stack(toks),
                "grad_norm": jnp.stack(gnorms), "step": opt["step"]}
     return versions[-1], opt, metrics
@@ -1297,7 +1090,7 @@ def pad_pool(params, cfg: ModelConfig, n_workers: int):
 def _build_mapped(cfg: ModelConfig, mesh, plan, *, xent_chunk: int,
                   kv_chunk: int, ring_grad_dtype, prefetch_program=None,
                   lora=None, rounds=None, pool_dtype: str = "none",
-                  grad_compress: str = "none"):
+                  grad_compress: str = "none", tick_program=None):
     """The shard_map'ed plan executor over PADDED params.
 
     Returns ``(mapped, l_pad, pspecs, grads_specs)`` where
@@ -1337,7 +1130,7 @@ def _build_mapped(cfg: ModelConfig, mesh, plan, *, xent_chunk: int,
         l_pad=l_pad, xent_chunk=xent_chunk, kv_chunk=kv_chunk,
         ring_grad_dtype=ring_grad_dtype, prefetch_program=prefetch_program,
         lora=lora, rounds=rounds, pool_dtype=pool_dtype,
-        grad_compress=grad_compress)
+        grad_compress=grad_compress, tick_program=tick_program)
     if lora is not None:
         grads_specs = {"lora": pspecs["lora"]}
     elif "lm_head" in abstract:
@@ -1378,7 +1171,7 @@ def build_roundpipe_grads_fn(cfg: ModelConfig, mesh, plan, *,
                              ring_grad_dtype=jnp.float32,
                              prefetch_program=None, lora=None,
                              n_microbatches=None, pool_dtype: str = "none",
-                             grad_compress: str = "none"):
+                             grad_compress: str = "none", tick_program=None):
     """shard_map'ed ``f(params, batch) -> (grads, loss, tokens)`` executing
     ``plan`` on UNPADDED params (reference-comparison API): pads the pool on
     the way in and slices the gradient rows back out.  ``prefetch_program``
@@ -1398,7 +1191,7 @@ def build_roundpipe_grads_fn(cfg: ModelConfig, mesh, plan, *,
         cfg, mesh, plan, xent_chunk=xent_chunk, kv_chunk=kv_chunk,
         ring_grad_dtype=ring_grad_dtype, prefetch_program=prefetch_program,
         lora=lora, rounds=rounds, pool_dtype=pool_dtype,
-        grad_compress=grad_compress)
+        grad_compress=grad_compress, tick_program=tick_program)
     n = axis_size(mesh, AXIS)
 
     def pad_rows(tree):
@@ -1434,6 +1227,31 @@ def build_roundpipe_grads_fn(cfg: ModelConfig, mesh, plan, *,
         return grads, loss, tokens
 
     return grads_fn
+
+
+def _select_schedule(step_cfg, plan, rounds: int, iterations: int):
+    """Resolve ``step_cfg.schedule`` into the tick program the driver runs.
+
+    ``"hand"`` (default) returns None — the driver generates the canonical
+    ``plan.tick_program`` internally, exactly the pre-IR behavior.
+    ``"searched"`` runs :func:`repro.core.simulator.search_schedule` over
+    the schedule family and hands the certified winner's
+    :class:`~repro.core.schedule.TickProgram` to the driver explicitly
+    (``_check_program`` re-validates it at trace time); the search keeps
+    the hand config as candidate 0 with strict-< replacement, so the
+    executed schedule's simulated bubble never exceeds the hand-written
+    table's.
+    """
+    sel = getattr(step_cfg, "schedule", "hand")
+    if sel == "hand":
+        return None
+    if sel == "searched":
+        from repro.core.simulator import search_schedule
+        result = search_schedule(
+            plan, rounds * plan.n_workers, iterations=iterations)
+        return result.program
+    raise ValueError(f"unknown schedule selector {sel!r}: "
+                     "expected 'hand' or 'searched'")
 
 
 def build_roundpipe_train_step(cfg: ModelConfig, mesh, step_cfg,
@@ -1497,12 +1315,14 @@ def build_roundpipe_train_step(cfg: ModelConfig, mesh, step_cfg,
     if round_major and rounds is None:
         raise ValueError("round_major=True requires the multi-round path "
                          "(set step_cfg.n_microbatches)")
+    tick_program = _select_schedule(step_cfg, plan, rounds or 1, 1)
 
     mapped, l_pad, pspecs, _ = _build_mapped(
         cfg, mesh, plan, xent_chunk=step_cfg.xent_chunk,
         kv_chunk=step_cfg.kv_chunk, ring_grad_dtype=step_cfg.accum_dtype,
         prefetch_program=program, lora=lora, rounds=rounds,
-        pool_dtype=pool_dtype, grad_compress=grad_compress)
+        pool_dtype=pool_dtype, grad_compress=grad_compress,
+        tick_program=tick_program)
     if lora is None:
         ospecs = opt_state_specs(pspecs, step_cfg.opt)
     else:
@@ -1616,8 +1436,12 @@ def build_roundpipe_async_train_step(cfg: ModelConfig, mesh, step_cfg,
     result matches ``reference_staleness1`` restricted to the trainable
     adapter leaves; the base passes through bit-identical.
 
-    The quantized resident pool (``step_cfg.pool_dtype``) and compressed
-    deposits (``step_cfg.grad_compress``) are synchronous-only for now.
+    ``step_cfg.pool_dtype`` streams every staleness-1 version of the pool
+    quantized (the D_k update tick requantizes ``v_{k+1}`` into the
+    version list); ``step_cfg.grad_compress`` runs deposits through the
+    error-feedback codec with the residual threading through
+    ``state["opt"]["grad_residual"]`` across the whole chained program —
+    the same knobs as the synchronous step.
 
     Returns ``(multi_step, state_shardings, batch_shardings, plan)``.
     """
@@ -1625,14 +1449,8 @@ def build_roundpipe_async_train_step(cfg: ModelConfig, mesh, step_cfg,
 
     if steps_per_call < 1:
         raise ValueError(f"steps_per_call must be >= 1, got {steps_per_call}")
-    if getattr(step_cfg, "pool_dtype", "none") != "none":
-        raise ValueError(
-            "async optimizer + quantized pool is not supported yet: use "
-            "the synchronous step for pool_dtype != 'none'")
-    if getattr(step_cfg, "grad_compress", "none") != "none":
-        raise ValueError(
-            "async optimizer + compressed deposits is not supported yet: "
-            "use the synchronous step for grad_compress != 'none'")
+    pool_dtype = getattr(step_cfg, "pool_dtype", "none")
+    grad_compress = getattr(step_cfg, "grad_compress", "none")
     lora = getattr(step_cfg, "lora", None)
     n = axis_size(mesh, AXIS)
     if global_batch % n:
@@ -1667,8 +1485,13 @@ def build_roundpipe_async_train_step(cfg: ModelConfig, mesh, step_cfg,
 
     plan.validate()
     plan.validate_async(rounds)
+    # the tick program the chained driver runs: hand-generated or searched
+    ticks = _select_schedule(step_cfg, plan, rounds, steps_per_call)
+    if ticks is None:
+        ticks = plan.tick_program(rounds, steps_per_call)
     # certify the chained tick order satisfies the five §4.3 constraints
-    verify_async_ticks(plan, rounds, steps_per_call)
+    # AND that the generated IR's annotations match the protocol replay
+    verify_async_ticks(plan, rounds, steps_per_call, program=ticks)
     program = None
     if getattr(step_cfg, "prefetch", True):
         program = plan.prefetch_program(
@@ -1688,13 +1511,19 @@ def build_roundpipe_async_train_step(cfg: ModelConfig, mesh, step_cfg,
         ospecs = opt_state_specs(
             trainable_leaves(pspecs, lora_mod.param_mask(pspecs)),
             step_cfg.opt)
+    if grad_compress != "none":
+        # the error-feedback residual rides the opt pytree through the whole
+        # chained program, sharded like the pool it shadows
+        ospecs = dict(ospecs, grad_residual=(
+            pspecs["lora"] if lora is not None else pspecs["layers"]))
     state_specs = {"params": pspecs, "opt": ospecs}
     body = functools.partial(
         roundpipe_async_forward_backward, cfg=cfg, plan=plan, n_workers=n,
         l_pad=l_pad, steps=steps_per_call, rounds=rounds, opt_cfg=step_cfg.opt,
         xent_chunk=step_cfg.xent_chunk, kv_chunk=step_cfg.kv_chunk,
         ring_grad_dtype=step_cfg.accum_dtype, prefetch_program=program,
-        lora=lora)
+        lora=lora, pool_dtype=pool_dtype, grad_compress=grad_compress,
+        tick_program=ticks)
 
     batch_abs = {}
     if cfg.frontend:

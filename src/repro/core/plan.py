@@ -39,7 +39,8 @@ from typing import Sequence
 
 from .partition import (LayerCost, Partition, auto_partition,
                         quant_upload_bytes)
-from .schedule import Schedule, roundpipe_schedule
+from .schedule import (Schedule, TickProgram, TickRecord,
+                       roundpipe_schedule)
 from .transfer import WindowPlan, plan_stage_transfers
 
 
@@ -283,14 +284,45 @@ class ExecutionPlan:
         only under staleness-1 parameter reads, which is what
         ``repro.core.consistency.verify_async_ticks`` certifies.
         """
+        return self.tick_program(rounds, iterations).entries
+
+    def tick_program(self, rounds: int = 1, iterations: int = 1
+                     ) -> TickProgram:
+        """Generate the per-tick schedule IR both dispatch drivers execute
+        (DESIGN.md §8): ``tick_table``'s injection order annotated with the
+        standby-upload, gradient-deposit and optimizer-update actions of
+        every tick, so the drivers contain no scheduling arithmetic of
+        their own.  ``repro.core.consistency.verify_async_ticks(...,
+        program=...)`` certifies a program's annotations against the §4.3
+        event-protocol replay before the async builder compiles it."""
         if rounds < 1:
             raise ValueError(f"rounds must be >= 1, got {rounds}")
         if iterations < 1:
             raise ValueError(f"iterations must be >= 1, got {iterations}")
         s = self.n_slots
-        live = iterations * rounds * s
-        return tuple(divmod(t, s) if t < live else None
-                     for t in range(live + self.n_workers - 1))
+        n = self.n_workers
+        rs = rounds * s
+        live = iterations * rs
+        records = []
+        for t in range(live + n - 1):
+            entry = divmod(t, s) if t < live else None
+            inject_step = entry[0] // rounds if entry is not None else None
+            if t + 1 < live:
+                nr, nslot = divmod(t + 1, s)
+                upload = (nslot, nr // rounds)
+            else:
+                upload = None
+            g = t - (n - 1)                # global stitched slot exiting now
+            deposit = None
+            update_step = None
+            if 0 <= g < live:
+                if self.stages[g % s].kind != "F":
+                    deposit = g % s
+                if (g + 1) % rs == 0:      # step g//rs fully drained: D_k
+                    update_step = g // rs
+            records.append(TickRecord(t, entry, inject_step, upload,
+                                      deposit, update_step))
+        return TickProgram(n, s, rounds, iterations, tuple(records))
 
     def validate_async(self, rounds: int = 1) -> None:
         """Raise unless cross-step chaining (``tick_table(iterations > 1)``)

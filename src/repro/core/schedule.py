@@ -317,6 +317,98 @@ def validate(schedule: Schedule) -> None:
                 raise ValueError(f"task {t.key} depends on missing {d}")
 
 
+# ---------------------------------------------------------------------------
+# Schedule IR: the per-tick program both dispatch drivers execute
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TickRecord:
+    """One tick of a generated ring program (DESIGN.md §8).
+
+    Every field is STATIC — the drivers in ``core/dispatch.py`` unroll the
+    record sequence at trace time, emitting ops only for the actions a tick
+    actually performs:
+
+    * ``entry``       — ``(global_round, slot)`` injected at worker 0 this
+                        tick, or ``None`` during the trailing drain.
+    * ``inject_step`` — which optimizer step the injection belongs to
+                        (``global_round // R``); selects the staleness-1
+                        version the async driver's gather reads (§4.3
+                        constraint 2).  ``None`` on drain ticks.
+    * ``upload``      — ``(slot, step)`` whose standby fill streams across
+                        this tick's compute windows (the double-buffered
+                        prefetch for tick ``t+1``), or ``None`` when no
+                        injection follows.
+    * ``deposit``     — slot index whose fully ring-reduced gradient wave
+                        exits at worker ``N-1`` this tick (``None`` for
+                        forward slots and ticks with nothing exiting).
+    * ``update_step`` — ``k`` when this tick is step ``k``'s
+                        deposit-complete tick ``D_k`` (the in-program
+                        optimizer update + accumulator snapshot/reset +
+                        version publish, §4.3 constraints 3/4/5);
+                        ``None`` otherwise.
+    """
+    t: int
+    entry: tuple | None
+    inject_step: int | None
+    upload: tuple | None
+    deposit: int | None
+    update_step: int | None
+
+
+@dataclasses.dataclass(frozen=True)
+class TickProgram:
+    """A generated ring program: the schedule-as-data artifact.
+
+    ``records[t]`` drives tick ``t`` of both dispatch drivers;
+    ``entries`` reproduces the legacy ``ExecutionPlan.tick_table`` tuple
+    exactly (asserted in ``tests/test_schedule_ir.py``).  The program
+    serializes losslessly to JSON so dryrun plan records can carry it.
+    """
+    n_workers: int
+    n_slots: int
+    rounds: int
+    iterations: int
+    records: tuple   # tuple[TickRecord]
+
+    @property
+    def entries(self) -> tuple:
+        return tuple(r.entry for r in self.records)
+
+    @property
+    def live(self) -> int:
+        return self.iterations * self.rounds * self.n_slots
+
+    def to_json(self) -> dict:
+        return {
+            "n_workers": self.n_workers,
+            "n_slots": self.n_slots,
+            "rounds": self.rounds,
+            "iterations": self.iterations,
+            "records": [
+                [r.t,
+                 list(r.entry) if r.entry is not None else None,
+                 r.inject_step,
+                 list(r.upload) if r.upload is not None else None,
+                 r.deposit,
+                 r.update_step]
+                for r in self.records],
+        }
+
+    @classmethod
+    def from_json(cls, obj: dict) -> "TickProgram":
+        records = tuple(
+            TickRecord(t,
+                       tuple(entry) if entry is not None else None,
+                       inject_step,
+                       tuple(upload) if upload is not None else None,
+                       deposit, update_step)
+            for t, entry, inject_step, upload, deposit, update_step
+            in obj["records"])
+        return cls(int(obj["n_workers"]), int(obj["n_slots"]),
+                   int(obj["rounds"]), int(obj["iterations"]), records)
+
+
 def theoretical_bubble_roundpipe(n: int, m: int, s: int) -> float:
     """Paper §3.3: N(N-1) / (M*S + N(N-1)) under uniform stage time."""
     return n * (n - 1) / (m * s + n * (n - 1))

@@ -248,7 +248,8 @@ def simulate_plan(plan, n_microbatches: int | None = None, *,
                   iterations: int = 1,
                   bandwidth: float | None = None,
                   transfer_mode: str = "prefetch",
-                  standby_cache: bool = False) -> SimResult:
+                  standby_cache: bool = False,
+                  g0: int = 0) -> SimResult:
     """Validate and simulate an :class:`~repro.core.plan.ExecutionPlan`.
 
     The schedule is generated from the *same* compiled plan the dispatch
@@ -281,12 +282,18 @@ def simulate_plan(plan, n_microbatches: int | None = None, *,
     visit to a device: a multi-round (or multi-iteration) step that can
     afford to pin the standby blocks stops re-streaming them, trading
     device memory for the up lane.  Downloads still post every visit.
+
+    ``g0`` rotates the injection start device (paper slot->worker map
+    ``(g0 + i) mod N``) — a schedule-family knob scored by
+    :func:`search_schedule`; the SPMD runtime executes the ``g0 = 0``
+    member.
     """
     from .schedule import validate
 
     plan.validate()
     sched = plan.schedule(n_microbatches or plan.n_workers,
-                          round_size=round_size, iterations=iterations)
+                          round_size=round_size, iterations=iterations,
+                          g0=g0)
     validate(sched)
     if bandwidth is None:
         return simulate(sched)
@@ -303,3 +310,113 @@ def steady_state_bubble(schedule: Schedule, iteration: int = 1) -> float:
     if not keys:
         raise ValueError(f"no tasks in iteration {iteration}")
     return res.window_bubble(keys)
+
+
+# ---------------------------------------------------------------------------
+# Schedule search (tick programs as generated artifacts, DESIGN.md §8)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ScheduleChoice:
+    """One point in the schedule family: the knobs ``simulate_plan`` scores.
+
+    ``g0`` rotates the injection start device; ``transfer_mode`` picks the
+    upload-lane policy (``"prefetch"`` = the chunked double-buffered
+    standby uploader, ``"block"`` = whole-block head-of-line gather — the
+    runtime's ``StepConfig.prefetch`` toggle); ``standby_cache`` pins slot
+    weights across repeat visits (memory-for-bandwidth, not yet executed
+    by the SPMD runtime).  ``executable`` marks the members the dispatch
+    drivers can run today: the ``g0 = 0``, no-standby-cache family whose
+    tick program ``ExecutionPlan.tick_program`` emits.
+    """
+    name: str
+    g0: int = 0
+    transfer_mode: str = "prefetch"
+    standby_cache: bool = False
+
+    @property
+    def executable(self) -> bool:
+        return self.g0 == 0 and not self.standby_cache
+
+
+@dataclasses.dataclass
+class SearchResult:
+    """Outcome of :func:`search_schedule`.
+
+    ``choice``/``bubble`` are the winning *executable* candidate and its
+    simulated bubble; ``hand_bubble`` is candidate 0 (the hand-written
+    ``tick_table`` configuration), so ``bubble <= hand_bubble`` holds by
+    construction.  ``program`` is the certified
+    :class:`~repro.core.schedule.TickProgram` the winner executes;
+    ``scored`` keeps every ``(choice, bubble)`` pair — including
+    non-executable family members — for reporting.
+    """
+    choice: ScheduleChoice
+    bubble: float
+    hand_bubble: float
+    program: object
+    scored: list
+
+
+def search_schedule(plan, n_microbatches: int | None = None, *,
+                    round_size: int | None = None, iterations: int = 1,
+                    bandwidth: float | None = None,
+                    transfer_mode: str = "prefetch",
+                    candidates: list | None = None,
+                    certify: bool = True) -> SearchResult:
+    """Search the schedule family over the existing knobs (injection
+    rotation ``g0``, upload-lane policy, standby residency), scored by
+    ``simulate_plan``'s two-resource cost when ``bandwidth`` is given
+    (compute-lane-only otherwise).
+
+    The hand-written configuration — ``g0 = 0`` with the caller's
+    ``transfer_mode`` — is always candidate 0 and is displaced only by a
+    *strictly* lower simulated bubble, so the searched schedule is never
+    worse than the hand-written ``tick_table``.  Non-executable family
+    members are scored for reporting but never win; the returned winner's
+    tick program is generated by ``plan.tick_program`` and (with
+    ``certify=True``) certified against the five §4.3 constraints by
+    ``verify_async_ticks(..., program=...)`` before the runtime sees it.
+    """
+    n = plan.n_workers
+    m = n_microbatches or n
+    rsz = round_size or n
+    if m % rsz:
+        raise ValueError(f"n_microbatches {m} not divisible by "
+                         f"round_size {rsz}")
+    rounds = m // rsz
+    if candidates is None:
+        candidates = [ScheduleChoice("hand", transfer_mode=transfer_mode)]
+        for g0 in range(1, n):
+            candidates.append(ScheduleChoice(
+                f"rot{g0}", g0=g0, transfer_mode=transfer_mode))
+        if bandwidth is not None:
+            other = "block" if transfer_mode == "prefetch" else "prefetch"
+            candidates.append(ScheduleChoice(f"lane-{other}",
+                                             transfer_mode=other))
+            candidates.append(ScheduleChoice("standby-cache",
+                                             transfer_mode=transfer_mode,
+                                             standby_cache=True))
+    if not candidates or not candidates[0].executable:
+        raise ValueError("candidate 0 must be the executable hand config")
+
+    scored = []
+    best = None
+    best_bubble = None
+    for c in candidates:
+        res = simulate_plan(plan, m, round_size=rsz, iterations=iterations,
+                            bandwidth=bandwidth,
+                            transfer_mode=c.transfer_mode,
+                            standby_cache=c.standby_cache, g0=c.g0)
+        b = res.bubble_ratio
+        scored.append((c, b))
+        if c.executable and (best is None or b < best_bubble):
+            best, best_bubble = c, b
+
+    program = plan.tick_program(rounds, iterations)
+    if certify:
+        from .consistency import verify_async_ticks
+        verify_async_ticks(plan, rounds, iterations, program=program)
+    return SearchResult(choice=best, bubble=best_bubble,
+                        hand_bubble=scored[0][1], program=program,
+                        scored=scored)

@@ -121,6 +121,22 @@ def run_cell(arch: str, shape: str, multi_pod: bool, strategy: str,
                 meta["simulated_bubble_async4"] = round(
                     simulate_plan(plan, m_micro, round_size=n_model,
                                   iterations=4).bubble_ratio, 4)
+                # the generated schedule IR this plan executes, serialized
+                # (TickProgram.to_json round-trips by construction — the
+                # property tests replay the record through from_json), plus
+                # the search layer's verdict over the schedule family
+                from repro.core.schedule import TickProgram
+                from repro.core.simulator import search_schedule
+                rounds = plan.rounds_for(m_micro)
+                meta["tick_program"] = plan.tick_program(rounds).to_json()
+                assert TickProgram.from_json(meta["tick_program"]) == \
+                    plan.tick_program(rounds)
+                sr = search_schedule(plan, m_micro, round_size=n_model)
+                meta["searched_schedule"] = {
+                    "choice": sr.choice.name,
+                    "bubble": round(sr.bubble, 4),
+                    "hand_bubble": round(sr.hand_bubble, 4),
+                }
             step, state_sh, batch_sh = build_train_step(
                 cfg, mesh, step_cfg, spec.global_batch, spec.seq_len)
             if strategy == "roundpipe":

@@ -74,6 +74,13 @@ class StepConfig:
     # codec (optim/compress.py) — the residual lives beside the Adam state
     # in ``state["opt"]["grad_residual"]``.  "none" = exact fp32 deposits.
     grad_compress: str = "none"
+    # roundpipe only: tick-program selector.  "hand" executes the canonical
+    # generated ``plan.tick_program`` (the pre-IR tick_table order);
+    # "searched" runs ``repro.core.simulator.search_schedule`` over the
+    # schedule family (injection rotation, lane policy, standby residency)
+    # and executes the certified winner — never worse than "hand" by
+    # construction (candidate 0 + strict-< replacement).
+    schedule: str = "hand"
     opt: OptConfig = dataclasses.field(default_factory=OptConfig)
 
 

@@ -55,13 +55,24 @@ def build_parser() -> argparse.ArgumentParser:
                          "(blockwise-absmax codes + fp32 scales, fused "
                          "dequant-on-upload at promote time).  Host master "
                          "weights stay full precision; int4 targets the "
-                         "frozen-base LoRA pool.  Sync steps only")
+                         "frozen-base LoRA pool.  Composes with --async-opt "
+                         "(each staleness-1 version requantizes at its "
+                         "update tick)")
     ap.add_argument("--grad-compress", default="none",
                     choices=["none", "int8"],
                     help="roundpipe only: int8 error-feedback compressed "
                          "gradient deposits (optim/compress.py); the "
-                         "residual rides in the optimizer state.  Sync "
-                         "steps only")
+                         "residual rides in the optimizer state.  Composes "
+                         "with --async-opt (the residual threads across "
+                         "the chained steps)")
+    ap.add_argument("--schedule", default="hand",
+                    choices=["hand", "searched"],
+                    help="roundpipe only: tick-program selector.  'hand' "
+                         "executes the canonical generated plan.tick_program;"
+                         " 'searched' scores the schedule family (injection "
+                         "rotation, lane policy, standby residency) with "
+                         "simulate_plan and executes the certified winner — "
+                         "never a higher simulated bubble than 'hand'")
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
     ap.add_argument("--ckpt-every", "--save-every", type=int, default=50,
@@ -146,15 +157,12 @@ def run_training(args) -> dict:
         raise SystemExit("--pool-dtype requires --strategy roundpipe")
     if args.grad_compress != "none" and args.strategy != "roundpipe":
         raise SystemExit("--grad-compress requires --strategy roundpipe")
-    if async_rp and args.pool_dtype != "none":
-        raise SystemExit(
-            "--async-opt cannot combine with --pool-dtype: the quantized "
-            "pool is synchronous-only for now — drop one of the two flags")
-    if async_rp and args.grad_compress != "none":
-        raise SystemExit(
-            "--async-opt cannot combine with --grad-compress: compressed "
-            "deposits are synchronous-only for now — drop one of the two "
-            "flags")
+    # --pool-dtype / --grad-compress compose with --async-opt: the chained
+    # program requantizes each staleness-1 version at its D_T update tick
+    # and threads the error-feedback residual across the whole chain
+    # (proven in roundpipe_subprocess.py async-quant)
+    if args.schedule != "hand" and args.strategy != "roundpipe":
+        raise SystemExit("--schedule requires --strategy roundpipe")
     if async_rp and args.async_steps < 1:
         raise SystemExit("--async-steps must be >= 1")
     if async_rp and args.steps % args.async_steps:
@@ -184,6 +192,14 @@ def run_training(args) -> dict:
         print(f"simulated bubble ratio ({r_sim} round"
               f"{'s' if r_sim != 1 else ''}, M={m_sim}): "
               f"{sim.bubble_ratio:.4f}")
+        if args.schedule == "searched":
+            from repro.core.simulator import search_schedule
+            sr = search_schedule(
+                plan, m_sim, round_size=n_model,
+                iterations=args.async_steps if async_rp else 1)
+            print(f"searched schedule: '{sr.choice.name}' over "
+                  f"{len(sr.scored)} candidates — simulated bubble "
+                  f"{sr.bubble:.4f} (hand {sr.hand_bubble:.4f})")
         if async_rp:
             sim_async = simulate_plan(plan, m_sim, round_size=n_model,
                                       iterations=args.async_steps)
@@ -216,6 +232,7 @@ def run_training(args) -> dict:
                           n_microbatches=microbatches,
                           pool_dtype=args.pool_dtype,
                           grad_compress=args.grad_compress,
+                          schedule=args.schedule,
                           opt=OptConfig(lr=args.lr))
     # round-major pipeline (DataConfig.rounds): multi-round synchronous
     # roundpipe consumes (R, G/R, ...) batches straight from the dataset —

@@ -37,6 +37,14 @@ mode:
              the dequantized and fp32 bases, and error-feedback int8
              deposits (grad_compress) must converge to the exact grads as
              the residual telescopes over repeated steps
+  async-quant — quantized pool AND compressed deposits under the cross-step
+             staleness-1 chained program (the combination the launcher
+             refused before the schedule-IR refactor): the int8 ring must
+             land on the staleness-1 oracle taken at the int8-DEQUANTIZED
+             pool (requantized in-program at every update tick), separate
+             from the staleness-0 trajectory, and grad_compress="int8"
+             must thread the error-feedback residual through
+             state["opt"]["grad_residual"] across the chain
   async-lora — cross-step staleness-1 chained program with a FROZEN base:
              the dense pool is read-only (bit-identical across the chain)
              while the adapter ring versions staleness-1; the final
@@ -79,7 +87,7 @@ LORA_CFG = None  # set in main() for mode == "lora"
 
 
 def make_plan(mode: str, cfg, n_workers: int):
-    if mode in ("prefetch", "rounds", "async", "quant"):
+    if mode in ("prefetch", "rounds", "async", "quant", "async-quant"):
         return plan_from_config(cfg, n_workers)
     if mode in ("lora", "rounds-lora", "async-lora"):
         return plan_from_config(cfg, n_workers, lora=LORA_CFG)
@@ -103,13 +111,152 @@ def make_plan(mode: str, cfg, n_workers: int):
     raise SystemExit(f"unknown mode {mode}")
 
 
+# ---------------------------------------------------------------------------
+# shared fixture builders — every mode parametrizes these instead of
+# re-implementing its own batch / adapter / state / comparison setup
+# ---------------------------------------------------------------------------
+
+def make_batch(key, cfg, b, s, steps=None):
+    """One (b, s) batch, or a stacked (steps, b, s) multi-step batch."""
+    shape = (b, s) if steps is None else (steps, b, s)
+    out = {}
+    if cfg.frontend:
+        out["embeds"] = jax.random.normal(key, shape + (cfg.d_model,),
+                                          jnp.float32)
+    else:
+        out["tokens"] = jax.random.randint(key, shape, 0, cfg.vocab_size)
+    out["labels"] = jax.random.randint(jax.random.fold_in(key, 1), shape, 0,
+                                       cfg.vocab_size)
+    return out
+
+
+def make_adapters(params):
+    """Frozen-base adapter pool, randomized away from the zero-B init so
+    BOTH factors carry nonzero gradients (zero B would make every A-grad
+    trivially zero)."""
+    from repro.models import lora as lora_mod
+    adapters = lora_mod.init_adapters(jax.random.PRNGKey(3),
+                                      params["layers"], LORA_CFG,
+                                      dtype=jnp.float32)
+    return jax.tree.map(
+        lambda a: jax.random.normal(jax.random.PRNGKey(4), a.shape, a.dtype)
+        * 0.05, adapters)
+
+
+def fresh_train_state(params, cfg, n, sh, ocfg, *, lora=False):
+    """A donation-safe padded train state: the steps donate their input, so
+    every run gets its own copy of the padded params/opt buffers.  With
+    ``lora`` the optimizer state covers the adapter leaves only."""
+    from repro.core.dispatch import pad_pool
+    from repro.optim import init_opt_state, trainable_leaves
+
+    padded = jax.tree.map(lambda x: jnp.array(x, copy=True),
+                          pad_pool(params, cfg, n))
+    if lora:
+        from repro.models import lora as lora_mod
+        opt = init_opt_state(
+            trainable_leaves(padded, lora_mod.param_mask(padded)), ocfg)
+    else:
+        opt = init_opt_state(padded, ocfg)
+    return jax.device_put({"params": padded, "opt": opt}, sh)
+
+
+def tree_items(tree):
+    return jax.tree_util.tree_flatten_with_path(tree)[0]
+
+
+def assert_trees_equal(a_tree, b_tree, msg):
+    """Per-leaf BIT equality (same paths, same bytes)."""
+    for (ka, va), (kb, vb) in zip(tree_items(a_tree), tree_items(b_tree)):
+        assert ka == kb
+        np.testing.assert_array_equal(
+            np.asarray(va), np.asarray(vb),
+            err_msg=f"{msg} at {jax.tree_util.keystr(ka)}")
+
+
+def assert_trees_close(a_tree, b_tree, msg, rtol=1e-5, atol=1e-7):
+    for (ka, va), (kb, vb) in zip(tree_items(a_tree), tree_items(b_tree)):
+        assert ka == kb
+        np.testing.assert_allclose(np.asarray(vb, np.float32),
+                                   np.asarray(va, np.float32),
+                                   rtol=rtol, atol=atol,
+                                   err_msg=f"{msg} at "
+                                           f"{jax.tree_util.keystr(ka)}")
+
+
+def worst_rel_tree(ref_tree, got_tree, label=""):
+    """max over leaves of |got - ref|_inf / |ref|_inf (the harness bar)."""
+    worst = 0.0
+    for (ka, va), (kb, vb) in zip(tree_items(ref_tree), tree_items(got_tree)):
+        assert ka == kb
+        rv = np.asarray(va, np.float32)
+        gv = np.asarray(vb, np.float32)
+        err = np.abs(gv - rv).max() / (np.abs(rv).max() + 1e-6)
+        if err > worst:
+            worst = err
+        if label and err > 5e-3:
+            print("MISMATCH", label, jax.tree_util.keystr(ka), err)
+    return worst
+
+
+def check_tick_order(plan, rounds, iterations=1):
+    """The runtime's injection order IS the round-stitched tick table, the
+    schedule generator dispatches slots in the same order, and the
+    generated TickProgram IR agrees record-for-record (and round-trips
+    through its JSON serialization)."""
+    from repro.core.schedule import TickProgram, dispatch_slot_order
+    from repro.core.schedule import validate as validate_schedule
+
+    n = plan.n_workers
+    table = plan.tick_table(rounds, iterations)
+    assert len(table) == iterations * rounds * plan.n_slots + n - 1
+    sched = plan.schedule(rounds * n, round_size=n, iterations=iterations)
+    validate_schedule(sched)
+    if iterations == 1:
+        order = dispatch_slot_order(sched, n)
+    else:
+        order = dispatch_slot_order(sched, n, rounds_per_iteration=rounds)
+    assert order == [e for e in table if e is not None], (rounds, iterations)
+    prog = plan.tick_program(rounds, iterations)
+    assert prog.entries == tuple(table)
+    assert TickProgram.from_json(prog.to_json()) == prog
+
+
+def build_grads_fn(cfg, mesh, plan, **kw):
+    """Build the grads_fn in BOTH driver shapes: the legacy-shaped call
+    (the driver generates its tick program internally) and the unified
+    ring machine handed the generated schedule IR explicitly.  On first
+    call the two must trace to the IDENTICAL jaxpr — the refactor
+    guarantee that a schedule is plan-layer data, not a second code path —
+    then the legacy-shaped jitted callable serves the mode's comparisons."""
+    m = kw.get("n_microbatches")
+    rounds = plan.rounds_for(m) if m else 1
+    legacy = build_roundpipe_grads_fn(cfg, mesh, plan, **kw)
+    explicit = build_roundpipe_grads_fn(
+        cfg, mesh, plan, tick_program=plan.tick_program(rounds), **kw)
+    jitted = jax.jit(legacy)
+    checked = []
+
+    def fn(*args):
+        if not checked:
+            ja = jax.make_jaxpr(legacy)(*args)
+            jb = jax.make_jaxpr(explicit)(*args)
+            assert str(ja) == str(jb), \
+                "explicit tick_program traced a DIFFERENT program than the " \
+                "legacy-shaped driver call"
+            checked.append(True)
+        return jitted(*args)
+
+    return fn
+
+
 def main():
     global LORA_CFG
     arch = sys.argv[1] if len(sys.argv) > 1 else "qwen3-1.7b"
     mode = sys.argv[2] if len(sys.argv) > 2 else "uniform"
     n_layers = int(sys.argv[3]) if len(sys.argv) > 3 else \
         (6 if mode == "uneven" else
-         7 if mode in ("quant", "async-lora") else 8)
+         7 if mode in ("quant", "async-lora", "async-quant") else 8)
     cfg = smoke_config(get_config(arch))
     cfg = dataclasses.replace(cfg, n_layers=n_layers, name=cfg.name + "-rp")
     n_model = 4
@@ -137,18 +284,16 @@ def main():
     if mode == "async-lora":
         run_async_lora(cfg, mesh, plan, params, b, s)
         return
-    if cfg.frontend:
-        batch = {"embeds": jax.random.normal(key, (b, s, cfg.d_model), jnp.float32)}
-    else:
-        batch = {"tokens": jax.random.randint(key, (b, s), 0, cfg.vocab_size)}
-    batch["labels"] = jax.random.randint(jax.random.fold_in(key, 1), (b, s),
-                                         0, cfg.vocab_size)
+    batch = make_batch(key, cfg, b, s)
 
     if mode == "lora":
         run_lora(cfg, mesh, plan, params, batch, b, s)
         return
     if mode == "quant":
         run_quant(cfg, mesh, plan, params, batch, b, s)
+        return
+    if mode == "async-quant":
+        run_async_quant(cfg, mesh, plan, params, b, s)
         return
 
     # ---- reference loss & grads (single program, no pipeline) ---------------
@@ -158,10 +303,10 @@ def main():
     ref_l, ref_g = jax.value_and_grad(ref_loss)(params)
 
     # ---- roundpipe ----------------------------------------------------------
-    grads_fn = build_roundpipe_grads_fn(cfg, mesh, plan, xent_chunk=8,
-                                        kv_chunk=8)
+    check_tick_order(plan, 1)
+    grads_fn = build_grads_fn(cfg, mesh, plan, xent_chunk=8, kv_chunk=8)
     with mesh:
-        rp_g, rp_loss, rp_tokens = jax.jit(grads_fn)(params, batch)
+        rp_g, rp_loss, rp_tokens = grads_fn(params, batch)
 
     if mode == "prefetch":
         # chunk_limit = 1/3 of the largest BODY layer's planned bytes: every
@@ -173,20 +318,12 @@ def main():
         program = plan.prefetch_program(chunk_limit=max(1, biggest // 3))
         n_chunks = sum(1 for t in program.uploads for cu in t if cu.row >= 0)
         assert n_chunks > plan.n_layers, "row chunk splitting did not engage"
-        pf_fn = build_roundpipe_grads_fn(cfg, mesh, plan, xent_chunk=8,
-                                         kv_chunk=8,
-                                         prefetch_program=program)
+        pf_fn = build_grads_fn(cfg, mesh, plan, xent_chunk=8, kv_chunk=8,
+                               prefetch_program=program)
         with mesh:
-            pf_g, pf_loss, _ = jax.jit(pf_fn)(params, batch)
+            pf_g, pf_loss, _ = pf_fn(params, batch)
         np.testing.assert_allclose(float(pf_loss), float(rp_loss), rtol=1e-6)
-        for (ka, va), (kb, vb) in zip(
-                jax.tree_util.tree_flatten_with_path(rp_g)[0],
-                jax.tree_util.tree_flatten_with_path(pf_g)[0]):
-            assert ka == kb
-            np.testing.assert_allclose(np.asarray(vb, np.float32),
-                                       np.asarray(va, np.float32),
-                                       rtol=1e-5, atol=1e-7,
-                                       err_msg=jax.tree_util.keystr(ka))
+        assert_trees_close(rp_g, pf_g, "prefetch vs whole-block")
         print(f"prefetch path matches whole-block "
               f"({n_chunks} row chunk uploads)")
 
@@ -199,15 +336,7 @@ def main():
     ref_map = {jax.tree_util.keystr(k): v for k, v in flat_ref}
     rp_map = {jax.tree_util.keystr(k): v for k, v in flat_rp}
     assert set(ref_map) == set(rp_map), (set(ref_map) ^ set(rp_map))
-    worst = 0.0
-    for k, rv in ref_map.items():
-        gv = np.asarray(rp_map[k], np.float32)
-        rv = np.asarray(rv, np.float32)
-        denom = np.abs(rv).max() + 1e-6
-        err = np.abs(gv - rv).max() / denom
-        worst = max(worst, err)
-        if err > 5e-3:
-            print("MISMATCH", k, err)
+    worst = worst_rel_tree(ref_g, rp_g, label="grads")
     print("worst rel grad err:", worst)
     assert worst < 5e-3, worst
     print("ROUNDPIPE_DISPATCH_OK")
@@ -220,24 +349,12 @@ def run_rounds(cfg, mesh, plan, params, s, *, lora=False):
     full-batch reference on the SAME M-micro-batch batch; R = 1 must be
     bit-identical to the legacy (no round axis) path.  ``lora`` runs the
     frozen-base variant against the merged-dense reference."""
-    from repro.core.schedule import dispatch_slot_order
-    from repro.core.schedule import validate as validate_schedule
-
     n = plan.n_workers
     b_round = 8                          # samples per round (2 per worker)
     key = jax.random.PRNGKey(0)
 
-    adapters = None
-    if lora:
-        from repro.models import lora as lora_mod
-        adapters = lora_mod.init_adapters(jax.random.PRNGKey(3),
-                                          params["layers"], LORA_CFG,
-                                          dtype=jnp.float32)
-        adapters = jax.tree.map(
-            lambda a: jax.random.normal(jax.random.PRNGKey(4), a.shape,
-                                        a.dtype) * 0.05, adapters)
+    adapters = make_adapters(params) if lora else None
 
-    legacy = None                        # R=1 legacy-path grads for bit check
     for r in (1, 2, 3):
         m = r * n
         g = r * b_round
@@ -247,13 +364,9 @@ def run_rounds(cfg, mesh, plan, params, s, *, lora=False):
                                               (g, s), 0, cfg.vocab_size)}
 
         # the runtime's injection order IS the round-stitched tick table,
-        # and the schedule generator dispatches slots in the same order
-        table = plan.tick_table(r)
-        assert len(table) == r * plan.n_slots + n - 1
-        sched = plan.schedule(m, round_size=n)
-        validate_schedule(sched)
-        assert dispatch_slot_order(sched, n) == \
-            [e for e in table if e is not None], r
+        # the schedule generator dispatches slots in the same order, and
+        # the generated IR round-trips
+        check_tick_order(plan, r)
 
         if lora:
             from repro.models import lora as lora_mod
@@ -273,11 +386,11 @@ def run_rounds(cfg, mesh, plan, params, s, *, lora=False):
             ref_l, ref_g = jax.value_and_grad(ref_loss)(params)
             rp_params = params
 
-        fn = build_roundpipe_grads_fn(
+        fn = build_grads_fn(
             cfg, mesh, plan, xent_chunk=8, kv_chunk=8,
             lora=LORA_CFG if lora else None, n_microbatches=m)
         with mesh:
-            rp_g, rp_loss, rp_tokens = jax.jit(fn)(rp_params, batch)
+            rp_g, rp_loss, rp_tokens = fn(rp_params, batch)
         assert int(rp_tokens) == g * s, (int(rp_tokens), g * s)
 
         if lora:
@@ -302,13 +415,7 @@ def run_rounds(cfg, mesh, plan, params, s, *, lora=False):
                 pf_g, pf_loss, _ = jax.jit(pf_fn)(rp_params, batch)
             np.testing.assert_allclose(float(pf_loss), float(rp_loss),
                                        rtol=1e-6)
-            for (ka, va), (kb_, vb) in zip(
-                    jax.tree_util.tree_flatten_with_path(rp_g)[0],
-                    jax.tree_util.tree_flatten_with_path(pf_g)[0]):
-                assert ka == kb_
-                np.testing.assert_allclose(
-                    np.asarray(vb, np.float32), np.asarray(va, np.float32),
-                    rtol=1e-5, atol=1e-7, err_msg=jax.tree_util.keystr(ka))
+            assert_trees_close(rp_g, pf_g, "R=2 prefetch vs whole-block")
             print("R=2 prefetch path matches whole-block injection")
 
         if r == 1:
@@ -320,29 +427,13 @@ def run_rounds(cfg, mesh, plan, params, s, *, lora=False):
             with mesh:
                 lg, ll, _ = jax.jit(legacy_fn)(rp_params, batch)
             assert np.asarray(ll).tobytes() == np.asarray(rp_loss).tobytes()
-            for (ka, va), (kb_, vb) in zip(
-                    jax.tree_util.tree_flatten_with_path(lg)[0],
-                    jax.tree_util.tree_flatten_with_path(rp_g)[0]):
-                assert ka == kb_
-                np.testing.assert_array_equal(
-                    np.asarray(va), np.asarray(vb),
-                    err_msg=f"R=1 not bit-identical to legacy path at "
-                            f"{jax.tree_util.keystr(ka)}")
+            assert_trees_equal(lg, rp_g,
+                               "R=1 not bit-identical to legacy path")
             print("R=1 bit-identical to the legacy single-round path")
 
         print(f"R={r}: ref loss {float(ref_l)} rp loss {float(rp_loss)}")
         np.testing.assert_allclose(float(rp_loss), float(ref_l), rtol=1e-4)
-        worst = 0.0
-        for (ka, va), (kb_, vb) in zip(
-                jax.tree_util.tree_flatten_with_path(ref_cmp)[0],
-                jax.tree_util.tree_flatten_with_path(rp_cmp)[0]):
-            assert ka == kb_
-            rv = np.asarray(va, np.float32)
-            gv = np.asarray(vb, np.float32)
-            err = np.abs(gv - rv).max() / (np.abs(rv).max() + 1e-6)
-            worst = max(worst, err)
-            if err > 5e-3:
-                print("MISMATCH", f"R={r}", jax.tree_util.keystr(ka), err)
+        worst = worst_rel_tree(ref_cmp, rp_cmp, label=f"R={r}")
         print(f"R={r}: worst rel grad err: {worst}")
         assert worst < 5e-3, (r, worst)
     print("ROUNDPIPE_DISPATCH_OK")
@@ -366,9 +457,7 @@ def run_async(cfg, mesh, plan, params, b, s):
 
     from repro.core.consistency import reference_staleness1
     from repro.core.dispatch import (build_roundpipe_async_train_step,
-                                     build_roundpipe_train_step, pad_pool)
-    from repro.core.schedule import dispatch_slot_order
-    from repro.core.schedule import validate as validate_schedule
+                                     build_roundpipe_train_step)
     from repro.launch.steps import StepConfig
     from repro.optim import OptConfig, init_opt_state
     from repro.optim.adam import apply_updates
@@ -377,27 +466,6 @@ def run_async(cfg, mesh, plan, params, b, s):
     n = plan.n_workers
     ocfg = OptConfig(lr=1e-2)            # big enough that staleness shows
     key = jax.random.PRNGKey(7)
-
-    def fresh_state(sh):
-        """A donation-safe train state: the steps donate their input, so
-        every run gets its own copy of the padded params/opt buffers."""
-        padded = jax.tree.map(lambda x: jnp.array(x, copy=True),
-                              pad_pool(params, cfg, n))
-        return jax.device_put({"params": padded,
-                               "opt": init_opt_state(padded, ocfg)}, sh)
-
-    def leaves(tree):
-        return jax.tree_util.tree_flatten_with_path(tree)[0]
-
-    def worst_rel(a_tree, b_tree):
-        worst = 0.0
-        for (ka, va), (kb, vb) in zip(leaves(a_tree), leaves(b_tree)):
-            assert ka == kb
-            av = np.asarray(va, np.float32)
-            bv = np.asarray(vb, np.float32)
-            worst = max(worst,
-                        np.abs(av - bv).max() / (np.abs(bv).max() + 1e-6))
-        return worst
 
     # shallow plans (sf < N-1) overlap step k+1's fused work with step k's
     # drain — the regime the parity-paired accumulators exist for; the
@@ -414,14 +482,10 @@ def run_async(cfg, mesh, plan, params, b, s):
             "labels": jax.random.randint(jax.random.fold_in(kb, 1),
                                          (steps, b, s), 0, cfg.vocab_size)}
 
-        # the chained order IS the cross-step tick table, and the schedule
-        # generator dispatches it identically (iterations > 1, g0 advancing)
-        table = plan.tick_table(rounds, steps)
-        assert len(table) == steps * rounds * plan.n_slots + n - 1
-        sched = plan.schedule(m, round_size=n, iterations=steps)
-        validate_schedule(sched)
-        assert dispatch_slot_order(sched, n, rounds_per_iteration=rounds) \
-            == [e for e in table if e is not None], (rounds, steps)
+        # the chained order IS the cross-step tick table, the schedule
+        # generator dispatches it identically (iterations > 1, g0
+        # advancing), and the generated IR round-trips
+        check_tick_order(plan, rounds, iterations=steps)
 
         # ---- staleness-1 oracle (the whole net as one protocol layer) ------
         def batch_of(t):
@@ -463,16 +527,16 @@ def run_async(cfg, mesh, plan, params, b, s):
                               opt=ocfg)
         multi, state_sh, _, _ = build_roundpipe_async_train_step(
             cfg, mesh, step_cfg, b, s, steps_per_call=steps, plan=plan)
-        state0 = fresh_state(state_sh)
+        state0 = fresh_train_state(params, cfg, n, state_sh, ocfg)
         with mesh:
             state1, metrics = multi(state0, batches)
         got = {k: (jax.tree.map(lambda a: a[:cfg.n_layers], v)
                    if k == "layers" else v)
                for k, v in state1["params"].items()}
 
-        err_s1 = worst_rel(got, ref_final)
-        err_s0 = worst_rel(got, p_sync)
-        sep = worst_rel(ref_final, p_sync)
+        err_s1 = worst_rel_tree(ref_final, got)
+        err_s0 = worst_rel_tree(p_sync, got)
+        sep = worst_rel_tree(p_sync, ref_final)
         print(f"R={rounds} I={steps} prefetch={prefetch}: "
               f"err vs staleness-1 {err_s1:.2e}, vs staleness-0 {err_s0:.2e} "
               f"(oracle separation {sep:.2e})")
@@ -488,22 +552,18 @@ def run_async(cfg, mesh, plan, params, b, s):
             nool, state_sh2, _, _ = build_roundpipe_async_train_step(
                 cfg, mesh, step_cfg, b, s, steps_per_call=steps, plan=plan,
                 overlap=False)
-            s_a = fresh_state(state_sh2)
+            s_a = fresh_train_state(params, cfg, n, state_sh2, ocfg)
             with mesh:
                 s_a, m_a = nool(s_a, batches)
             sync_step, state_sh3, _, _ = build_roundpipe_train_step(
                 cfg, mesh, step_cfg, b, s, plan=plan)
-            s_b = fresh_state(state_sh3)
+            s_b = fresh_train_state(params, cfg, n, state_sh3, ocfg)
             with mesh:
                 for t in range(steps):
                     s_b, _ = sync_step(s_b, batch_of(t))
-            for (ka, va), (kb_, vb) in zip(leaves(s_a["params"]),
-                                           leaves(s_b["params"])):
-                assert ka == kb_
-                np.testing.assert_array_equal(
-                    np.asarray(va), np.asarray(vb),
-                    err_msg=f"overlap=False not bit-identical to the "
-                            f"synchronous loop at {jax.tree_util.keystr(ka)}")
+            assert_trees_equal(s_a["params"], s_b["params"],
+                               "overlap=False not bit-identical to the "
+                               "synchronous loop")
             print("overlap=False bit-identical to the synchronous PR-4 loop")
 
         # ---- threaded host worker: the five per-layer constraints ----------
@@ -518,7 +578,7 @@ def run_async(cfg, mesh, plan, params, b, s):
                 lambda p, bt: jfn(p, bt), params, ocfg,
                 [batch_of(t) for t in range(steps)], mesh=mesh)
             host_final = host.train(steps)
-            err_host = worst_rel(host_final, ref_final)
+            err_host = worst_rel_tree(ref_final, host_final)
             print(f"threaded host worker err vs staleness-1: {err_host:.2e}")
             assert err_host < 5e-3, err_host
             np.testing.assert_allclose(np.asarray(host.losses),
@@ -546,20 +606,6 @@ def _dequantize_pool(layers_tree, bits):
         out.append(flat[:, off:off + ne].reshape(l.shape).astype(l.dtype))
         off += ne
     return jax.tree_util.tree_unflatten(tdef, out)
-
-
-def _worst_rel_tree(ref_tree, got_tree, label=""):
-    worst = 0.0
-    for (ka, va), (kb, vb) in zip(
-            jax.tree_util.tree_flatten_with_path(ref_tree)[0],
-            jax.tree_util.tree_flatten_with_path(got_tree)[0]):
-        assert ka == kb
-        rv = np.asarray(va, np.float32)
-        gv = np.asarray(vb, np.float32)
-        err = np.abs(gv - rv).max() / (np.abs(rv).max() + 1e-6)
-        if err > worst:
-            worst = err
-    return worst
 
 
 def run_quant(cfg, mesh, plan, params, batch, b, s):
@@ -612,11 +658,11 @@ def run_quant(cfg, mesh, plan, params, batch, b, s):
         q_g, q_loss, q_tokens = jax.jit(qfn)(params, batch)
     assert int(q_tokens) == b * s
     np.testing.assert_allclose(float(q_loss), float(dq_l), rtol=1e-4)
-    tight = _worst_rel_tree(dq_g, q_g)
+    tight = worst_rel_tree(dq_g, q_g)
     print(f"int8 ring vs dequantized-weights reference: worst rel {tight:.2e}")
     assert tight < 5e-3, tight
     # quantization-tolerance bar vs the fp32 reference (DESIGN.md §7)
-    loose = _worst_rel_tree(fp_g, q_g)
+    loose = worst_rel_tree(fp_g, q_g)
     print(f"int8 ring vs fp32 reference: worst rel {loose:.2e} "
           f"(loss {float(q_loss):.6f} vs {float(fp_l):.6f})")
     np.testing.assert_allclose(float(q_loss), float(fp_l), rtol=5e-2)
@@ -669,7 +715,7 @@ def run_quant(cfg, mesh, plan, params, batch, b, s):
         l4_g, l4_loss, _ = jax.jit(l4fn)(dict(params, lora=adapters), batch)
     assert set(l4_g) == {"lora"}, set(l4_g)
     np.testing.assert_allclose(float(l4_loss), float(dq4_l), rtol=1e-4)
-    tight4 = _worst_rel_tree(dq4_g, l4_g["lora"])
+    tight4 = worst_rel_tree(dq4_g, l4_g["lora"])
     print(f"int4 LoRA ring vs dequantized-base reference: "
           f"worst rel {tight4:.2e}")
     assert tight4 < 5e-3, tight4
@@ -677,7 +723,7 @@ def run_quant(cfg, mesh, plan, params, batch, b, s):
     # quantize (random smoke init is the worst case — real checkpoints are
     # far smoother): the binding check is the loss bar; the adapter-grad
     # gap is printed for the record with only a sanity ceiling
-    loose4 = _worst_rel_tree(fp4_g, l4_g["lora"])
+    loose4 = worst_rel_tree(fp4_g, l4_g["lora"])
     print(f"int4 LoRA ring vs fp32-base reference: worst rel {loose4:.2e} "
           f"(loss {float(l4_loss):.6f} vs {float(fp4_l):.6f})")
     np.testing.assert_allclose(float(l4_loss), float(fp4_l), rtol=1e-1)
@@ -699,9 +745,9 @@ def run_quant(cfg, mesh, plan, params, batch, b, s):
             sums = c_g if sums is None else jax.tree.map(
                 jnp.add, sums, c_g)
             if sums is c_g:
-                first_err = _worst_rel_tree(ex_g["layers"], c_g["layers"])
+                first_err = worst_rel_tree(ex_g["layers"], c_g["layers"])
     mean_g = jax.tree.map(lambda a: a / k_steps, sums)
-    mean_err = _worst_rel_tree(ex_g["layers"], mean_g["layers"])
+    mean_err = worst_rel_tree(ex_g["layers"], mean_g["layers"])
     # forward compute is untouched: deposits happen after the loss
     assert np.asarray(c_loss).tobytes() == np.asarray(ex_loss).tobytes()
     # replicated grads never cross the down lane, so they see no codec
@@ -709,7 +755,7 @@ def run_quant(cfg, mesh, plan, params, batch, b, s):
     # program (extra residual I/O, three deposit hops, quantize ops), so
     # fusion/scheduling may reorder their independent float math by last
     # bits.  Hold them to reassociation-level tolerance, not bit equality.
-    rep_err = max(_worst_rel_tree(ex_g[k], c_g[k])
+    rep_err = max(worst_rel_tree(ex_g[k], c_g[k])
                   for k in ("embed", "final_norm"))
     assert rep_err < 1e-5, rep_err
     res_norm = float(sum(
@@ -729,10 +775,144 @@ def run_quant(cfg, mesh, plan, params, batch, b, s):
     with mesh:
         qc_g, qc_loss, _, residual = jax.jit(qc_fn)(params, batch, residual)
     assert np.asarray(qc_loss).tobytes() == np.asarray(q_loss).tobytes()
-    both = _worst_rel_tree(dq_g["layers"], qc_g["layers"])
+    both = worst_rel_tree(dq_g["layers"], qc_g["layers"])
     print(f"int8 pool + int8 deposits vs dequantized reference: "
           f"worst rel {both:.2e}")
     assert both < 1.5e-2, both
+    print("ROUNDPIPE_DISPATCH_OK")
+
+
+def run_async_quant(cfg, mesh, plan, params, b, s):
+    """Quantized pool + compressed deposits UNDER the cross-step chained
+    program (the satellite that lifts the launcher's sync-only refusal).
+
+    * int8 resident pool, staleness-1 chain: every injection dequantizes
+      the CURRENT pool version (requantized in-program at each step's
+      update tick), so the chain must land tightly on the staleness-1
+      oracle whose device grads are taken at the int8-DEQUANTIZED pool —
+      a runtime that skipped requantization (or injected the exact fp32
+      pool) would miss this bar by the quantization noise (~0.25 here)
+    * the trajectory must separate from the staleness-0 (synchronous)
+      dequantized oracle, same distinguishability bars as ``async``
+    * grad_compress="int8" threads the error-feedback residual through
+      ``state["opt"]["grad_residual"]`` ACROSS the chained steps: step-0
+      loss matches the uncompressed chain (forward untouched), the
+      returned residual is nonzero, and the final weights stay within
+      codec tolerance of the uncompressed chain
+    """
+    import functools
+
+    from repro.core.consistency import reference_staleness1
+    from repro.core.dispatch import (build_roundpipe_async_train_step,
+                                     pad_pool)
+    from repro.launch.steps import StepConfig
+    from repro.optim import OptConfig, init_opt_state
+    from repro.optim.adam import apply_updates
+
+    n = plan.n_workers
+    ocfg = OptConfig(lr=1e-2)            # big enough that staleness shows
+    rounds, steps, prefetch = 1, 3, True
+    m = rounds * n
+    q8_plan = plan_from_config(cfg, n, pool_dtype="int8")
+    check_tick_order(q8_plan, rounds, iterations=steps)
+
+    kb = jax.random.fold_in(jax.random.PRNGKey(7), 1)
+    batches = make_batch(kb, cfg, b, s, steps=steps)
+
+    def batch_of(t):
+        return jax.tree.map(lambda x: x[t], batches)
+
+    loss_of = functools.partial(T.loss_fn, cfg=cfg, remat=False,
+                                xent_chunk=8, kv_chunk=8)
+
+    def dq(p):
+        return dict(p, layers=_dequantize_pool(p["layers"], 8))
+
+    # ---- staleness-1 oracle at the dequantized pool ------------------------
+    ref_losses = []
+    opt_cell = {"opt": init_opt_state(params, ocfg)}
+
+    def device_fn(weights, t):
+        loss, grads = jax.value_and_grad(
+            lambda p: loss_of(p, batch_of(t)))(dq(weights[0]))
+        ref_losses.append(float(loss))
+        return [grads]
+
+    def optimizer_fn(opt_w, staged, t):
+        new_p, opt_cell["opt"], _ = apply_updates(
+            opt_cell["opt"], staged[0], ocfg, param_like=params)
+        return [new_p]
+
+    ref_final = reference_staleness1(1, device_fn, optimizer_fn,
+                                     [params], steps)[0]
+
+    # staleness-0 oracle (same dequantized device grads), for separation
+    p_sync, opt_sync = params, init_opt_state(params, ocfg)
+    for t in range(steps):
+        _, grads = jax.value_and_grad(
+            lambda p: loss_of(p, batch_of(t)))(dq(p_sync))
+        p_sync, opt_sync, _ = apply_updates(opt_sync, grads, ocfg,
+                                            param_like=params)
+
+    # ---- the int8-pool chained program -------------------------------------
+    step_cfg = StepConfig(strategy="roundpipe", grad_accum=1,
+                          partition=q8_plan, n_microbatches=m,
+                          prefetch=prefetch, kv_chunk=8, xent_chunk=8,
+                          pool_dtype="int8", opt=ocfg)
+    multi, state_sh, _, _ = build_roundpipe_async_train_step(
+        cfg, mesh, step_cfg, b, s, steps_per_call=steps, plan=q8_plan)
+    state0 = fresh_train_state(params, cfg, n, state_sh, ocfg)
+    with mesh:
+        state1, metrics = multi(state0, batches)
+    got = {k: (jax.tree.map(lambda a: a[:cfg.n_layers], v)
+               if k == "layers" else v)
+           for k, v in state1["params"].items()}
+
+    err_s1 = worst_rel_tree(ref_final, got)
+    err_s0 = worst_rel_tree(p_sync, got)
+    sep = worst_rel_tree(p_sync, ref_final)
+    print(f"int8 pool R={rounds} I={steps} prefetch={prefetch}: err vs "
+          f"dequantized staleness-1 {err_s1:.2e}, vs staleness-0 "
+          f"{err_s0:.2e} (oracle separation {sep:.2e})")
+    np.testing.assert_allclose(np.asarray(metrics["loss"]),
+                               np.asarray(ref_losses), rtol=1e-4)
+    assert err_s1 < 5e-3, err_s1
+    assert sep > 10 * max(err_s1, 1e-9), (sep, err_s1)
+    assert err_s0 > 5 * err_s1, (err_s0, err_s1)
+    assert int(metrics["step"]) == steps
+
+    # ---- + error-feedback compressed deposits across the chain -------------
+    step_cfg_c = dataclasses.replace(step_cfg, grad_compress="int8")
+    multi_c, state_sh_c, _, _ = build_roundpipe_async_train_step(
+        cfg, mesh, step_cfg_c, b, s, steps_per_call=steps, plan=q8_plan)
+    padded = jax.tree.map(lambda x: jnp.array(x, copy=True),
+                          pad_pool(params, cfg, n))
+    opt_c = dict(init_opt_state(padded, ocfg),
+                 grad_residual=jax.tree.map(
+                     lambda a: jnp.zeros(a.shape, jnp.float32),
+                     padded["layers"]))
+    state_c0 = jax.device_put({"params": padded, "opt": opt_c}, state_sh_c)
+    with mesh:
+        state_c1, metrics_c = multi_c(state_c0, batches)
+
+    # forward compute untouched at step 0: deposits land after the loss
+    np.testing.assert_allclose(float(np.asarray(metrics_c["loss"])[0]),
+                               float(np.asarray(metrics["loss"])[0]),
+                               rtol=1e-6)
+    res_norm = float(sum(
+        jnp.abs(l).sum() for l in jax.tree_util.tree_leaves(
+            state_c1["opt"]["grad_residual"])))
+    assert res_norm > 0.0, "error-feedback residual never accumulated"
+    got_c = {k: (jax.tree.map(lambda a: a[:cfg.n_layers], v)
+                 if k == "layers" else v)
+             for k, v in state_c1["params"].items()}
+    codec_drift = worst_rel_tree(got, got_c)
+    print(f"int8 pool + int8 deposits: final-weight drift vs uncompressed "
+          f"chain {codec_drift:.2e}, residual L1 {res_norm:.3e}")
+    assert codec_drift < 2e-2, codec_drift
+    err_c = worst_rel_tree(ref_final, got_c)
+    print(f"compressed chain err vs dequantized staleness-1: {err_c:.2e}")
+    assert err_c < 2.5e-2, err_c
     print("ROUNDPIPE_DISPATCH_OK")
 
 
@@ -752,7 +932,7 @@ def run_async_lora(cfg, mesh, plan, params, b, s):
                                      pad_pool)
     from repro.launch.steps import StepConfig
     from repro.models import lora as lora_mod
-    from repro.optim import OptConfig, init_opt_state, trainable_leaves
+    from repro.optim import OptConfig, init_opt_state
     from repro.optim.adam import apply_updates
 
     n = plan.n_workers
@@ -760,23 +940,8 @@ def run_async_lora(cfg, mesh, plan, params, b, s):
     key = jax.random.PRNGKey(7)
     lcfg = LORA_CFG
 
-    adapters = lora_mod.init_adapters(jax.random.PRNGKey(3),
-                                      params["layers"], lcfg,
-                                      dtype=jnp.float32)
-    adapters = jax.tree.map(
-        lambda a: jax.random.normal(jax.random.PRNGKey(4), a.shape, a.dtype)
-        * 0.05, adapters)
+    adapters = make_adapters(params)
     params_l = dict(params, lora=adapters)
-
-    def fresh_state(sh):
-        padded = jax.tree.map(lambda x: jnp.array(x, copy=True),
-                              pad_pool(params_l, cfg, n))
-        opt = init_opt_state(
-            trainable_leaves(padded, lora_mod.param_mask(padded)), ocfg)
-        return jax.device_put({"params": padded, "opt": opt}, sh)
-
-    def worst_rel(a_tree, b_tree):
-        return _worst_rel_tree(b_tree, a_tree)
 
     for rounds, steps, prefetch in ((1, 3, False), (2, 2, True)):
         m = rounds * n
@@ -828,7 +993,8 @@ def run_async_lora(cfg, mesh, plan, params, b, s):
                               lora=lcfg, opt=ocfg)
         multi, state_sh, _, _ = build_roundpipe_async_train_step(
             cfg, mesh, step_cfg, b, s, steps_per_call=steps, plan=plan)
-        state0 = fresh_state(state_sh)
+        state0 = fresh_train_state(params_l, cfg, n, state_sh, ocfg,
+                                   lora=True)
         with mesh:
             state1, metrics = multi(state0, batches)
 
@@ -837,21 +1003,14 @@ def run_async_lora(cfg, mesh, plan, params, b, s):
         for name in ("layers", "embed", "final_norm"):
             if name not in state1["params"]:
                 continue
-            for (ka, va), (kb_, vb) in zip(
-                    jax.tree_util.tree_flatten_with_path(p0[name])[0],
-                    jax.tree_util.tree_flatten_with_path(
-                        state1["params"][name])[0]):
-                assert ka == kb_
-                np.testing.assert_array_equal(
-                    np.asarray(va), np.asarray(vb),
-                    err_msg=f"frozen {name} mutated at "
-                            f"{jax.tree_util.keystr(ka)}")
+            assert_trees_equal(p0[name], state1["params"][name],
+                               f"frozen {name} mutated")
 
         got = jax.tree.map(lambda a: a[:cfg.n_layers],
                            state1["params"]["lora"])
-        err_s1 = worst_rel(got, ref_final)
-        err_s0 = worst_rel(got, a_sync)
-        sep = worst_rel(ref_final, a_sync)
+        err_s1 = worst_rel_tree(ref_final, got)
+        err_s0 = worst_rel_tree(a_sync, got)
+        sep = worst_rel_tree(a_sync, ref_final)
         print(f"R={rounds} I={steps} prefetch={prefetch}: adapter err vs "
               f"staleness-1 {err_s1:.2e}, vs staleness-0 {err_s0:.2e} "
               f"(oracle separation {sep:.2e})")

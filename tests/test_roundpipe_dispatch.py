@@ -117,6 +117,18 @@ def test_dispatch_quant_pool_matches_reference():
     _run("qwen3-1.7b", "quant", n_layers=7)
 
 
+def test_dispatch_async_quant_matches_staleness1():
+    """Quantized pool + compressed deposits under the chained async program
+    (the schedule-IR PR's satellite: the launcher's sync-only refusal on
+    --pool-dtype/--grad-compress is lifted): the int8 ring — requantizing
+    the pool in-program at every update tick — must land on the
+    staleness-1 oracle taken at the int8-dequantized pool, separate from
+    staleness-0, and grad_compress='int8' must thread the error-feedback
+    residual through state['opt']['grad_residual'] across the chain while
+    staying within codec tolerance of the uncompressed chain."""
+    _run("qwen3-1.7b", "async-quant", n_layers=7)
+
+
 def test_dispatch_async_lora_matches_staleness1():
     """Async + frozen-base LoRA (ISSUE 6 satellite): the dense pool never
     versions (base frozen), so only the adapter ring carries staleness-1
