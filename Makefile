@@ -1,5 +1,5 @@
 # Tier-1 verify: `make test` wraps the canonical command from ROADMAP.md.
-.PHONY: test test-fast bench-bubble bench-quant docs-check
+.PHONY: test test-fast bench-bubble bench-quant bench-goodput docs-check
 
 test:
 	PYTHONPATH=src python -m pytest -x -q
@@ -17,6 +17,11 @@ bench-bubble:
 bench-quant:
 	PYTHONPATH=src python -m benchmarks.bubble_ratio
 	PYTHONPATH=src python -m benchmarks.transfer_overlap
+
+# goodput under failures (ISSUE 10): async vs sync checkpointing over the
+# MTBF sweep, with the async-strictly-above-sync assertions per workload
+bench-goodput:
+	PYTHONPATH=src python -m benchmarks.goodput
 
 # what CI's docs job runs: relative-link checker + cli.md flag-sync tests
 docs-check:

@@ -1,0 +1,87 @@
+"""Goodput under failures: async vs sync checkpointing, MTBF sweep.
+
+For each paper workload the two-resource simulator prices one RoundPipe
+step (auto-partitioned plan, 16 micro-batches on 8 GPUs, PCIe-hidden
+prefetch — layer costs are FLOPs / device-peak, i.e. seconds), and the
+supervisor's analytic model (``runtime/supervisor.py``) converts it into
+goodput over a mean-time-between-failures sweep:
+
+    goodput = M*T / (M*T + (M/K)*C + R + (K/2)*T)
+
+with checkpoint interval K = 50 steps, replan + restore cost R priced as
+reading the state back from disk, and C the CALLER-SIDE checkpoint cost:
+the sync writer blocks for snapshot + serialization + disk, the async
+writer (``AsyncCheckpointWriter``) only for the device→host snapshot.
+C_async < C_sync whenever the state is non-empty, so async goodput is
+strictly higher on every workload at every MTBF — asserted per row.
+"""
+from __future__ import annotations
+
+from repro.core.partition import auto_partition
+from repro.core.plan import compile_plan
+from repro.core.simulator import simulate_plan
+from repro.models.config import get_config
+from repro.models.transformer import param_count
+from repro.runtime.supervisor import analytic_goodput, checkpoint_cost_model
+
+from .workloads import HOST_BW, PAPER_WORKLOADS, PCIE_BW, layer_costs
+
+N_GPUS, MICROBATCHES = 8, 16
+CKPT_EVERY = 50                  # optimizer steps between snapshots
+MTBF_SWEEP = (200, 1000, 5000)   # mean steps between failures
+DISK_BW = 2e9                    # nominal NVMe sustained write
+# optimizer state per parameter: bf16 weights + fp32 master + Adam m + v
+STATE_BYTES_PER_PARAM = 2 + 4 + 4 + 4
+
+
+def goodput_row(arch: str) -> dict:
+    layers = layer_costs(arch)
+    part = auto_partition(layers, n_devices=N_GPUS,
+                          n_microbatches=MICROBATCHES)
+    plan = compile_plan(part, layers, n_workers=N_GPUS)
+    step_s = simulate_plan(plan, MICROBATCHES, round_size=N_GPUS,
+                           bandwidth=PCIE_BW,
+                           transfer_mode="prefetch").makespan
+    state_bytes = STATE_BYTES_PER_PARAM * param_count(get_config(arch))
+    c_sync, c_async = checkpoint_cost_model(state_bytes, host_bw=HOST_BW,
+                                            disk_bw=DISK_BW)
+    replan_s = state_bytes / DISK_BW        # restore reads the state back
+    out = {"arch": arch, "step_s": step_s, "state_gb": state_bytes / 2**30,
+           "ckpt_sync_s": c_sync, "ckpt_async_s": c_async}
+    for mtbf in MTBF_SWEEP:
+        for tag, cost in (("sync", c_sync), ("async", c_async)):
+            out[f"{tag}_m{mtbf}"] = analytic_goodput(
+                step_s, mtbf_steps=mtbf, ckpt_every=CKPT_EVERY,
+                ckpt_cost_s=cost, replan_s=replan_s)
+    return out
+
+
+def rows() -> list[dict]:
+    return [goodput_row(arch) for arch in PAPER_WORKLOADS]
+
+
+def main():
+    cols = [f"{tag}_m{mtbf}" for mtbf in MTBF_SWEEP
+            for tag in ("sync", "async")]
+    print("arch,step_s,state_gb,ckpt_sync_s,ckpt_async_s," + ",".join(cols))
+    for r in rows():
+        vals = ",".join(f"{r[c]:.4f}" for c in cols)
+        print(f"{r['arch']},{r['step_s']:.3f},{r['state_gb']:.1f},"
+              f"{r['ckpt_sync_s']:.2f},{r['ckpt_async_s']:.2f},{vals}")
+        for mtbf in MTBF_SWEEP:
+            # the headline claim: moving serialization + disk off the
+            # critical path strictly improves goodput on EVERY workload at
+            # EVERY failure rate — C_async < C_sync by construction
+            assert r[f"async_m{mtbf}"] > r[f"sync_m{mtbf}"], (
+                f"{r['arch']} mtbf={mtbf}: async goodput "
+                f"{r[f'async_m{mtbf}']} not above sync "
+                f"{r[f'sync_m{mtbf}']}")
+        for tag in ("sync", "async"):
+            # rarer failures -> less replay/replan per productive second
+            chain = [r[f"{tag}_m{m}"] for m in MTBF_SWEEP]
+            assert all(b > a for a, b in zip(chain, chain[1:])), (
+                f"{r['arch']} {tag}: goodput not rising with MTBF: {chain}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,2 +1,2 @@
-from .store import (CheckpointManager, load_checkpoint, save_checkpoint,  # noqa: F401
-                    latest_step)
+from .store import (AsyncCheckpointWriter, CheckpointManager,  # noqa: F401
+                    load_checkpoint, save_checkpoint, latest_step)

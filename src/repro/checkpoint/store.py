@@ -102,6 +102,98 @@ def load_checkpoint(directory, step: int, like, *, shardings=None):
     return jax.tree_util.tree_unflatten(treedef, leaves), manifest["step"]
 
 
+class AsyncCheckpointWriter:
+    """Move checkpoint writes off the training critical path.
+
+    ``submit(step, state)`` blocks the caller only for the device→host
+    snapshot (``jax.device_get`` — mandatory anyway, and required for
+    correctness when the step donates its state buffers: the snapshot must
+    be taken before the next step overwrites them).  The serialization +
+    fsync + atomic rename then happen on a single background thread, so
+    training overlaps the slow disk half of the write.
+
+    Crash safety is inherited, not re-implemented: the writer calls the same
+    manifest-last :func:`save_checkpoint`, so a crash mid-background-write
+    leaves at worst an invisible ``.tmp-*`` directory and the PREVIOUS
+    checkpoint stays the newest restorable one.  Writes are serialized on
+    one thread in submission order — no concurrent ``_retain`` races.
+
+    Writer-thread exceptions are captured and re-raised on the next
+    ``submit()``/``wait()`` so disk-full etc. cannot fail silently.
+    ``save_fn`` is injectable for fault-injection tests.
+    """
+
+    def __init__(self, directory, *, keep: int = 3, save_fn=None):
+        import queue
+        import threading
+
+        self.directory = Path(directory)
+        self.keep = keep
+        self.save_fn = save_fn or save_checkpoint
+        self.snapshot_s = 0.0      # cumulative caller-side blocking time
+        self.submitted = 0
+        self.completed = 0
+        self._queue: "queue.Queue" = queue.Queue()
+        self._error: BaseException | None = None
+        self._thread = threading.Thread(target=self._drain, daemon=True)
+        self._thread.start()
+
+    def _drain(self):
+        while True:
+            item = self._queue.get()
+            try:
+                if item is None:
+                    return
+                step, snapshot = item
+                self.save_fn(self.directory, step, snapshot, keep=self.keep)
+                self.completed += 1
+            except BaseException as e:      # surfaced on next submit/wait
+                self._error = e
+            finally:
+                self._queue.task_done()
+
+    def _check_error(self):
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise RuntimeError("async checkpoint write failed") from err
+
+    def submit(self, step: int, state) -> float:
+        """Snapshot ``state`` to host and enqueue the write.  Returns the
+        seconds the caller was blocked (the snapshot cost — this is the
+        only part charged against goodput)."""
+        import time
+
+        self._check_error()
+        t0 = time.monotonic()
+        # np.array(copy=True): device_get is a no-copy passthrough for
+        # host-resident leaves, and the caller mutates state on the very
+        # next step — the snapshot must own its buffers
+        snapshot = jax.tree_util.tree_map(
+            lambda leaf: np.array(jax.device_get(leaf), copy=True), state)
+        dt = time.monotonic() - t0
+        self.snapshot_s += dt
+        self.submitted += 1
+        self._queue.put((step, snapshot))
+        return dt
+
+    def wait(self):
+        """Block until every submitted write has landed (or raised)."""
+        self._queue.join()
+        self._check_error()
+
+    def close(self):
+        self._queue.join()
+        self._queue.put(None)
+        self._thread.join()
+        self._check_error()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+
 class CheckpointManager:
     """Save-every-K driver with restore-or-init, used by launch/train.py."""
 

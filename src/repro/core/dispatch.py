@@ -127,6 +127,9 @@ def _check_program(program, plan, rounds: int, iterations: int):
     if program.entries != plan.tick_table(rounds, iterations):
         raise ValueError("tick program injection order does not match the "
                          "plan's round-stitched tick_table")
+    if not 0 <= program.g0 < plan.n_workers:
+        raise ValueError(f"tick program g0={program.g0} out of range for "
+                         f"{plan.n_workers} workers")
     return program
 
 
@@ -138,7 +141,7 @@ def roundpipe_forward_backward(params, batch, worker_id, grad_residual=None,
                                prefetch_program=None, lora=None,
                                rounds=None, pool_dtype: str = "none",
                                grad_compress: str = "none",
-                               tick_program=None):
+                               tick_program=None, g0: int = 0):
     """Synchronous driver: unrolls a :class:`~repro.core.schedule.TickProgram`
     over the shared :class:`~repro.core.ring.RingMachine` (source pool = the
     live pool, accumulators = the per-step family) and returns
@@ -190,16 +193,29 @@ def roundpipe_forward_backward(params, batch, worker_id, grad_residual=None,
     beside the Adam state) which is carried into the NEXT deposit of the
     same row.  With compression on, the body returns a 4-tuple ending in
     the updated residual.
+
+    ``g0`` rotates the ring's physical endpoints (injection at physical
+    worker ``g0``, drain tail at ``(g0+N-1) mod N`` — the straggler
+    mitigation, DESIGN.md §9); a supplied ``tick_program``'s own ``g0``
+    stamp takes precedence.  Gradient sums are mathematically identical
+    across rotations (every worker still sweeps every slot with its own
+    resident group); ``g0=0`` emits bit-identical programs to the legacy
+    path.
     """
     n = n_workers
     frozen = lora is not None
     multi = rounds is not None
     r_total = rounds if multi else 1
     l_total = cfg.n_layers
+    program = (_check_program(tick_program, plan, r_total, 1)
+               if tick_program is not None
+               else plan.tick_program(r_total, g0=g0))
+    g0 = program.g0                        # the IR's rotation stamp governs
     # worker id from a P(AXIS)-sharded iota input rather than axis_index —
     # the latter lowers to PartitionId, unsupported under partial-auto SPMD
-    # on older JAX (see repro.compat).
-    w = worker_id[0]
+    # on older JAX (see repro.compat).  ``w`` is the LOGICAL ring position:
+    # physical worker p sits at logical (p - g0) mod N (g0=0: identity).
+    w = worker_id[0] if g0 == 0 else (worker_id[0] - g0) % n
 
     slots = plan.stages
     sf = plan.n_fwd
@@ -212,11 +228,10 @@ def roundpipe_forward_backward(params, batch, worker_id, grad_residual=None,
     rm = RingMachine(cfg=cfg, plan=plan, n_workers=n, l_pad=l_pad,
                      worker_id=worker_id, pool_template=pool,
                      xent_chunk=xent_chunk, kv_chunk=kv_chunk,
-                     prefetch_program=prefetch_program, pool_dtype=pool_dtype)
+                     prefetch_program=prefetch_program, pool_dtype=pool_dtype,
+                     g0=g0)
     A = StepAccum                          # per-step accumulator family
     pslot = None                           # ignored by the per-step family
-    program = (_check_program(tick_program, plan, r_total, 1)
-               if tick_program is not None else plan.tick_program(r_total))
     head_w = T.lm_head_weights(params, cfg)
     tokens = batch.get("tokens")
     labels = batch["labels"]
@@ -534,7 +549,7 @@ def roundpipe_async_forward_backward(params, opt_state, batch, worker_id,
                                      prefetch_program=None, lora=None,
                                      pool_dtype: str = "none",
                                      grad_compress: str = "none",
-                                     tick_program=None):
+                                     tick_program=None, g0: int = 0):
     """Cross-step chained body (paper §4.3, DESIGN.md §6): ``steps``
     optimizer iterations executed back-to-back in ONE ring program of
     ``I*R*S + N - 1`` ticks — step ``T+1``'s round injection begins while
@@ -595,10 +610,20 @@ def roundpipe_async_forward_backward(params, opt_state, batch, worker_id,
     ``tick_program`` optionally supplies the generated schedule IR
     (validated against the plan); ``None`` generates
     ``plan.tick_program(rounds, steps)``.
+
+    ``g0`` rotates the ring's physical endpoints exactly as in the
+    synchronous driver (a supplied ``tick_program``'s stamp governs); the
+    staleness-1 protocol is rotation-invariant — versions, parity buffers
+    and D_k ticks are all logical-coordinate.
     """
     n = n_workers
     l_total = cfg.n_layers
-    w = worker_id[0]
+    program = (_check_program(tick_program, plan, rounds, steps)
+               if tick_program is not None
+               else plan.tick_program(rounds, steps, g0=g0))
+    g0 = program.g0                        # the IR's rotation stamp governs
+    # logical ring position of this physical worker (see sync driver)
+    w = worker_id[0] if g0 == 0 else (worker_id[0] - g0) % n
 
     slots = plan.stages
     sf = plan.n_fwd
@@ -673,7 +698,8 @@ def roundpipe_async_forward_backward(params, opt_state, batch, worker_id,
     rm = RingMachine(cfg=cfg, plan=plan, n_workers=n, l_pad=l_pad,
                      worker_id=worker_id, pool_template=pool,
                      xent_chunk=xent_chunk, kv_chunk=kv_chunk,
-                     prefetch_program=prefetch_program, pool_dtype=pool_dtype)
+                     prefetch_program=prefetch_program, pool_dtype=pool_dtype,
+                     g0=g0)
     # per-step accumulators are parity-PAIRED (leading dim 2, indexed by the
     # traced work-step, see ring.ParityAccum): on shallow plans (sf < N-1 or
     # S < N) a worker starts step k+1's fused/backward work before step k's
@@ -682,9 +708,6 @@ def roundpipe_async_forward_backward(params, opt_state, batch, worker_id,
     # pairing — waves exit the ring strictly in step order (step k's last
     # deposit is tick D_k, step k+1's first is D_k + 1).
     A = ParityAccum
-    program = (_check_program(tick_program, plan, rounds, steps)
-               if tick_program is not None
-               else plan.tick_program(rounds, steps))
     ring = zeros_block(pool, kmax)
     # frozen-base: the traveling gradient buffer / pool accumulator shrink
     # to ADAPTER shape and a second ring carries each slot's versioned
@@ -1090,7 +1113,8 @@ def pad_pool(params, cfg: ModelConfig, n_workers: int):
 def _build_mapped(cfg: ModelConfig, mesh, plan, *, xent_chunk: int,
                   kv_chunk: int, ring_grad_dtype, prefetch_program=None,
                   lora=None, rounds=None, pool_dtype: str = "none",
-                  grad_compress: str = "none", tick_program=None):
+                  grad_compress: str = "none", tick_program=None,
+                  g0: int = 0):
     """The shard_map'ed plan executor over PADDED params.
 
     Returns ``(mapped, l_pad, pspecs, grads_specs)`` where
@@ -1130,7 +1154,7 @@ def _build_mapped(cfg: ModelConfig, mesh, plan, *, xent_chunk: int,
         l_pad=l_pad, xent_chunk=xent_chunk, kv_chunk=kv_chunk,
         ring_grad_dtype=ring_grad_dtype, prefetch_program=prefetch_program,
         lora=lora, rounds=rounds, pool_dtype=pool_dtype,
-        grad_compress=grad_compress, tick_program=tick_program)
+        grad_compress=grad_compress, tick_program=tick_program, g0=g0)
     if lora is not None:
         grads_specs = {"lora": pspecs["lora"]}
     elif "lm_head" in abstract:
@@ -1171,7 +1195,8 @@ def build_roundpipe_grads_fn(cfg: ModelConfig, mesh, plan, *,
                              ring_grad_dtype=jnp.float32,
                              prefetch_program=None, lora=None,
                              n_microbatches=None, pool_dtype: str = "none",
-                             grad_compress: str = "none", tick_program=None):
+                             grad_compress: str = "none", tick_program=None,
+                             g0: int = 0):
     """shard_map'ed ``f(params, batch) -> (grads, loss, tokens)`` executing
     ``plan`` on UNPADDED params (reference-comparison API): pads the pool on
     the way in and slices the gradient rows back out.  ``prefetch_program``
@@ -1191,7 +1216,7 @@ def build_roundpipe_grads_fn(cfg: ModelConfig, mesh, plan, *,
         cfg, mesh, plan, xent_chunk=xent_chunk, kv_chunk=kv_chunk,
         ring_grad_dtype=ring_grad_dtype, prefetch_program=prefetch_program,
         lora=lora, rounds=rounds, pool_dtype=pool_dtype,
-        grad_compress=grad_compress, tick_program=tick_program)
+        grad_compress=grad_compress, tick_program=tick_program, g0=g0)
     n = axis_size(mesh, AXIS)
 
     def pad_rows(tree):
@@ -1229,7 +1254,8 @@ def build_roundpipe_grads_fn(cfg: ModelConfig, mesh, plan, *,
     return grads_fn
 
 
-def _select_schedule(step_cfg, plan, rounds: int, iterations: int):
+def _select_schedule(step_cfg, plan, rounds: int, iterations: int,
+                     device_scale=None):
     """Resolve ``step_cfg.schedule`` into the tick program the driver runs.
 
     ``"hand"`` (default) returns None — the driver generates the canonical
@@ -1240,7 +1266,12 @@ def _select_schedule(step_cfg, plan, rounds: int, iterations: int):
     (``_check_program`` re-validates it at trace time); the search keeps
     the hand config as candidate 0 with strict-< replacement, so the
     executed schedule's simulated bubble never exceeds the hand-written
-    table's.
+    table's.  The winner's ``g0`` stamp rides the program — a winning
+    rotation is executed, not just logged (the ring rotates its
+    permutation endpoints at trace time).
+
+    ``device_scale`` (per-device compute multipliers) re-scores the family
+    under an observed straggler — the goodput supervisor's mitigation path.
     """
     sel = getattr(step_cfg, "schedule", "hand")
     if sel == "hand":
@@ -1248,7 +1279,8 @@ def _select_schedule(step_cfg, plan, rounds: int, iterations: int):
     if sel == "searched":
         from repro.core.simulator import search_schedule
         result = search_schedule(
-            plan, rounds * plan.n_workers, iterations=iterations)
+            plan, rounds * plan.n_workers, iterations=iterations,
+            device_scale=device_scale)
         return result.program
     raise ValueError(f"unknown schedule selector {sel!r}: "
                      "expected 'hand' or 'searched'")
@@ -1315,14 +1347,20 @@ def build_roundpipe_train_step(cfg: ModelConfig, mesh, step_cfg,
     if round_major and rounds is None:
         raise ValueError("round_major=True requires the multi-round path "
                          "(set step_cfg.n_microbatches)")
-    tick_program = _select_schedule(step_cfg, plan, rounds or 1, 1)
+    tick_program = _select_schedule(
+        step_cfg, plan, rounds or 1, 1,
+        device_scale=getattr(step_cfg, "device_scale", None))
+    # rotation: the searched program's stamp governs; under "hand" the
+    # StepConfig.g0 knob (the supervisor's straggler mitigation) applies
+    g0 = tick_program.g0 if tick_program is not None \
+        else getattr(step_cfg, "g0", 0)
 
     mapped, l_pad, pspecs, _ = _build_mapped(
         cfg, mesh, plan, xent_chunk=step_cfg.xent_chunk,
         kv_chunk=step_cfg.kv_chunk, ring_grad_dtype=step_cfg.accum_dtype,
         prefetch_program=program, lora=lora, rounds=rounds,
         pool_dtype=pool_dtype, grad_compress=grad_compress,
-        tick_program=tick_program)
+        tick_program=tick_program, g0=g0)
     if lora is None:
         ospecs = opt_state_specs(pspecs, step_cfg.opt)
     else:
@@ -1486,9 +1524,13 @@ def build_roundpipe_async_train_step(cfg: ModelConfig, mesh, step_cfg,
     plan.validate()
     plan.validate_async(rounds)
     # the tick program the chained driver runs: hand-generated or searched
-    ticks = _select_schedule(step_cfg, plan, rounds, steps_per_call)
+    # (either way stamped with the rotation the ring realizes)
+    ticks = _select_schedule(
+        step_cfg, plan, rounds, steps_per_call,
+        device_scale=getattr(step_cfg, "device_scale", None))
     if ticks is None:
-        ticks = plan.tick_program(rounds, steps_per_call)
+        ticks = plan.tick_program(rounds, steps_per_call,
+                                  g0=getattr(step_cfg, "g0", 0))
     # certify the chained tick order satisfies the five §4.3 constraints
     # AND that the generated IR's annotations match the protocol replay
     verify_async_ticks(plan, rounds, steps_per_call, program=ticks)
@@ -1600,3 +1642,52 @@ def init_roundpipe_state(key, cfg: ModelConfig, step_cfg,
         opt = dict(opt, grad_residual=jax.tree.map(
             lambda a: jnp.zeros(a.shape, jnp.float32), pool))
     return {"params": params, "opt": opt}
+
+
+def reshape_pooled_state(state, cfg: ModelConfig, n_new: int):
+    """Elastic-restore transform: re-pad every pooled leaf of ``state``
+    (a checkpoint written under SOME previous worker count) to the
+    ``pool_rows(cfg, n_new)`` layout.
+
+    Only the PADDING row count depends on the worker count — the first
+    ``cfg.n_layers`` rows are the model and the padding rows are exactly
+    zero (never referenced by any slot, zero gradients, zero moments), so
+    slice-then-repad is lossless.  The writer's pool depth is inferred
+    from the tree itself (every stacked ``params['layers']`` leaf carries
+    it as its leading dim), so restoring a N=4 checkpoint onto N=3 needs
+    no out-of-band record of the old topology.  Applies to
+    ``params['layers']`` / ``params['lora']`` and every optimizer mirror
+    of them (fp32 masters, Adam moments, the error-feedback
+    ``grad_residual``), identified by tree path + a leading dim equal to
+    the old pool depth (Adafactor's factored stats that drop the pool dim
+    pass through untouched).
+
+    Operates on host or device arrays; callers re-place the result under
+    the new mesh's shardings (``jax.device_put``) afterwards.
+    """
+    pooled = {"layers", "lora", "grad_residual"}
+    rows_old = None
+    for path, leaf in jax.tree_util.tree_leaves_with_path(state):
+        names = {getattr(k, "key", None) for k in path}
+        if names & pooled and getattr(leaf, "ndim", 0) >= 1:
+            rows_old = leaf.shape[0]
+            break
+    rows_new = pool_rows(cfg, n_new)
+    if rows_old is None or rows_old == rows_new:
+        return state
+    if rows_old < cfg.n_layers:
+        raise ValueError(
+            f"pool depth {rows_old} in the restored state is smaller than "
+            f"n_layers={cfg.n_layers}: not a padded pool for this model")
+
+    def fix(path, leaf):
+        names = {getattr(k, "key", None) for k in path}
+        if not (names & pooled):
+            return leaf
+        if getattr(leaf, "ndim", 0) < 1 or leaf.shape[0] != rows_old:
+            return leaf
+        real = leaf[:cfg.n_layers]
+        return jnp.pad(real, [(0, rows_new - cfg.n_layers)]
+                       + [(0, 0)] * (real.ndim - 1))
+
+    return jax.tree_util.tree_map_with_path(fix, state)

@@ -286,19 +286,24 @@ class ExecutionPlan:
         """
         return self.tick_program(rounds, iterations).entries
 
-    def tick_program(self, rounds: int = 1, iterations: int = 1
-                     ) -> TickProgram:
+    def tick_program(self, rounds: int = 1, iterations: int = 1, *,
+                     g0: int = 0) -> TickProgram:
         """Generate the per-tick schedule IR both dispatch drivers execute
         (DESIGN.md §8): ``tick_table``'s injection order annotated with the
         standby-upload, gradient-deposit and optimizer-update actions of
         every tick, so the drivers contain no scheduling arithmetic of
         their own.  ``repro.core.consistency.verify_async_ticks(...,
         program=...)`` certifies a program's annotations against the §4.3
-        event-protocol replay before the async builder compiles it."""
+        event-protocol replay before the async builder compiles it.
+        ``g0`` stamps the injection-rotation the runtime realizes through
+        the ring's permutation endpoints; the records themselves are
+        logical-coordinate and g0-invariant."""
         if rounds < 1:
             raise ValueError(f"rounds must be >= 1, got {rounds}")
         if iterations < 1:
             raise ValueError(f"iterations must be >= 1, got {iterations}")
+        if not 0 <= g0 < self.n_workers:
+            raise ValueError(f"g0 must be in [0, {self.n_workers}), got {g0}")
         s = self.n_slots
         n = self.n_workers
         rs = rounds * s
@@ -322,7 +327,7 @@ class ExecutionPlan:
                     update_step = g // rs
             records.append(TickRecord(t, entry, inject_step, upload,
                                       deposit, update_step))
-        return TickProgram(n, s, rounds, iterations, tuple(records))
+        return TickProgram(n, s, rounds, iterations, tuple(records), g0)
 
     def validate_async(self, rounds: int = 1) -> None:
         """Raise unless cross-step chaining (``tick_table(iterations > 1)``)
@@ -625,3 +630,57 @@ def plan_from_config(cfg, n_workers: int, *,
             mem_cap_bytes=mem_cap_bytes)
     return compile_plan(partition, costs, n_workers=n_workers,
                         n_body_layers=cfg.n_layers)
+
+
+@dataclasses.dataclass(frozen=True)
+class ReplanResult:
+    """Outcome of :func:`replan_for_survivors` — everything the goodput
+    supervisor needs to rebuild a step on the smaller mesh.
+
+    ``n_microbatches`` is the adjusted ``M' = R' * N'`` (the requested M
+    rounded DOWN to a multiple of the surviving worker count, floor one
+    round); ``rounds`` is ``plan.rounds_for(M')``.  ``async_ok`` reports
+    whether cross-step chaining stays feasible at the new shape — when
+    ``R'*S' < N'-1`` the replan refuses async loudly (``async_refusal``
+    carries ``validate_async``'s message) and the caller must fall back to
+    the synchronous step (DESIGN.md §9).
+    """
+    plan: ExecutionPlan
+    n_microbatches: int
+    rounds: int
+    async_ok: bool
+    async_refusal: str | None = None
+
+
+def replan_for_survivors(cfg, n_surviving: int, *,
+                         n_microbatches: int | None = None,
+                         async_steps: int = 1,
+                         lora=None, pool_dtype: str = "none",
+                         mem_cap_bytes: float = float("inf")) -> ReplanResult:
+    """Re-derive the execution plan after losing workers (paper §3's
+    elasticity claim made operational): stages are data + a slot index, not
+    device bindings, so a dead worker is a *schedule change* — re-run the
+    cost model + auto-partitioner for the surviving ``N'``, re-derive the
+    round count, and report whether the async regime survives the shrink.
+
+    The supervisor (``repro.runtime.supervisor``) calls this on a
+    dead-worker event, then restores the newest checkpoint through the
+    elastic re-shard path onto the ``N'``-worker mesh.
+    """
+    if n_surviving < 1:
+        raise ValueError(
+            f"cannot replan for {n_surviving} surviving workers")
+    m_req = n_microbatches or n_surviving
+    m = max(n_surviving, (m_req // n_surviving) * n_surviving)
+    plan = replanned = plan_from_config(
+        cfg, n_surviving, n_microbatches=m, lora=lora,
+        pool_dtype=pool_dtype, mem_cap_bytes=mem_cap_bytes)
+    rounds = replanned.rounds_for(m)
+    async_ok, refusal = True, None
+    if async_steps > 1:
+        try:
+            plan.validate_async(rounds)
+        except ValueError as e:
+            async_ok, refusal = False, str(e)
+    return ReplanResult(plan=plan, n_microbatches=m, rounds=rounds,
+                        async_ok=async_ok, async_refusal=refusal)

@@ -52,9 +52,13 @@ from repro.optim.compress import compress_int8, decompress_int8
 AXIS = "model"
 
 
-def shift_perm(n):
-    """Open-ring permutation: worker i -> i+1, worker N-1 drops off."""
-    return [(i, (i + 1) % n) for i in range(n - 1)]
+def shift_perm(n, g0=0):
+    """Open-ring permutation: LOGICAL position i -> i+1, logical N-1 drops
+    off.  ``g0`` rotates logical onto physical workers (paper slot->worker
+    map ``(g0 + i) mod N``): physical ``(g0+i)%n -> (g0+i+1)%n``, so the
+    open edge sits between logical N-1 and logical 0 wherever they
+    physically live.  ``g0=0`` emits exactly the legacy perm list."""
+    return [((g0 + i) % n, (g0 + i + 1) % n) for i in range(n - 1)]
 
 
 def ring_add(tree_a, tree_b):
@@ -191,12 +195,23 @@ class RingMachine:
     def __init__(self, *, cfg: ModelConfig, plan, n_workers: int, l_pad: int,
                  worker_id, pool_template, xent_chunk: int = 256,
                  kv_chunk: int = 1024, prefetch_program=None,
-                 pool_dtype: str = "none"):
+                 pool_dtype: str = "none", g0: int = 0):
         self.cfg = cfg
         self.plan = plan
         self.n = n_workers
         self.per = l_pad // n_workers
         self.worker_id = worker_id
+        # g0 rotates LOGICAL ring positions onto physical workers (paper
+        # slot->worker map (g0 + i) mod N): injection enters at physical
+        # ``inj`` (logical 0), the reduced wave exits at physical ``tail``
+        # (logical N-1).  Pool ownership stays physical — the pool shards
+        # never move, only the ring's entry/exit endpoints rotate.  g0=0
+        # emits exactly the legacy perms (bit-identical programs).
+        if not 0 <= g0 < n_workers:
+            raise ValueError(f"g0 must be in [0, {n_workers}), got {g0}")
+        self.g0 = g0
+        self.inj = g0
+        self.tail = (g0 + n_workers - 1) % n_workers
         self.xent_chunk = xent_chunk
         self.kv_chunk = kv_chunk
         self.prefetch_program = prefetch_program
@@ -217,9 +232,12 @@ class RingMachine:
 
     # ---- ring hop ----------------------------------------------------------
     def shift(self, tree):
-        """One open-ring hop: every row moves worker i -> i+1 (N-1 exits)."""
+        """One open-ring hop: every row moves one logical position up the
+        ring (logical N-1 exits); ``g0`` decides where that lives
+        physically."""
         return jax.tree.map(
-            lambda a: jax.lax.ppermute(a, AXIS, shift_perm(self.n)), tree)
+            lambda a: jax.lax.ppermute(a, AXIS, shift_perm(self.n, self.g0)),
+            tree)
 
     # ---- stage compute -----------------------------------------------------
     def stage_fwd(self, block, n_active, x):
@@ -252,8 +270,9 @@ class RingMachine:
 
     # ---- dense payload codec -----------------------------------------------
     def assemble_block(self, spec, src_pool):
-        """Gather slot ``spec``'s layers from their pool owners to worker 0
-        (static plumbing).  Padding rows repeat the first layer so every
+        """Gather slot ``spec``'s layers from their pool owners to the
+        injection worker (physical ``self.inj``, logical 0 — static
+        plumbing).  Padding rows repeat the first layer so every
         ring row holds real weights (finite jacobians for the masked
         lanes).  ``src_pool`` is the parameterization point: the live pool
         (sync), a staleness-1 version entry (async), or the adapter pool
@@ -262,7 +281,7 @@ class RingMachine:
         for lid in spec.layers:
             owner, idx = divmod(lid, self.per)
             inj = jax.tree.map(lambda a: a[idx], src_pool)
-            rows.append(jax.lax.ppermute(inj, AXIS, [(owner, 0)]))
+            rows.append(jax.lax.ppermute(inj, AXIS, [(owner, self.inj)]))
         if not rows:
             return None
         rows += [rows[0]] * (self.kmax - len(rows))
@@ -294,7 +313,7 @@ class RingMachine:
                     continue
                 src = jax.lax.slice(
                     pool_leaves[i][cu.pool_row].reshape(-1), (la,), (lb,))
-                src = jax.lax.ppermute(src, AXIS, [(cu.owner, 0)])
+                src = jax.lax.ppermute(src, AXIS, [(cu.owner, self.inj)])
                 flat = stand[i].reshape(self.kmax, -1)
                 stand[i] = flat.at[cu.row, la:lb].set(src).reshape(
                     stand[i].shape)
@@ -354,11 +373,11 @@ class RingMachine:
                 lb = cu.hi * code_len // cu.parent_bytes
             if la < lb:
                 src = jax.lax.slice(q_codes[cu.pool_row], (la,), (lb,))
-                src = jax.lax.ppermute(src, AXIS, [(cu.owner, 0)])
+                src = jax.lax.ppermute(src, AXIS, [(cu.owner, self.inj)])
                 codes = codes.at[cu.row, la:lb].set(src)
             if cu.lo == 0:
                 srow = jax.lax.ppermute(q_scales[cu.pool_row], AXIS,
-                                        [(cu.owner, 0)])
+                                        [(cu.owner, self.inj)])
                 scales = scales.at[cu.row].set(srow)
         return codes, scales
 
@@ -390,20 +409,20 @@ class RingMachine:
         for lid in spec.layers:
             owner, idx = divmod(lid, self.per)
             crows.append(
-                jax.lax.ppermute(q_codes[idx], AXIS, [(owner, 0)]))
+                jax.lax.ppermute(q_codes[idx], AXIS, [(owner, self.inj)]))
             srows.append(
-                jax.lax.ppermute(q_scales[idx], AXIS, [(owner, 0)]))
+                jax.lax.ppermute(q_scales[idx], AXIS, [(owner, self.inj)]))
         crows += [crows[0]] * (self.kmax - len(crows))
         srows += [srows[0]] * (self.kmax - len(srows))
         return self.dequant_block(jnp.stack(crows), jnp.stack(srows), spec)
 
-    # ---- gradient deposits (slot exits the ring at worker N-1) -------------
+    # ---- gradient deposits (slot exits the ring at logical worker N-1) -----
     def deposit_plain(self, pool_grads, row, owner, idx):
         """Exact fp32 deposit: the fully ring-reduced row crosses the down
         lane tail -> owner and sums into the owner's accumulator row
         (successive rounds'/steps' waves ``.at[].add`` into the same row)."""
         arriving = jax.tree.map(
-            lambda a: jax.lax.ppermute(a, AXIS, [(self.n - 1, owner)]), row)
+            lambda a: jax.lax.ppermute(a, AXIS, [(self.tail, owner)]), row)
         return jax.tree.map(
             lambda pg, ar: pg.at[idx].add(ar.astype(jnp.float32)),
             pool_grads, arriving)
@@ -416,18 +435,18 @@ class RingMachine:
         the fresh residual for the next deposit into this row.  (In this
         SPMD harness the residual round-trips owner->tail->owner; the real
         system keeps it host-side at the tail — see DESIGN.md §7.)"""
-        n = self.n
+        tail = self.tail
         pg_leaves, pg_def = jax.tree_util.tree_flatten(pg_tree)
         res_leaves = jax.tree_util.tree_flatten(res_tree)[0]
         row_leaves = jax.tree_util.tree_flatten(row)[0]
         new_pg, new_res = [], []
         for pg, res, rw in zip(pg_leaves, res_leaves, row_leaves):
-            res_row = jax.lax.ppermute(res[idx], AXIS, [(owner, n - 1)])
+            res_row = jax.lax.ppermute(res[idx], AXIS, [(owner, tail)])
             codes, cscale, fresh = compress_int8(
                 rw.astype(jnp.float32), res_row)
-            codes = jax.lax.ppermute(codes, AXIS, [(n - 1, owner)])
-            cscale = jax.lax.ppermute(cscale, AXIS, [(n - 1, owner)])
-            fresh = jax.lax.ppermute(fresh, AXIS, [(n - 1, owner)])
+            codes = jax.lax.ppermute(codes, AXIS, [(tail, owner)])
+            cscale = jax.lax.ppermute(cscale, AXIS, [(tail, owner)])
+            fresh = jax.lax.ppermute(fresh, AXIS, [(tail, owner)])
             deq = decompress_int8(codes, cscale, rw.shape)
             new_pg.append(pg.at[idx].add(deq))
             # every worker runs this SPMD block, but the ppermute delivers

@@ -364,12 +364,21 @@ class TickProgram:
     ``entries`` reproduces the legacy ``ExecutionPlan.tick_table`` tuple
     exactly (asserted in ``tests/test_schedule_ir.py``).  The program
     serializes losslessly to JSON so dryrun plan records can carry it.
+
+    ``g0`` rotates the ring's physical endpoints (paper slot->worker map
+    ``(g0 + i) mod N``): injection enters at physical worker ``g0`` and the
+    reduced wave exits at physical ``(g0 + N - 1) mod N``.  The records are
+    written in LOGICAL coordinates (entry at logical 0, deposit at logical
+    N-1) and are therefore g0-invariant — the drivers realize the rotation
+    through :class:`repro.core.ring.RingMachine`'s permutation endpoints,
+    so the straggler-rotation mitigation is a recompile, not a new IR.
     """
     n_workers: int
     n_slots: int
     rounds: int
     iterations: int
     records: tuple   # tuple[TickRecord]
+    g0: int = 0
 
     @property
     def entries(self) -> tuple:
@@ -385,6 +394,7 @@ class TickProgram:
             "n_slots": self.n_slots,
             "rounds": self.rounds,
             "iterations": self.iterations,
+            "g0": self.g0,
             "records": [
                 [r.t,
                  list(r.entry) if r.entry is not None else None,
@@ -406,7 +416,8 @@ class TickProgram:
             for t, entry, inject_step, upload, deposit, update_step
             in obj["records"])
         return cls(int(obj["n_workers"]), int(obj["n_slots"]),
-                   int(obj["rounds"]), int(obj["iterations"]), records)
+                   int(obj["rounds"]), int(obj["iterations"]), records,
+                   int(obj.get("g0", 0)))
 
 
 def theoretical_bubble_roundpipe(n: int, m: int, s: int) -> float:

@@ -112,7 +112,8 @@ def _list_schedule(schedule: Schedule, stage_bytes=None, *,
                    bandwidth: float = 0.0,
                    transfer_mode: str = "prefetch",
                    download_bytes=None,
-                   standby_cache: bool = False) -> SimResult:
+                   standby_cache: bool = False,
+                   device_scale=None) -> SimResult:
     """List-schedule the tasks: fixed per-device order, dep-gated start times.
 
     With ``stage_bytes`` and ``bandwidth``, the first task of every
@@ -123,7 +124,10 @@ def _list_schedule(schedule: Schedule, stage_bytes=None, *,
     models a device that pins each slot's weights after the first visit:
     repeat visits of a stage already seen on that device charge zero upload
     bytes (the memory-for-bandwidth trade a multi-round step can make when
-    the standby buffers fit residency).
+    the standby buffers fit residency).  ``device_scale[d]`` multiplies
+    every compute duration on device ``d`` — the straggler model the
+    goodput supervisor scores ``g0`` rotations against (a 5x-slowed worker
+    is ``scale=5.0`` on that device, 1.0 elsewhere).
 
     ``download_bytes[slot]`` adds the return direction on the same link:
     a slot visit's gradient bytes occupy the lane after the visit produces
@@ -197,7 +201,8 @@ def _list_schedule(schedule: Schedule, stage_bytes=None, *,
                     group_open[d] = begin
                     resident[d].add(t.stage)
                 start[t.key] = begin
-                finish[t.key] = begin + t.duration
+                scale = device_scale[d] if device_scale is not None else 1.0
+                finish[t.key] = begin + t.duration * scale
                 dev_of[t.key] = d
                 dev_free[d] = finish[t.key]
                 ptr[d] += 1
@@ -212,20 +217,22 @@ def _list_schedule(schedule: Schedule, stage_bytes=None, *,
     makespan = max(finish.values(), default=0.0)
     busy = [0.0] * schedule.n_devices
     for t in schedule.tasks:
-        busy[t.device] += t.duration
+        busy[t.device] += t.duration * (
+            device_scale[t.device] if device_scale is not None else 1.0)
     return SimResult(makespan, busy, finish, start, schedule.n_devices,
                      dev_of, transfer_busy, transfer_stall, download_busy)
 
 
-def simulate(schedule: Schedule) -> SimResult:
+def simulate(schedule: Schedule, *, device_scale=None) -> SimResult:
     """Compute-lane-only simulation (transfers assumed free)."""
-    return _list_schedule(schedule)
+    return _list_schedule(schedule, device_scale=device_scale)
 
 
 def simulate_transfers(schedule: Schedule, stage_bytes, *, bandwidth: float,
                        transfer_mode: str = "prefetch",
                        download_bytes=None,
-                       standby_cache: bool = False) -> SimResult:
+                       standby_cache: bool = False,
+                       device_scale=None) -> SimResult:
     """Two-resource simulation: ``stage_bytes[slot]`` weight bytes must cross
     a per-device link of ``bandwidth`` bytes/time-unit before each slot visit
     (see module docstring for the block/prefetch lane policies).
@@ -240,7 +247,8 @@ def simulate_transfers(schedule: Schedule, stage_bytes, *, bandwidth: float,
     return _list_schedule(schedule, stage_bytes, bandwidth=bandwidth,
                           transfer_mode=transfer_mode,
                           download_bytes=download_bytes,
-                          standby_cache=standby_cache)
+                          standby_cache=standby_cache,
+                          device_scale=device_scale)
 
 
 def simulate_plan(plan, n_microbatches: int | None = None, *,
@@ -249,7 +257,8 @@ def simulate_plan(plan, n_microbatches: int | None = None, *,
                   bandwidth: float | None = None,
                   transfer_mode: str = "prefetch",
                   standby_cache: bool = False,
-                  g0: int = 0) -> SimResult:
+                  g0: int = 0,
+                  device_scale=None) -> SimResult:
     """Validate and simulate an :class:`~repro.core.plan.ExecutionPlan`.
 
     The schedule is generated from the *same* compiled plan the dispatch
@@ -285,8 +294,14 @@ def simulate_plan(plan, n_microbatches: int | None = None, *,
 
     ``g0`` rotates the injection start device (paper slot->worker map
     ``(g0 + i) mod N``) — a schedule-family knob scored by
-    :func:`search_schedule`; the SPMD runtime executes the ``g0 = 0``
-    member.
+    :func:`search_schedule` and realized by the SPMD runtime through the
+    ring's rotated permutation endpoints (``RingMachine(g0=...)``), so a
+    scored rotation is directly executable.
+
+    ``device_scale[d]`` multiplies every compute duration on device ``d``
+    (straggler model): the goodput supervisor re-scores the rotation family
+    under the observed slowdown to pick the ``g0`` that hides the slow
+    worker best.
     """
     from .schedule import validate
 
@@ -296,11 +311,12 @@ def simulate_plan(plan, n_microbatches: int | None = None, *,
                           g0=g0)
     validate(sched)
     if bandwidth is None:
-        return simulate(sched)
+        return simulate(sched, device_scale=device_scale)
     return simulate_transfers(sched, plan.stage_bytes, bandwidth=bandwidth,
                               transfer_mode=transfer_mode,
                               download_bytes=plan.stage_download_bytes,
-                              standby_cache=standby_cache)
+                              standby_cache=standby_cache,
+                              device_scale=device_scale)
 
 
 def steady_state_bubble(schedule: Schedule, iteration: int = 1) -> float:
@@ -320,14 +336,15 @@ def steady_state_bubble(schedule: Schedule, iteration: int = 1) -> float:
 class ScheduleChoice:
     """One point in the schedule family: the knobs ``simulate_plan`` scores.
 
-    ``g0`` rotates the injection start device; ``transfer_mode`` picks the
-    upload-lane policy (``"prefetch"`` = the chunked double-buffered
-    standby uploader, ``"block"`` = whole-block head-of-line gather — the
-    runtime's ``StepConfig.prefetch`` toggle); ``standby_cache`` pins slot
-    weights across repeat visits (memory-for-bandwidth, not yet executed
-    by the SPMD runtime).  ``executable`` marks the members the dispatch
-    drivers can run today: the ``g0 = 0``, no-standby-cache family whose
-    tick program ``ExecutionPlan.tick_program`` emits.
+    ``g0`` rotates the injection start device — realized by the runtime
+    through :class:`repro.core.ring.RingMachine`'s rotated permutation
+    endpoints, so every rotation member is executable; ``transfer_mode``
+    picks the upload-lane policy (``"prefetch"`` = the chunked
+    double-buffered standby uploader, ``"block"`` = whole-block
+    head-of-line gather — the runtime's ``StepConfig.prefetch`` toggle);
+    ``standby_cache`` pins slot weights across repeat visits
+    (memory-for-bandwidth, not yet executed by the SPMD runtime — still
+    the only non-executable knob).
     """
     name: str
     g0: int = 0
@@ -336,7 +353,7 @@ class ScheduleChoice:
 
     @property
     def executable(self) -> bool:
-        return self.g0 == 0 and not self.standby_cache
+        return not self.standby_cache
 
 
 @dataclasses.dataclass
@@ -363,7 +380,8 @@ def search_schedule(plan, n_microbatches: int | None = None, *,
                     bandwidth: float | None = None,
                     transfer_mode: str = "prefetch",
                     candidates: list | None = None,
-                    certify: bool = True) -> SearchResult:
+                    certify: bool = True,
+                    device_scale=None) -> SearchResult:
     """Search the schedule family over the existing knobs (injection
     rotation ``g0``, upload-lane policy, standby residency), scored by
     ``simulate_plan``'s two-resource cost when ``bandwidth`` is given
@@ -374,9 +392,14 @@ def search_schedule(plan, n_microbatches: int | None = None, *,
     *strictly* lower simulated bubble, so the searched schedule is never
     worse than the hand-written ``tick_table``.  Non-executable family
     members are scored for reporting but never win; the returned winner's
-    tick program is generated by ``plan.tick_program`` and (with
-    ``certify=True``) certified against the five §4.3 constraints by
+    tick program is generated by ``plan.tick_program`` (stamped with the
+    winner's ``g0`` — the ring realizes the rotation at trace time) and
+    (with ``certify=True``) certified against the five §4.3 constraints by
     ``verify_async_ticks(..., program=...)`` before the runtime sees it.
+
+    ``device_scale`` threads the straggler model into every candidate's
+    score: the goodput supervisor calls this with the observed slowdown
+    to pick the rotation that advances injection past the slow device.
     """
     n = plan.n_workers
     m = n_microbatches or n
@@ -407,13 +430,14 @@ def search_schedule(plan, n_microbatches: int | None = None, *,
         res = simulate_plan(plan, m, round_size=rsz, iterations=iterations,
                             bandwidth=bandwidth,
                             transfer_mode=c.transfer_mode,
-                            standby_cache=c.standby_cache, g0=c.g0)
+                            standby_cache=c.standby_cache, g0=c.g0,
+                            device_scale=device_scale)
         b = res.bubble_ratio
         scored.append((c, b))
         if c.executable and (best is None or b < best_bubble):
             best, best_bubble = c, b
 
-    program = plan.tick_program(rounds, iterations)
+    program = plan.tick_program(rounds, iterations, g0=best.g0)
     if certify:
         from .consistency import verify_async_ticks
         verify_async_ticks(plan, rounds, iterations, program=program)

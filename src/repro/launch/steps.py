@@ -81,6 +81,15 @@ class StepConfig:
     # and executes the certified winner — never worse than "hand" by
     # construction (candidate 0 + strict-< replacement).
     schedule: str = "hand"
+    # roundpipe only: injection rotation (paper slot->worker map
+    # ``(g0 + i) mod N``), realized by the ring's rotated permutation
+    # endpoints.  The goodput supervisor sets this to advance injection
+    # past a straggler (re-scored via ``search_schedule(device_scale=...)``)
+    # — under ``schedule="searched"`` the searched winner's stamp governs.
+    g0: int = 0
+    # roundpipe only: per-device compute multipliers threaded into the
+    # "searched" scoring (observed straggler model); None = homogeneous.
+    device_scale: Any = None
     opt: OptConfig = dataclasses.field(default_factory=OptConfig)
 
 

@@ -94,6 +94,26 @@ def build_parser() -> argparse.ArgumentParser:
                          "chained per program call (the I of the "
                          "(N-1)/(I*R*S+N-1) cross-step bubble); must "
                          "divide --steps")
+    ap.add_argument("--elastic", action="store_true",
+                    help="roundpipe only: run under the goodput supervisor "
+                         "(runtime/supervisor.py).  A dead worker triggers a "
+                         "re-plan onto the surviving N-1 (fresh "
+                         "auto_partition, R = rounds_for(M')) and an elastic "
+                         "restore from the newest checkpoint onto the "
+                         "smaller mesh; a persistent straggler rotates the "
+                         "schedule (g0) past the slow device.  Drives the "
+                         "synchronous step (drop --async-opt)")
+    ap.add_argument("--async-ckpt", action="store_true",
+                    help="write checkpoints on a background thread: the "
+                         "training loop pays only the device→host snapshot, "
+                         "serialization + the atomic rename overlap the next "
+                         "steps.  Crash-safe via the same manifest-last "
+                         "protocol as the sync writer")
+    ap.add_argument("--straggler-factor", type=float, default=2.0,
+                    help="supervisor straggler threshold: a worker (or step) "
+                         "slower than FACTOR x the median is flagged; under "
+                         "--elastic a persistent per-worker straggler "
+                         "triggers the g0 rotation mitigation")
     ap.add_argument("--log-every", type=int, default=10)
     return ap
 
@@ -163,6 +183,19 @@ def run_training(args) -> dict:
     # (proven in roundpipe_subprocess.py async-quant)
     if args.schedule != "hand" and args.strategy != "roundpipe":
         raise SystemExit("--schedule requires --strategy roundpipe")
+    use_supervisor = args.elastic or args.async_ckpt
+    if args.elastic and args.strategy != "roundpipe":
+        raise SystemExit("--elastic requires --strategy roundpipe: elastic "
+                         "re-planning re-runs the plan compiler for the "
+                         "surviving workers")
+    if use_supervisor and args.async_opt:
+        # the supervisor tears the async chain down on every elastic replan
+        # anyway (R*S < N-1 forces the sync fallback — DESIGN.md §9), so the
+        # launcher wires it to the synchronous step only; the call-unit /
+        # optimizer-unit checkpoint interplay of the chained program does
+        # not survive a mid-run topology change
+        raise SystemExit("--elastic/--async-ckpt drive the synchronous "
+                         "step: drop --async-opt")
     if async_rp and args.async_steps < 1:
         raise SystemExit("--async-steps must be >= 1")
     if async_rp and args.steps % args.async_steps:
@@ -238,7 +271,11 @@ def run_training(args) -> dict:
     # roundpipe consumes (R, G/R, ...) batches straight from the dataset —
     # the compiled step drops its in-step reshape (sample-identical split)
     rounds_data = 0
-    if args.strategy == "roundpipe" and microbatches and not async_rp:
+    if args.strategy == "roundpipe" and microbatches and not async_rp \
+            and not use_supervisor:
+        # the supervisor keeps the flat (G, ...) contract instead: batches
+        # must be topology-independent so the deterministic replay after an
+        # elastic re-plan feeds the N-1 mesh the SAME samples per step
         rounds_data = plan.rounds_for(microbatches)
     data = SyntheticLMDataset(DataConfig(cfg.vocab_size, args.seq, args.batch,
                                          rounds=rounds_data))
@@ -247,6 +284,10 @@ def run_training(args) -> dict:
     if resumed_from is not None:
         print(f"resuming from checkpoint step {resumed_from} in "
               f"{args.ckpt_dir}")
+
+    if use_supervisor:
+        return _run_supervised(args, cfg, step_cfg, data, plan,
+                               mesh, n_data, n_model, resumed_from)
 
     with mesh:
         if async_rp:
@@ -370,6 +411,117 @@ def run_training(args) -> dict:
         print(f"done: {final} steps (all restored from checkpoint)")
     return {"state": state, "losses": losses, "steps": final,
             "resumed_from": resumed_from}
+
+
+def _run_supervised(args, cfg, step_cfg, data, plan, mesh, n_data, n_model,
+                    resumed_from) -> dict:
+    """The --elastic / --async-ckpt path: the goodput supervisor drives the
+    compiled step through a runtime factory, so a worker death rebuilds the
+    whole stack (plan, mesh, step, shardings) for the survivors and resumes
+    through the elastic restore (``reshape_pooled_state``), while a
+    persistent straggler only swaps the step for one compiled with the
+    rotated ``g0``.  Checkpoints go through the background writer when
+    ``--async-ckpt`` is set."""
+    import dataclasses
+
+    import jax
+    import numpy as np
+
+    from repro.runtime.supervisor import Supervisor, StragglerPolicy
+
+    losses = []
+
+    def make_runtime(*, n_workers, g0, use_async, replan=None):
+        del use_async          # launcher wires the synchronous step only
+        if n_workers == n_model:
+            sub_mesh, rt_plan, m = mesh, plan, step_cfg.n_microbatches
+        else:
+            devs = np.array(jax.devices()[:n_data * n_workers]).reshape(
+                n_data, n_workers)
+            sub_mesh = jax.sharding.Mesh(devs, ("data", "model"))
+            rt_plan, m = replan.plan, replan.n_microbatches
+            if args.batch % m:
+                raise SystemExit(
+                    f"elastic re-plan chose M={m} micro-batches for "
+                    f"N={n_workers} survivors but --batch {args.batch} is "
+                    f"not divisible by it: pick a global batch divisible "
+                    f"by every worker count you intend to survive on")
+        scfg = dataclasses.replace(step_cfg, partition=rt_plan,
+                                   n_microbatches=m, g0=g0)
+        with sub_mesh:
+            from repro.launch.steps import build_train_step, init_train_state
+            step, state_sh, _ = build_train_step(cfg, sub_mesh, scfg,
+                                                 args.batch, args.seq)
+            if args.strategy == "roundpipe":
+                from repro.core.dispatch import init_roundpipe_state
+                init = lambda: jax.device_put(
+                    init_roundpipe_state(jax.random.PRNGKey(0), cfg, scfg,
+                                         n_workers=n_workers), state_sh)
+            else:
+                init = lambda: jax.device_put(
+                    init_train_state(jax.random.PRNGKey(0), cfg, scfg),
+                    state_sh)
+
+        class _Runtime:
+            shardings = state_sh
+            like = jax.eval_shape(init)
+            init_state = staticmethod(init)
+            batch_for = staticmethod(data.batch)
+
+            @staticmethod
+            def step_fn(state, batch):
+                with sub_mesh:
+                    st, metrics = step(state, batch)
+                ls = np.asarray(metrics["loss"]).reshape(-1)
+                losses.extend(float(x) for x in ls)
+                return st, metrics
+
+            @staticmethod
+            def adapt_state(host_state):
+                if args.strategy == "roundpipe":
+                    from repro.core.dispatch import reshape_pooled_state
+                    host_state = reshape_pooled_state(host_state, cfg,
+                                                      n_workers)
+                return jax.device_put(host_state, state_sh)
+
+        if args.strategy == "roundpipe" and rt_plan is not None:
+            def rescore(scales):
+                # re-score the rotation family under the measured slowdown;
+                # the winner's g0 becomes the next step's injection worker
+                from repro.core.simulator import search_schedule
+                sr = search_schedule(rt_plan, m or n_workers,
+                                     round_size=n_workers,
+                                     device_scale=list(scales))
+                return sr.choice.g0
+            _Runtime.rescore = staticmethod(rescore)
+        return _Runtime()
+
+    replan_fn = None
+    if args.elastic:
+        from repro.core.plan import replan_for_survivors
+
+        def replan_fn(n_surviving):
+            return replan_for_survivors(
+                cfg, n_surviving, n_microbatches=step_cfg.n_microbatches,
+                lora=step_cfg.lora, pool_dtype=args.pool_dtype)
+
+    sup = Supervisor(make_runtime, args.ckpt_dir, n_workers=n_model,
+                     replan_fn=replan_fn,
+                     straggler=StragglerPolicy(factor=args.straggler_factor),
+                     save_every=args.ckpt_every,
+                     async_ckpt=args.async_ckpt, step_timeout_s=600.0)
+    t0 = time.time()
+    state, final = sup.run(args.steps)
+    dt = time.time() - t0
+    rep = sup.meter.report()
+    print(f"done: {final} steps in {dt:.1f}s on N={sup.n_workers}; "
+          f"goodput {rep['goodput']:.3f} "
+          f"(ckpt {rep['ckpt_s']:.2f}s replan {rep['replan_s']:.2f}s "
+          f"replay {rep['replay_s']:.2f}s); "
+          f"events={[e.kind for e in sup.events]}")
+    return {"state": state, "losses": losses, "steps": final,
+            "resumed_from": resumed_from, "goodput": rep,
+            "events": sup.events, "n_workers": sup.n_workers}
 
 
 def main() -> None:

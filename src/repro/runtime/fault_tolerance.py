@@ -33,26 +33,48 @@ class StragglerPolicy:
     min_samples: int = 5
 
 
+class StepHungError(RuntimeError):
+    """The watchdog declared the monitored step hung: no ``beat()`` arrived
+    within ``timeout_s``.  Raised INTO the driver loop (from ``beat()`` or
+    the monitor's ``__exit__``) so the checkpoint-restart path runs — the
+    module contract "timeout ⇒ raise for restart"."""
+
+
 class HeartbeatMonitor:
     """Watchdog: if ``beat()`` isn't called within ``timeout_s``, the step is
-    declared hung and ``on_timeout`` fires (default: records the event)."""
+    declared hung, ``on_timeout`` fires (default: records the event), and the
+    hang is RAISED into the monitored loop as :class:`StepHungError` — a
+    watchdog thread cannot interrupt a blocking jitted step directly, so the
+    raise happens at the first control-flow point the loop reaches:
+    the next ``beat()`` call, or the ``with`` block's exit.  Either way the
+    driver's except path restores from the newest checkpoint instead of
+    silently absorbing the hang into a slow step."""
 
     def __init__(self, timeout_s: float, on_timeout: Optional[Callable] = None):
         self.timeout_s = timeout_s
         self.on_timeout = on_timeout
         self.events: list[float] = []
+        self.hung = False
         self._last = time.monotonic()
         self._stop = threading.Event()
         self._thread: Optional[threading.Thread] = None
 
     def beat(self):
+        self._raise_if_hung()
         self._last = time.monotonic()
+
+    def _raise_if_hung(self):
+        if self.hung:
+            raise StepHungError(
+                f"step exceeded the {self.timeout_s:.1f}s heartbeat "
+                f"timeout ({len(self.events)} watchdog firing(s))")
 
     def __enter__(self):
         def watch():
             while not self._stop.wait(self.timeout_s / 4):
                 if time.monotonic() - self._last > self.timeout_s:
                     self.events.append(time.monotonic())
+                    self.hung = True
                     if self.on_timeout:
                         self.on_timeout()
                     self._last = time.monotonic()
@@ -61,9 +83,12 @@ class HeartbeatMonitor:
         self._thread.start()
         return self
 
-    def __exit__(self, *exc):
+    def __exit__(self, exc_type, *exc):
         self._stop.set()
         self._thread.join(1.0)
+        # don't mask an exception already propagating out of the block
+        if exc_type is None:
+            self._raise_if_hung()
 
 
 class FaultTolerantLoop:

@@ -50,6 +50,17 @@ mode:
              while the adapter ring versions staleness-1; the final
              adapter pool must allclose reference_staleness1 restricted to
              the adapters (and separate from the staleness-0 trajectory)
+  chaos    — the goodput supervisor driving the REAL compiled step through
+             the full detect→mitigate state machine on the uneven
+             7-layer/4-worker auto plan: a 5x-slowed worker mid-run must
+             trigger the straggler streak → schedule re-score → g0
+             rotation rebuild, a killed worker must trigger the elastic
+             re-plan to N-1 + restore from the (async-written) newest
+             checkpoint; the final params must land within the harness
+             tolerance of the UNINTERRUPTED N=4 reference trajectory
+             (deterministic replay: the replayed step's loss matches its
+             pre-fault run), and the goodput ledger must charge the
+             replay/replan overhead
   async    — cross-step staleness-1 chained program (paper §4.3) on the
              uneven 7-layer/4-worker auto plan: I optimizer steps executed
              back-to-back in ONE ring program (fill/drain paid once per
@@ -87,7 +98,8 @@ LORA_CFG = None  # set in main() for mode == "lora"
 
 
 def make_plan(mode: str, cfg, n_workers: int):
-    if mode in ("prefetch", "rounds", "async", "quant", "async-quant"):
+    if mode in ("prefetch", "rounds", "async", "quant", "async-quant",
+                "chaos"):
         return plan_from_config(cfg, n_workers)
     if mode in ("lora", "rounds-lora", "async-lora"):
         return plan_from_config(cfg, n_workers, lora=LORA_CFG)
@@ -256,7 +268,7 @@ def main():
     mode = sys.argv[2] if len(sys.argv) > 2 else "uniform"
     n_layers = int(sys.argv[3]) if len(sys.argv) > 3 else \
         (6 if mode == "uneven" else
-         7 if mode in ("quant", "async-lora", "async-quant") else 8)
+         7 if mode in ("quant", "async-lora", "async-quant", "chaos") else 8)
     cfg = smoke_config(get_config(arch))
     cfg = dataclasses.replace(cfg, n_layers=n_layers, name=cfg.name + "-rp")
     n_model = 4
@@ -277,6 +289,9 @@ def main():
     b, s = 8, 16
     if mode in ("rounds", "rounds-lora"):
         run_rounds(cfg, mesh, plan, params, s, lora=mode == "rounds-lora")
+        return
+    if mode == "chaos":
+        run_chaos(cfg, mesh, plan, params, s)
         return
     if mode == "async":
         run_async(cfg, mesh, plan, params, b, s)
@@ -436,6 +451,181 @@ def run_rounds(cfg, mesh, plan, params, s, *, lora=False):
         worst = worst_rel_tree(ref_cmp, rp_cmp, label=f"R={r}")
         print(f"R={r}: worst rel grad err: {worst}")
         assert worst < 5e-3, (r, worst)
+    print("ROUNDPIPE_DISPATCH_OK")
+
+
+def run_chaos(cfg, mesh, plan, params, s):
+    """Chaos harness for the goodput supervisor (ISSUE 10 tentpole): the
+    REAL compiled RoundPipe step driven through the full detect→mitigate
+    state machine on the uneven 7-layer/4-worker auto plan.
+
+    Injected faults: worker 2 reports 5x-slow step times from step 2 (while
+    the schedule is unrotated) — the straggler streak must re-score the
+    rotation family under the measured ``device_scale`` and rebuild the
+    step with the winning ``g0=3``; worker 1 dies at step 5 — the
+    supervisor must re-plan for the N-1=3 survivors (fresh auto partition,
+    M' floored to 3), restore the newest ASYNC-written checkpoint through
+    the elastic re-shard path onto the (2,3) mesh, and replay
+    deterministically.  Bars: the final params match the uninterrupted
+    N=4 reference trajectory within the harness tolerance, the replayed
+    step's loss matches its pre-fault value (deterministic data replay),
+    and the goodput ledger charges nonzero replay + replan overhead."""
+    import shutil
+    import tempfile
+
+    from repro.core.dispatch import (build_roundpipe_train_step,
+                                     reshape_pooled_state)
+    from repro.core.plan import replan_for_survivors
+    from repro.core.simulator import search_schedule
+    from repro.launch.steps import StepConfig
+    from repro.optim import OptConfig
+    from repro.runtime.fault_tolerance import StragglerPolicy
+    from repro.runtime.supervisor import Supervisor, WorkerFault
+
+    n0 = plan.n_workers
+    b = 12                       # divisible by M at N=4 (M=4) and N=3 (M=3)
+    n_steps = 8
+    kill_at, slow_from = 5, 2
+    ocfg = OptConfig(lr=1e-2)
+    key = jax.random.PRNGKey(11)
+    losses = {}                  # step -> [loss, ...]; replays append
+    killed = []
+    compiled = {}                # (n_workers, g0) -> built step bundle
+
+    def data_for(step):
+        return make_batch(jax.random.fold_in(key, 1000 + step), cfg, b, s)
+
+    def build(n_workers, g0, replan):
+        if (n_workers, g0) not in compiled:
+            if n_workers == n0:
+                sub_mesh, rt_plan, m = mesh, plan, n0
+            else:
+                sub_mesh = jax.sharding.Mesh(
+                    np.array(jax.devices()[:2 * n_workers]).reshape(
+                        2, n_workers), ("data", "model"))
+                rt_plan, m = replan.plan, replan.n_microbatches
+            scfg = StepConfig(strategy="roundpipe", grad_accum=1,
+                              partition=rt_plan, n_microbatches=m,
+                              kv_chunk=8, xent_chunk=8, opt=ocfg, g0=g0)
+            step, state_sh, _, _ = build_roundpipe_train_step(
+                cfg, sub_mesh, scfg, b, s, plan=rt_plan)
+            compiled[(n_workers, g0)] = (step, state_sh, rt_plan, m,
+                                         sub_mesh)
+        return compiled[(n_workers, g0)]
+
+    def make_runtime(*, n_workers, g0, use_async, replan=None):
+        del use_async
+        step_c, state_sh, rt_plan, m, sub_mesh = build(n_workers, g0, replan)
+        ticks = []               # steps THIS runtime has completed
+
+        class RT:
+            shardings = state_sh
+            like = state_sh      # loader only needs the tree structure
+
+            @staticmethod
+            def init_state():
+                return fresh_train_state(params, cfg, n_workers, state_sh,
+                                         ocfg)
+
+            @staticmethod
+            def batch_for(step):
+                return step, data_for(step)
+
+            @staticmethod
+            def step_fn(state, step_batch):
+                t, batch = step_batch
+                if t == kill_at and not killed:
+                    killed.append(t)
+                    raise WorkerFault(1, "chaos: injected device loss")
+                with sub_mesh:
+                    new_state, metrics = step_c(state, batch)
+                losses.setdefault(t, []).append(float(metrics["loss"]))
+                return new_state, metrics
+
+            @staticmethod
+            def adapt_state(host_state):
+                # elastic restore: re-pad the pool for THIS worker count,
+                # then re-place under this mesh's shardings
+                return jax.device_put(
+                    reshape_pooled_state(host_state, cfg, n_workers),
+                    state_sh)
+
+            @staticmethod
+            def worker_times(metrics):
+                ticks.append(1)
+                if n_workers == n0 and g0 == 0 and len(ticks) > slow_from:
+                    return [1.0, 1.0, 5.0, 1.0]   # worker 2 is 5x slow
+                return [1.0] * n_workers
+
+            @staticmethod
+            def rescore(scales):
+                sr = search_schedule(rt_plan, m, round_size=n_workers,
+                                     device_scale=list(scales))
+                return sr.choice.g0
+
+        return RT
+
+    ckpt_dir = tempfile.mkdtemp(prefix="chaos-ckpt-")
+    try:
+        sup = Supervisor(
+            make_runtime, ckpt_dir, n_workers=n0,
+            replan_fn=lambda n: replan_for_survivors(
+                cfg, n, n_microbatches=n0, async_steps=1),
+            straggler=StragglerPolicy(factor=2.0, min_samples=2),
+            save_every=2, async_ckpt=True, use_async=False)
+        state, end = sup.run(n_steps)
+    finally:
+        shutil.rmtree(ckpt_dir, ignore_errors=True)
+
+    assert end == n_steps and sup.n_workers == n0 - 1
+    print("events:", [(e.step, e.kind) for e in sup.events])
+
+    # straggler streak -> re-scored rotation past the slow worker
+    stragglers = sup.events_of("straggler")
+    assert stragglers and stragglers[0].detail["worker"] == 2
+    rotations = sup.events_of("rotate")
+    assert len(rotations) == 1, rotations
+    assert rotations[0].detail["g0"] == 3
+    assert rotations[0].detail["worker"] == 2
+
+    # dead worker -> elastic re-plan to the survivors + restore
+    replans = sup.events_of("replan")
+    assert len(replans) == 1 and replans[0].detail["n_workers"] == 3
+    assert replans[0].detail["n_microbatches"] == 3
+    assert replans[0].detail["async_ok"]
+    restores = sup.events_of("restore")
+    assert len(restores) == 1, restores
+    assert restores[0].detail["resumed_at"] == 4, restores
+
+    # deterministic replay: step 4 ran twice (N=4 pre-fault, N=3 replay)
+    # on the SAME (seed, step)-pure batch — the losses must agree
+    assert len(losses[4]) == 2, {t: len(v) for t, v in losses.items()}
+    np.testing.assert_allclose(losses[4][1], losses[4][0], rtol=1e-4)
+
+    # goodput ledger: overhead charged, productive time dominates
+    rep = sup.meter.report()
+    print("goodput ledger:", {k: round(v, 4) for k, v in rep.items()})
+    assert 0.0 < rep["goodput"] < 1.0, rep
+    assert rep["replay_s"] > 0.0 and rep["replan_s"] > 0.0, rep
+
+    # final params vs the UNINTERRUPTED N=4 reference trajectory: the
+    # whole chaos sequence (rotation rebuild, topology change, elastic
+    # re-pad, replay) must land on the same training trajectory
+    ref_step, ref_sh, _, _, _ = build(n0, 0, None)
+    ref_state = fresh_train_state(params, cfg, n0, ref_sh, ocfg)
+    with mesh:
+        for t in range(n_steps):
+            ref_state, _ = ref_step(ref_state, data_for(t))
+
+    def real_params(st):
+        return {k: (jax.tree.map(lambda a: a[:cfg.n_layers], v)
+                    if k == "layers" else v)
+                for k, v in st["params"].items()}
+
+    worst = worst_rel_tree(real_params(ref_state), real_params(state),
+                           label="chaos")
+    print("worst rel param err vs uninterrupted N=4 reference:", worst)
+    assert worst < 5e-3, worst
     print("ROUNDPIPE_DISPATCH_OK")
 
 

@@ -1,0 +1,179 @@
+"""Elastic checkpoint restore: save at N=4, restore at N=3, keep training.
+
+The pool depth is the ONLY topology-dependent part of the train state
+(``pool_rows`` pads the stacked layer dim to a multiple of N: 7 layers →
+8 rows at N=4, 9 at N=3) and the padding rows are exactly zero, so
+``reshape_pooled_state`` slice-then-repads losslessly.  The in-process
+cases pin that transform's contract; the subprocess case does the full
+round trip — save under (2,4) ``NamedSharding``s, restore onto a (2,3)
+mesh, continue stepping — and lands on the uninterrupted reference
+trajectory bit-for-bit (the supervisor's elastic-restore path in
+``launch/train.py`` is this sequence with the real compiled step)."""
+import dataclasses
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+N_LAYERS, D = 7, 4
+
+
+def toy_state(rows):
+    """Minimal train-state shaped tree: pooled leaves (stacked layer dim
+    first) + their optimizer mirrors + non-pooled leaves.  Row r of every
+    pooled leaf carries the layer identity r+1 so slicing mistakes show."""
+    n = min(rows, N_LAYERS)
+    lay = np.zeros((rows, D))
+    lay[:n] = 1.0 + np.arange(n)[:, None]
+    return {"params": {"embed": np.full((D,), 0.5),
+                       "layers": {"w": lay.copy()}},
+            "opt": {"m": {"embed": np.full((D,), 0.05),
+                          "layers": {"w": 0.1 * lay}},
+                    "step": np.zeros((), np.int32)}}
+
+
+class TestReshapePooledState:
+    def _cfg(self):
+        from repro.configs import smoke_config
+        from repro.models.config import get_config
+
+        return dataclasses.replace(smoke_config(get_config("qwen3-1.7b")),
+                                   n_layers=N_LAYERS)
+
+    def test_repads_n4_pool_to_n3(self):
+        from repro.core.dispatch import pool_rows, reshape_pooled_state
+
+        cfg = self._cfg()
+        assert pool_rows(cfg, 4) == 8 and pool_rows(cfg, 3) == 9
+        out = reshape_pooled_state(toy_state(8), cfg, 3)
+        for leaf in (out["params"]["layers"]["w"], out["opt"]["m"]["layers"]["w"]):
+            assert leaf.shape == (9, D)
+            np.testing.assert_array_equal(np.asarray(leaf)[N_LAYERS:], 0.0)
+        np.testing.assert_array_equal(
+            np.asarray(out["params"]["layers"]["w"])[:N_LAYERS],
+            toy_state(9)["params"]["layers"]["w"][:N_LAYERS])
+        # non-pooled leaves pass through untouched
+        np.testing.assert_array_equal(np.asarray(out["params"]["embed"]),
+                                      np.full((D,), 0.5))
+        assert out["opt"]["step"].shape == ()
+
+    def test_same_topology_is_identity(self):
+        from repro.core.dispatch import reshape_pooled_state
+
+        state = toy_state(8)
+        assert reshape_pooled_state(state, self._cfg(), 4) is state
+
+    def test_rejects_pool_shallower_than_model(self):
+        from repro.core.dispatch import reshape_pooled_state
+
+        with pytest.raises(ValueError, match="pool depth"):
+            reshape_pooled_state(toy_state(5), self._cfg(), 3)
+
+    def test_factored_stats_without_pool_dim_pass_through(self):
+        # Adafactor's row/col stats drop the pool dim: a "layers" leaf
+        # whose leading dim is NOT the pool depth must not be resliced
+        from repro.core.dispatch import reshape_pooled_state
+
+        state = toy_state(8)
+        state["opt"]["vr"] = {"layers": {"w": np.ones((D,))}}
+        out = reshape_pooled_state(state, self._cfg(), 3)
+        assert out["opt"]["vr"]["layers"]["w"].shape == (D,)
+        assert out["params"]["layers"]["w"].shape == (9, D)
+
+
+def test_save_n4_restore_n3_continues_reference_trajectory(tmp_path):
+    """Full elastic round trip in a subprocess (8 host devices): three
+    sharded steps on a (2,4) mesh, checkpoint, restore + re-pad + re-place
+    onto (2,3), two more steps — matching the uninterrupted host reference
+    exactly, with the N=3 padding rows still identically zero."""
+    body = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import dataclasses, sys
+        sys.path.insert(0, {src!r})
+        import numpy as np
+        import jax, jax.numpy as jnp
+        from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+        from repro.checkpoint.store import load_checkpoint, save_checkpoint
+        from repro.configs import smoke_config
+        from repro.core.dispatch import pool_rows, reshape_pooled_state
+        from repro.models.config import get_config
+
+        N_LAYERS, D = {n_layers}, {d}
+        cfg = dataclasses.replace(smoke_config(get_config("qwen3-1.7b")),
+                                  n_layers=N_LAYERS)
+
+        def toy_state(rows):
+            lay = np.zeros((rows, D))
+            lay[:N_LAYERS] = 1.0 + np.arange(N_LAYERS)[:, None]
+            return {{"params": {{"embed": np.full((D,), 0.5),
+                                 "layers": {{"w": lay.copy()}}}},
+                     "opt": {{"m": {{"embed": np.full((D,), 0.05),
+                                     "layers": {{"w": 0.1 * lay}}}},
+                              "step": np.zeros((), np.int32)}}}}
+
+        # element-wise update: padding rows (w == 0) stay exactly zero and
+        # the per-row trajectory is independent of sharding and pool depth
+        @jax.jit
+        def step(s):
+            w = s["params"]["layers"]["w"] * 1.01
+            m = 0.9 * s["opt"]["m"]["layers"]["w"] + 0.1 * w
+            return {{"params": {{"embed": s["params"]["embed"] + 0.01,
+                                 "layers": {{"w": w}}}},
+                     "opt": {{"m": {{"embed": s["opt"]["m"]["embed"],
+                                     "layers": {{"w": m}}}},
+                              "step": s["opt"]["step"] + 1}}}}
+
+        def shardings(mesh):
+            pool = NamedSharding(mesh, P("model"))
+            rep = NamedSharding(mesh, P())
+            return {{"params": {{"embed": rep, "layers": {{"w": pool}}}},
+                     "opt": {{"m": {{"embed": rep, "layers": {{"w": pool}}}},
+                              "step": rep}}}}
+
+        # ---- phase 1: three steps on the (2,4) mesh, checkpoint at step 2
+        mesh4 = Mesh(np.array(jax.devices()).reshape(2, 4), ("data", "model"))
+        s = jax.device_put(toy_state(pool_rows(cfg, 4)), shardings(mesh4))
+        for _ in range(3):
+            s = step(s)
+        save_checkpoint({ckpt!r}, 2, s)
+
+        # ---- phase 2: worker lost — restore onto the (2,3) survivors
+        mesh3 = Mesh(np.array(jax.devices()[:6]).reshape(2, 3),
+                     ("data", "model"))
+        host, saved = load_checkpoint({ckpt!r}, 2, toy_state(pool_rows(cfg, 4)),
+                                      shardings=None)
+        assert saved == 2
+        host = reshape_pooled_state(host, cfg, 3)
+        s = jax.device_put(host, shardings(mesh3))
+        assert s["params"]["layers"]["w"].shape == (pool_rows(cfg, 3), D)
+        assert s["params"]["layers"]["w"].sharding.is_equivalent_to(
+            NamedSharding(mesh3, P("model")), 2)
+        for _ in range(2):
+            s = step(s)
+
+        # ---- reference: five uninterrupted steps (any pool depth works)
+        ref = toy_state(pool_rows(cfg, 3))
+        for _ in range(5):
+            ref = step(ref)
+        got = jax.device_get(s)
+        for name, a, b in [
+                ("w", got["params"]["layers"]["w"],
+                 ref["params"]["layers"]["w"]),
+                ("m", got["opt"]["m"]["layers"]["w"],
+                 ref["opt"]["m"]["layers"]["w"]),
+                ("embed", got["params"]["embed"], ref["params"]["embed"])]:
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b), name)
+        assert int(got["opt"]["step"]) == 5
+        assert not np.asarray(got["params"]["layers"]["w"])[N_LAYERS:].any()
+        print("ELASTIC_RESTORE_OK")
+    """).format(src=os.path.abspath(SRC), n_layers=N_LAYERS, d=D,
+                ckpt=str(tmp_path / "ck"))
+    r = subprocess.run([sys.executable, "-c", body], capture_output=True,
+                       text=True, timeout=600)
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert "ELASTIC_RESTORE_OK" in r.stdout

@@ -129,6 +129,20 @@ def test_dispatch_async_quant_matches_staleness1():
     _run("qwen3-1.7b", "async-quant", n_layers=7)
 
 
+def test_supervisor_chaos_harness():
+    """Goodput supervisor chaos harness (ISSUE 10 tentpole): the REAL
+    compiled step driven through the full detect→mitigate state machine on
+    the uneven 7-layer/4-worker auto plan.  A 5x-slowed worker must
+    trigger the straggler streak → device_scale re-score → g0=3 rotation
+    rebuild; a killed worker must trigger the elastic re-plan to N-1=3
+    (fresh auto partition, M' floored to 3) + restore of the newest
+    async-written checkpoint onto the (2,3) mesh.  Final params must match
+    the uninterrupted N=4 reference trajectory, the replayed step's loss
+    must reproduce its pre-fault value (deterministic replay), and the
+    goodput ledger must charge nonzero replay + replan overhead."""
+    _run("qwen3-1.7b", "chaos", n_layers=7)
+
+
 def test_dispatch_async_lora_matches_staleness1():
     """Async + frozen-base LoRA (ISSUE 6 satellite): the dense pool never
     versions (base frozen), so only the adapter ring carries staleness-1

@@ -15,7 +15,8 @@ exactly its records.  These properties hold for every valid
   real ``json.dumps`` cycle, mirroring the dryrun record that embeds it;
 * the search layer never returns a schedule with a worse simulated bubble
   than the hand-written one, and only returns programs the runtime can
-  execute (g0 = 0, no standby cache).
+  execute (any g0 rotation — realized via the ring's perm endpoints — but
+  no standby cache).
 """
 import dataclasses
 import json
@@ -162,8 +163,11 @@ class TestSearchLayer:
             sr = search_schedule(plan, rounds * n, round_size=n,
                                  iterations=iters)
             # the returned program is exactly the one the drivers validate
-            # against the plan's own table (dispatch._check_program)
-            assert sr.program == plan.tick_program(rounds, iters)
+            # against the plan's own table (dispatch._check_program),
+            # stamped with the winning rotation (records are g0-invariant)
+            assert sr.program == plan.tick_program(rounds, iters,
+                                                   g0=sr.choice.g0)
+            assert sr.program.entries == plan.tick_table(rounds, iters)
             verify_async_ticks(plan, rounds, iters, program=sr.program)
 
     def test_hand_bubble_matches_simulator(self):

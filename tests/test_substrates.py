@@ -16,7 +16,7 @@ from repro.optim import (OptConfig, apply_updates, async_apply, compress_int8,
                          init_async, init_opt_state)
 from repro.optim.async_opt import flush
 from repro.runtime import FaultTolerantLoop, StragglerPolicy
-from repro.runtime.fault_tolerance import HeartbeatMonitor
+from repro.runtime.fault_tolerance import HeartbeatMonitor, StepHungError
 
 
 # ---------------------------------------------------------------------------
@@ -271,8 +271,12 @@ class TestFaultTolerantLoop:
 class TestHeartbeat:
     def test_timeout_fires(self):
         import time
-        with HeartbeatMonitor(0.1) as hb:
-            time.sleep(0.35)
+        # a hang that reaches __exit__ without any other exception must
+        # surface as StepHungError — the recorded events alone used to be
+        # silently discarded by every caller
+        with pytest.raises(StepHungError):
+            with HeartbeatMonitor(0.1) as hb:
+                time.sleep(0.35)
         assert len(hb.events) >= 1
 
     def test_beats_prevent_timeout(self):
